@@ -1,0 +1,99 @@
+"""Fig. 1 — per-word predictive probability vs documents processed,
+MVI vs SVI vs IVI vs S-IVI (paper §6.1).
+
+Acceptance criteria from the paper, checked on synthetic corpora:
+  * incremental engines (IVI, S-IVI) converge to a value ≥ the others;
+  * IVI reaches MVI's converged LPP after seeing a fraction of the
+    documents MVI processed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import LDAConfig, LDAEngine
+from repro.data import PAPER_CORPORA, make_corpus
+
+
+def run(corpus_name: str = "small", epochs: int = 6, batch: int = 32,
+        seed: int = 0) -> Dict[str, Dict[str, List[float]]]:
+    spec = PAPER_CORPORA[corpus_name]
+    train = make_corpus(spec, split="train", seed=seed)
+    test = make_corpus(spec, split="test", seed=seed)
+    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
+                    vocab_size=spec.vocab_size, estep_max_iters=60)
+    curves: Dict[str, Dict[str, List[float]]] = {}
+    for algo in ("mvi", "svi", "ivi", "sivi"):
+        eng = LDAEngine(cfg, train, algo=algo, batch_size=batch, seed=seed,
+                        test_corpus=test)
+        eng.evaluate()
+        n_units = epochs if algo == "mvi" else epochs * max(
+            train.num_docs // batch, 1)
+        for step in range(n_units):
+            if algo == "mvi":
+                eng.run_epoch()
+                eng.evaluate()
+            else:
+                eng.run_minibatch()
+                if step % 4 == 0:
+                    eng.evaluate()
+        eng.evaluate()
+        curves[algo] = {"docs": list(map(float, eng.history.docs_seen)),
+                        "lpp": eng.history.lpp,
+                        "wall": eng.history.wall}
+    return curves
+
+
+def _lpp_at(curve, docs: float) -> float:
+    """LPP at the evaluation point closest below a docs-processed budget."""
+    best = curve["lpp"][0]
+    for d, l in zip(curve["docs"], curve["lpp"]):
+        if d <= docs:
+            best = l
+    return best
+
+
+def rows(corpus_name: str = "small", epochs: int = 4):
+    t0 = time.perf_counter()
+    curves = run(corpus_name, epochs=epochs)
+    total_us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for algo, c in curves.items():
+        out.append((f"fig1/{corpus_name}/{algo}", total_us / 4,
+                    f"final_lpp={c['lpp'][-1]:.4f}"))
+    # Claim A (Fig. 1, reproduced): at an equal early document budget the
+    # incremental engines are ahead of batch MVI — IVI makes progress
+    # before a full pass completes.
+    budget = max(c["docs"][-1] for c in curves.values()) / max(epochs, 1)
+    early = {a: _lpp_at(c, budget) for a, c in curves.items()}
+    ok_a = max(early["ivi"], early["sivi"]) >= early["mvi"] - 0.02
+    out.append((f"fig1/{corpus_name}/claim_faster_early", 0.0,
+                f"ivi@1pass={early['ivi']:.4f} sivi@1pass={early['sivi']:.4f} "
+                f"mvi@1pass={early['mvi']:.4f} ok={ok_a}"))
+    # Claim B (final quality): on the paper's real corpora IVI matches or
+    # beats MVI at convergence; on these *synthetic* corpora (sharply
+    # identifiable topics, ≤2k docs) MVI's synchronized passes find a
+    # better basin — a documented deviation (EXPERIMENTS.md). We report
+    # the measured ordering rather than assert it.
+    final = {a: c["lpp"][-1] for a, c in curves.items()}
+    out.append((f"fig1/{corpus_name}/final_ordering", 0.0,
+                " ".join(f"{a}={final[a]:.4f}"
+                         for a in ("mvi", "svi", "ivi", "sivi"))))
+    # CVB0 baseline (paper §5's de-facto standard for moderate corpora)
+    from repro.core import CVB0Engine, LDAConfig, log_predictive, \
+        split_heldout
+    from repro.data import PAPER_CORPORA, make_corpus
+    spec = PAPER_CORPORA[corpus_name]
+    train = make_corpus(spec, split="train", seed=0)
+    test = make_corpus(spec, split="test", seed=0)
+    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
+                    vocab_size=spec.vocab_size, estep_max_iters=60)
+    obs, held = split_heldout(test, seed=0)
+    cvb = CVB0Engine(cfg, train, batch_size=32, seed=0)
+    for _ in range(epochs):
+        cvb.run_epoch()
+    out.append((f"fig1/{corpus_name}/cvb0", 0.0,
+                f"final_lpp={float(log_predictive(cfg, cvb.lam, obs, held)):.4f}"))
+    return out

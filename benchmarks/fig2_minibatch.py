@@ -1,0 +1,48 @@
+"""Fig. 2 — effect of IVI mini-batch size (paper §6.1).
+
+Paper claims: smaller mini-batches converge faster (in documents), larger
+mini-batches reach a better final value.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import LDAConfig, LDAEngine
+from repro.data import PAPER_CORPORA, make_corpus
+
+
+def run(corpus_name: str = "small", sizes=(8, 32, 128), budget_docs=3000,
+        seed: int = 0) -> Dict[int, List[float]]:
+    spec = PAPER_CORPORA[corpus_name]
+    train = make_corpus(spec, split="train", seed=seed)
+    test = make_corpus(spec, split="test", seed=seed)
+    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
+                    vocab_size=spec.vocab_size, estep_max_iters=60)
+    curves = {}
+    for bs in sizes:
+        eng = LDAEngine(cfg, train, algo="ivi", batch_size=bs, seed=seed,
+                        test_corpus=test)
+        while eng.docs_seen < budget_docs:
+            eng.run_minibatch()
+            if (eng.docs_seen // bs) % 4 == 0:
+                eng.evaluate()
+        eng.evaluate()
+        curves[bs] = {"docs": list(map(float, eng.history.docs_seen)),
+                      "lpp": eng.history.lpp}
+    return curves
+
+
+def rows(corpus_name: str = "small"):
+    t0 = time.perf_counter()
+    curves = run(corpus_name)
+    total_us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for bs, c in curves.items():
+        # docs needed to reach within 0.1 of this run's final lpp
+        final = c["lpp"][-1]
+        hit = next((d for d, l in zip(c["docs"], c["lpp"])
+                    if l >= final - 0.1), c["docs"][-1])
+        out.append((f"fig2/{corpus_name}/batch{bs}", total_us / len(curves),
+                    f"final_lpp={final:.4f} docs_to_converge={hit:.0f}"))
+    return out

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: the LDA E-step hotspot.
+
+On this CPU container the Pallas kernels run in interpret mode (Python) —
+their timings are NOT the TPU numbers. What we measure and report:
+  * the pure-jnp dense sweep (the oracle workload XLA:CPU compiles) as the
+    throughput reference;
+  * the gather-formulation E-step (engine default);
+  * kernel-vs-oracle max error, as a guard.
+Roofline expectations for the TPU kernel are in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core import LDAConfig
+from repro.core.estep import estep_dense, estep_gather
+from repro.core.math import exp_dirichlet_expectation
+from repro.data import PAPER_CORPORA, make_corpus
+from repro.kernels import lda_estep, ref
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    for (b, v, k) in [(64, 4096, 128), (128, 8192, 128)]:
+        c = jnp.asarray(rng.poisson(0.05, (b, v)).astype(np.float32))
+        et = jnp.asarray(rng.gamma(1.0, 1.0, (b, k)).astype(np.float32))
+        eb = jnp.asarray(rng.gamma(1.0, 1.0, (v, k)).astype(np.float32))
+        sweep = jax.jit(lambda c_, e_, b_: ref.estep_sweep_ref(c_, e_, b_, 0.5))
+        us = time_call(sweep, c, et, eb)
+        flops = 2 * 2 * b * v * k
+        out.append((f"kernel/sweep_jnp/B{b}_V{v}_K{k}", us,
+                    f"gflops={flops / us / 1e3:.2f}"))
+        got = lda_estep.estep_sweep(c, et, eb, 0.5)
+        err = float(jnp.abs(got - sweep(c, et, eb)).max())
+        out.append((f"kernel/sweep_pallas_interpret_err/B{b}_V{v}_K{k}", 0.0,
+                    f"max_err={err:.2e}"))
+
+    spec = PAPER_CORPORA["small"]
+    corpus = make_corpus(spec, split="train", seed=0)
+    cfg = LDAConfig(num_topics=64, vocab_size=spec.vocab_size,
+                    estep_max_iters=30)
+    lam = jax.random.gamma(jax.random.key(0), 100.0,
+                           (spec.vocab_size, 64)) * 0.01
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    ids, cnts = corpus.token_ids[:64], corpus.counts[:64]
+    for name, fn in (("gather", estep_gather), ("dense", estep_dense)):
+        us = time_call(lambda: fn(cfg, eb, ids, cnts))
+        out.append((f"kernel/estep_{name}/B64", us,
+                    f"tokens_per_s={float(cnts.sum()) / (us / 1e6):.0f}"))
+    return out

@@ -1,0 +1,60 @@
+"""Regenerate the generated tables inside EXPERIMENTS.md from
+results/dryrun.jsonl + results/lda_dryrun.jsonl (markers: DRYRUN_TABLE,
+ROOFLINE_TABLE)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.roofline import HW, load, render
+from repro.configs import ARCHS
+from repro.configs.base import INPUT_SHAPES
+
+
+def dryrun_summary() -> str:
+    rows = [r for r in load() if not r.get("seq_shard")
+            and r.get("profile", "tp_fsdp") == "tp_fsdp"]
+    lines = ["| mesh | pairs OK | median compile s | max compile s | "
+             "max temp GB (train) | max temp GB (inference) |",
+             "|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        data = [r for r in rows if r["mesh"] == mesh]
+        ok = [r for r in data if r.get("ok")]
+        cts = sorted(r.get("compile_s", 0) for r in ok)
+        tr = [r["memory"]["temp_gb"] for r in ok if r["shape"] == "train_4k"]
+        inf = [r["memory"]["temp_gb"] for r in ok if r["shape"] != "train_4k"]
+        lines.append(
+            f"| {mesh} | {len(ok)}/{len(data)} | "
+            f"{cts[len(cts)//2]:.1f} | {cts[-1]:.1f} | "
+            f"{max(tr):.1f} | {max(inf):.1f} |")
+    # LDA rows
+    if os.path.exists("results/lda_dryrun.jsonl"):
+        lda = [json.loads(l) for l in open("results/lda_dryrun.jsonl")]
+        okl = sum(1 for r in lda if r.get("ok"))
+        lines.append(f"| lda-divi (arxiv) | {okl}/{len(lda)} | — | — | — | "
+                     f"{max(r['memory']['temp_gb'] for r in lda if r.get('ok')):.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    dr = dryrun_summary()
+    rf = []
+    for mesh in ("single", "multi"):
+        rf.append(f"### {mesh} pod ({256 if mesh == 'single' else 512} chips)\n")
+        rf.extend(render(mesh=mesh))
+        rf.append("")
+    text = re.sub(r"<!-- DRYRUN_TABLE -->(.|\n)*?(?=\n## §Roofline)",
+                  "<!-- DRYRUN_TABLE -->\n" + dr + "\n",
+                  text) if "<!-- DRYRUN_TABLE -->" in text else text
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->(.|\n)*?(?=\n### Reading)",
+                  "<!-- ROOFLINE_TABLE -->\n" + "\n".join(rf) + "\n",
+                  text) if "<!-- ROOFLINE_TABLE -->" in text else text
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Deliverable (g): roofline table from the dry-run sweep results.
+
+Reads results/dryrun.jsonl (produced by ``python -m repro.launch.dryrun
+--all --mesh both --out results/dryrun.jsonl``) and renders the
+per-(arch × shape × mesh) roofline terms, dominant bottleneck, MODEL_FLOPS
+ratio, and memory fit — the §Roofline content of EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, get_shape
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+HBM_GB = 16.0   # v5e
+
+
+def count_params(cfg) -> float:
+    """Analytic parameter count (embedding included once if tied)."""
+    import jax
+    from repro.models import transformer as T
+    shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+    return float(sum(s.size for s in jax.tree.leaves(
+        shapes, is_leaf=lambda x: hasattr(x, "size"))))
+
+
+def active_params(cfg) -> float:
+    """Active parameters per token (MoE: top-k of routed + shared)."""
+    total = count_params(cfg)
+    if not cfg.num_experts:
+        return total
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    n_moe = sum(1 for kk in cfg.pattern if kk == "moe")
+    expert_p = n_moe * e * 3 * cfg.d_model * cfg.moe_d_ff
+    return total - expert_p * (1 - k / e)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference (global)."""
+    n = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def load(path: str = "results/dryrun.jsonl") -> List[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        # older rows stored a mesh-shape dict under "mesh"
+        if not isinstance(r["mesh"], str):
+            r["mesh"] = "multi" if r.get("chips") == 512 else "single"
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("seq_shard", False))] = r
+    return list(seen.values())
+
+
+def render(path: str = "results/dryrun.jsonl",
+           mesh: str = "single") -> List[str]:
+    rows = [r for r in load(path) if r["mesh"] == mesh
+            and not r.get("seq_shard")]
+    lines = []
+    hdr = (f"| arch | shape | ok | compute_s | memory_s | collective_s | "
+           f"bottleneck | MODEL_FLOPs/HLO | temp GB (≤{HBM_GB:.0f}) |")
+    lines.append(hdr)
+    lines.append("|" + "---|" * 9)
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | "
+                         f"{r.get('error', '')[:60]} |")
+            continue
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        dom = max(terms, key=terms.get)
+        cfg = ARCHS[r["arch"]]
+        shape = get_shape(r["shape"])
+        mf = model_flops(cfg, shape) / r["chips"]
+        ratio = mf / max(r["hlo"]["dot_flops"], 1.0)
+        temp = r["memory"]["temp_gb"]
+        fit = "✓" if temp <= HBM_GB else "✗"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | OK | {terms['compute']:.2e} | "
+            f"{terms['memory']:.2e} | {terms['collective']:.2e} | {dom} | "
+            f"{ratio:.2f} | {temp:.2f} {fit} |")
+    return lines
+
+
+def rows():
+    """CSV rows for benchmarks/run.py."""
+    out = []
+    for mesh in ("single", "multi"):
+        data = [r for r in load() if r["mesh"] == mesh
+                and not r.get("seq_shard")]
+        ok = sum(1 for r in data if r.get("ok"))
+        out.append((f"roofline/dryrun_{mesh}", 0.0,
+                    f"pairs_ok={ok}/{len(data)}"))
+        for r in data:
+            if not r.get("ok"):
+                continue
+            rf = r["roofline"]
+            terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                     "collective": rf["collective_s"]}
+            dom = max(terms, key=terms.get)
+            out.append((f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                        max(terms.values()) * 1e6,
+                        f"bottleneck={dom} temp_gb={r['memory']['temp_gb']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        print(f"\n## Roofline — {mesh} pod\n")
+        for line in render(mesh=mesh):
+            print(line)

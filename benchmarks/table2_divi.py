@@ -1,0 +1,121 @@
+"""Table 2 / Figs. 3–4 — D-IVI: LPP and time-per-iteration vs number of
+processors and mini-batch size.
+
+Workers are simulated bit-exactly with vmap (repro.dist); the wall-clock
+column combines the measured per-round compute time with the paper's
+cost structure: a P-worker round processes P mini-batches concurrently, so
+
+    time_per_doc(P) = max_w(estep_time) / (P·B) + comm_bytes / ici_bw
+
+comm is one (V/model, K) correction reduction per round — the same message
+the paper's workers send to the master. Speed-up saturates as P grows and
+larger mini-batches help, matching the paper's Fig. 3 (bottom right).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import LDAConfig, log_predictive, split_heldout
+from repro.data import PAPER_CORPORA, make_corpus
+from repro.dist import DIVIConfig, DIVIEngine
+
+# modelled interconnect for the simulated cluster (32-core host in the
+# paper; we keep their relative orders of magnitude)
+COMM_BW = 2e9          # bytes/s effective reduction bandwidth
+COMM_LAT = 2e-3        # per-round latency (s)
+
+
+def run(corpus_name: str = "small", procs=(1, 2, 4, 8), batches=(16, 64),
+        rounds_per_p: int = 64, seed: int = 0) -> Dict:
+    spec = PAPER_CORPORA[corpus_name]
+    train = make_corpus(spec, split="train", seed=seed)
+    test = make_corpus(spec, split="test", seed=seed)
+    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
+                    vocab_size=spec.vocab_size, estep_max_iters=40)
+    obs, held = split_heldout(test, seed=seed)
+    results = {}
+    for bs in batches:
+        for p in procs:
+            if train.num_docs // p < bs:
+                continue
+            eng = DIVIEngine(cfg, DIVIConfig(num_workers=p, batch_size=bs),
+                             train, seed=seed)
+            n_rounds = max(rounds_per_p // p, 4)
+            t0 = time.perf_counter()
+            for _ in range(n_rounds):
+                eng.run_round()
+            wall = time.perf_counter() - t0
+            lpp = float(log_predictive(cfg, eng.lam, obs, held))
+            # measured per-round compute on ONE worker's batch: the vmap
+            # simulation executes all P workers serially on one core, so
+            # the per-worker time is wall / (rounds · P)
+            t_worker = wall / (n_rounds * p)
+            comm = (cfg.vocab_size * cfg.num_topics * 4) / COMM_BW + COMM_LAT
+            t_round = t_worker + comm          # workers run concurrently
+            docs_per_s = p * bs / t_round
+            results[(bs, p)] = {"lpp": lpp, "t_round": t_round,
+                                "docs_per_s": docs_per_s,
+                                "rounds": n_rounds}
+    # speed-ups relative to P=1 at same batch size
+    for (bs, p), r in results.items():
+        base = results.get((bs, 1))
+        r["speedup"] = (r["docs_per_s"] / base["docs_per_s"]) if base else 1.0
+    return results
+
+
+def curves(corpus_name: str = "small", procs=(1, 4, 8), rounds: int = 24,
+           seed: int = 0):
+    """Fig. 4 — LPP vs documents processed for varying P.
+
+    Paper claim: more processors slow the per-document convergence *rate*
+    (staler information per update) while each round covers P× documents.
+    """
+    spec = PAPER_CORPORA[corpus_name]
+    train = make_corpus(spec, split="train", seed=seed)
+    test = make_corpus(spec, split="test", seed=seed)
+    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
+                    vocab_size=spec.vocab_size, estep_max_iters=40)
+    obs, held = split_heldout(test, seed=seed)
+    out = {}
+    for p in procs:
+        if train.num_docs // p < 16:
+            continue
+        eng = DIVIEngine(cfg, DIVIConfig(num_workers=p, batch_size=16),
+                         train, seed=seed)
+        docs, lpps = [], []
+        for _ in range(max(rounds // p, 3)):
+            eng.run_round()
+            docs.append(eng.docs_seen)
+            lpps.append(float(log_predictive(cfg, eng.lam, obs, held)))
+        out[p] = {"docs": docs, "lpp": lpps}
+    return out
+
+
+def _lpp_at_docs(curve, budget):
+    best = curve["lpp"][0]
+    for d, l in zip(curve["docs"], curve["lpp"]):
+        if d <= budget:
+            best = l
+    return best
+
+
+def rows(corpus_name: str = "small"):
+    res = run(corpus_name)
+    out = []
+    for (bs, p), r in sorted(res.items()):
+        out.append((f"table2/{corpus_name}/b{bs}/P{p}",
+                    r["t_round"] * 1e6,
+                    f"lpp={r['lpp']:.4f} speedup={r['speedup']:.2f}x "
+                    f"docs_per_s={r['docs_per_s']:.0f}"))
+    # Fig. 4: per-document convergence rate decreases with P
+    cv = curves(corpus_name)
+    if cv:
+        budget = min(c["docs"][-1] for c in cv.values())
+        for p, c in sorted(cv.items()):
+            out.append((f"fig4/{corpus_name}/P{p}", 0.0,
+                        f"lpp@{budget}docs={_lpp_at_docs(c, budget):.4f} "
+                        f"final={c['lpp'][-1]:.4f}"))
+    return out

@@ -1,0 +1,47 @@
+"""Quickstart: incremental variational inference for LDA in ~40 lines.
+
+Trains IVI on a synthetic paper-shaped corpus, shows the monotone bound and
+held-out predictive likelihood, and contrasts with SVI.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import LDAConfig, LDAEngine
+from repro.data import PAPER_CORPORA, make_corpus
+
+
+def main() -> None:
+    spec = PAPER_CORPORA["small"]
+    train = make_corpus(spec, split="train", seed=0)
+    test = make_corpus(spec, split="test", seed=0)
+    cfg = LDAConfig(num_topics=50, vocab_size=spec.vocab_size)
+
+    print("== IVI (the paper's algorithm: no learning rate) ==")
+    ivi = LDAEngine(cfg, train, algo="ivi", batch_size=32, seed=0,
+                    test_corpus=test)
+    ivi.run_epoch()          # first pass retires the random-init mass
+    print(f"after 1 epoch: lpp={ivi.evaluate()['lpp']:.4f}")
+    prev = ivi.full_bound()
+    for i in range(10):
+        ivi.run_minibatch()
+        cur = ivi.full_bound()
+        assert cur >= prev - 1e-2, "IVI must increase the bound monotonically"
+        prev = cur
+    print(f"10 incremental updates, bound increased monotonically "
+          f"to {prev:.1f}")
+    for _ in range(3):
+        ivi.run_epoch()
+    print(f"final: lpp={ivi.evaluate()['lpp']:.4f}")
+
+    print("\n== SVI baseline (needs a learning rate; no monotonicity) ==")
+    svi = LDAEngine(cfg, train, algo="svi", batch_size=32, seed=0,
+                    test_corpus=test)
+    for _ in range(4):
+        svi.run_epoch()
+    print(f"final: lpp={svi.evaluate()['lpp']:.4f}")
+    print(f"\nIVI {ivi.history.lpp[-1]:.4f} vs SVI {svi.history.lpp[-1]:.4f} "
+          f"(paper Fig. 1; see EXPERIMENTS.md §Paper-validation for the "
+          f"synthetic-corpus caveat)")
+
+
+if __name__ == "__main__":
+    main()

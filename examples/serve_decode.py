@@ -1,0 +1,69 @@
+"""Serving example: batched autoregressive decode with KV/recurrent caches.
+
+Loads a reduced model per --arch (default zamba2 — hybrid Mamba2+attention,
+the interesting cache case), prefills a prompt batch, then decodes with the
+production serve_step. Works for every assigned arch id.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch zamba2-1.2b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import transformer as T
+from repro.training import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-1.2b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced(seq_len_hint=args.prompt_len)
+    params = T.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    b, pl = args.batch, args.prompt_len
+    cache_len = pl + args.new_tokens
+
+    tok_shape = (b, pl, cfg.num_codebooks) if cfg.modality == "audio" \
+        else (b, pl)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, tok_shape))
+
+    caches = T.init_caches(cfg, b, cache_len, dtype=jnp.float32)
+    serve = jax.jit(make_serve_step(cfg))
+
+    # prefill by teacher-forcing the prompt through serve_step (exercises
+    # the same cache path the decode loop uses)
+    t0 = time.perf_counter()
+    tok = prompt[:, 0]
+    for t in range(pl):
+        tok = prompt[:, t]
+        nxt, logits, caches = serve(params, caches, tok,
+                                    jnp.full((b,), t, jnp.int32))
+    print(f"prefilled {pl} tokens in {time.perf_counter() - t0:.2f}s")
+
+    # decode
+    outs = []
+    t0 = time.perf_counter()
+    cur = nxt
+    for t in range(pl, pl + args.new_tokens):
+        cur, logits, caches = serve(params, caches, cur,
+                                    jnp.full((b,), t, jnp.int32))
+        outs.append(np.asarray(cur))
+    dt = time.perf_counter() - t0
+    gen = np.stack(outs, axis=1)
+    print(f"decoded {args.new_tokens} tokens × {b} seqs in {dt:.2f}s "
+          f"({args.new_tokens * b / dt:.1f} tok/s)")
+    print("sample:", gen[0].tolist()[:16], "…")
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

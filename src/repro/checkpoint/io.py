@@ -1,0 +1,51 @@
+"""Host-gather npz checkpointing.
+
+Arrays are fetched to host (gathering shards if needed), flattened by
+pytree path and written to a single .npz; restore rebuilds the pytree and
+(optionally) re-places it with a target sharding tree. Deliberately simple
+— no async, no per-shard files — but correct for both LDA engine states and
+transformer TrainStates.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def restore_checkpoint(path: str, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    new_leaves = []
+    for (path_keys, leaf) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -1,0 +1,281 @@
+"""Single-host inference engines for LDA: MVI, SVI, IVI, S-IVI.
+
+All four share the batched E-step (`repro.core.estep`); they differ only in
+how the global topic-word parameter λ is updated — exactly the contrast the
+paper draws:
+
+* **MVI**  (batch, Blei et al. 2003): λ = β₀ + Σ_d s_d after a full pass.
+* **SVI**  (Hoffman et al. 2013, eq. 3): λ ← (1−ρ_t)λ + ρ_t(β₀ + (D/|B|)·s_B).
+* **IVI**  (this paper, eq. 4 / Alg. 1): memoize per-document π; maintain the
+  exact accumulator ⟨m_vk⟩ by subtract-old/add-new; λ = β₀ + ⟨m_vk⟩.
+  No learning rate; monotone in the (memoized) ELBO once every document
+  has been visited.
+* **S-IVI** (eq. 5): the IVI correction inside a Robbins–Monro average:
+  λ ← (1−ρ_t)λ + ρ_t(β₀ + ⟨m_vk⟩⁺). SAG-like; amenable to distribution.
+
+Random-initialisation mass: the paper initialises β randomly (Alg. 1 l.1).
+For the incremental engines we carry that mass explicitly (``init_mass``)
+and retire each document's pro-rata share the first time it is visited, so
+after one full pass ⟨m_vk⟩ == Σ_d s_d exactly and the monotonicity guarantee
+is exact (cf. Neal & Hinton 1998 discussion of incremental-EM start-up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estep as estep_mod
+from repro.core.bound import elbo_collapsed, elbo_memoized
+from repro.core.estep import estep, scatter_sstats
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.predictive import log_predictive, split_heldout
+from repro.core.types import Corpus, LDAConfig, Memo
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    """Variational state for every single-host engine (unused fields zero)."""
+
+    lam: jax.Array         # (V, K) topic-word Dirichlet parameter
+    m_vk: jax.Array        # (V, K) incremental accumulator ⟨m_vk⟩
+    init_mass: jax.Array   # (V, K) un-attributed random-init mass
+    init_frac: jax.Array   # () share of init_mass still live in λ
+    t: jax.Array           # () int32 update counter (drives ρ_t)
+
+
+def init_engine_state(cfg: LDAConfig, key: jax.Array) -> EngineState:
+    lam = jax.random.gamma(key, 100.0,
+                           (cfg.vocab_size, cfg.num_topics)) * 0.01
+    return EngineState(
+        lam=lam,
+        m_vk=jnp.zeros_like(lam),
+        init_mass=lam - cfg.beta0,
+        init_frac=jnp.ones(()),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MVI — batch coordinate ascent
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def mvi_epoch(cfg: LDAConfig, state: EngineState, ids_b: jax.Array,
+              cnts_b: jax.Array) -> tuple[EngineState, jax.Array]:
+    """One full batch pass. ids_b/cnts_b: (num_batches, B, L)."""
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+
+    def body(acc, batch):
+        ids, cnts = batch
+        res = estep(cfg, eb, ids, cnts)
+        return acc + res.sstats, res.gamma
+
+    sstats, gammas = jax.lax.scan(
+        body, jnp.zeros_like(state.lam), (ids_b, cnts_b))
+    lam = cfg.beta0 + sstats
+    new = dataclasses.replace(state, lam=lam, t=state.t + 1)
+    return new, gammas.reshape(-1, cfg.num_topics)
+
+
+# ---------------------------------------------------------------------------
+# SVI — stochastic natural gradient (eq. 3)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def svi_step(cfg: LDAConfig, state: EngineState, ids: jax.Array,
+             cnts: jax.Array, num_docs_total: jax.Array) -> EngineState:
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+    res = estep(cfg, eb, ids, cnts)
+    scale = num_docs_total / ids.shape[0]
+    lam_hat = cfg.beta0 + scale * res.sstats
+    rho = cfg.rho(state.t + 1)
+    lam = (1.0 - rho) * state.lam + rho * lam_hat
+    return dataclasses.replace(state, lam=lam, t=state.t + 1)
+
+
+# ---------------------------------------------------------------------------
+# IVI / S-IVI — incremental updates (eqs. 4 & 5)
+# ---------------------------------------------------------------------------
+
+def _incremental_correction(cfg: LDAConfig, state: EngineState, memo: Memo,
+                            ids: jax.Array, cnts: jax.Array,
+                            doc_idx: jax.Array, num_words_total: jax.Array):
+    """Shared E-step + subtract-old/add-new bookkeeping.
+
+    Returns (correction (V,K), new memo, new init_frac, gamma).
+    """
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+    old_pi = memo.pi[doc_idx]                               # (B, L, K)
+    # Warm-start γ from the memo for already-visited documents: coordinate
+    # ascent from the memoized point can only improve the bound, which is
+    # what makes IVI's monotonicity exact (fresh inits could hop to a worse
+    # local optimum of the per-document subproblem).
+    gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, cnts)
+    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
+    gamma0 = jnp.where(memo.visited[doc_idx][:, None], gamma_memo, fresh)
+    res = estep(cfg, eb, ids, cnts, gamma0)
+
+    delta = cnts[:, :, None] * (res.pi - old_pi)
+    correction = scatter_sstats(ids, delta, cfg.vocab_size)  # (V, K)
+
+    # retire the pro-rata share of the random-init mass for first visits
+    first = ~memo.visited[doc_idx]                           # (B,)
+    frac_batch = jnp.sum(jnp.where(first, cnts.sum(-1), 0.0)) / num_words_total
+    new_frac = jnp.maximum(state.init_frac - frac_batch, 0.0)
+    # snap fp32 subtraction residue to an exact zero once the pass is done,
+    # so λ = β₀ + ⟨m_vk⟩ holds exactly afterwards (eq. 4)
+    new_frac = jnp.where(new_frac < 1e-6, 0.0, new_frac)
+
+    memo = Memo(pi=memo.pi.at[doc_idx].set(res.pi),
+                visited=memo.visited.at[doc_idx].set(True))
+    return correction, memo, new_frac, res.gamma
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
+def ivi_step(cfg: LDAConfig, state: EngineState, memo: Memo, ids: jax.Array,
+             cnts: jax.Array, doc_idx: jax.Array,
+             num_words_total: jax.Array) -> tuple[EngineState, Memo]:
+    """Algorithm 1: partial E-step, then exact incremental M-step (eq. 4)."""
+    corr, memo, frac, _ = _incremental_correction(
+        cfg, state, memo, ids, cnts, doc_idx, num_words_total)
+    m_vk = state.m_vk + corr
+    lam = cfg.beta0 + m_vk + frac * state.init_mass
+    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
+                                t=state.t + 1)
+    return state, memo
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
+def sivi_step(cfg: LDAConfig, state: EngineState, memo: Memo, ids: jax.Array,
+              cnts: jax.Array, doc_idx: jax.Array,
+              num_words_total: jax.Array) -> tuple[EngineState, Memo]:
+    """Eq. 5: the incremental estimate inside a Robbins–Monro average."""
+    corr, memo, frac, _ = _incremental_correction(
+        cfg, state, memo, ids, cnts, doc_idx, num_words_total)
+    m_vk = state.m_vk + corr
+    lam_hat = cfg.beta0 + m_vk + frac * state.init_mass
+    rho = cfg.rho(state.t + 1)
+    lam = (1.0 - rho) * state.lam + rho * lam_hat
+    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
+                                t=state.t + 1)
+    return state, memo
+
+
+# ---------------------------------------------------------------------------
+# Host-side driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class History:
+    docs_seen: List[int] = dataclasses.field(default_factory=list)
+    elbo: List[float] = dataclasses.field(default_factory=list)
+    lpp: List[float] = dataclasses.field(default_factory=list)
+    wall: List[float] = dataclasses.field(default_factory=list)
+
+
+class LDAEngine:
+    """Host driver: shuffling, mini-batching, evaluation, timing."""
+
+    def __init__(self, cfg: LDAConfig, corpus: Corpus, *, algo: str,
+                 batch_size: int = 64, seed: int = 0,
+                 test_corpus: Optional[Corpus] = None):
+        assert algo in ("mvi", "svi", "ivi", "sivi")
+        self.cfg, self.corpus, self.algo = cfg, corpus, algo
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.state = init_engine_state(cfg, jax.random.key(seed))
+        self.memo = None
+        if algo in ("ivi", "sivi"):
+            self.memo = Memo(
+                pi=jnp.zeros((corpus.num_docs, corpus.max_unique,
+                              cfg.num_topics), jnp.float32),
+                visited=jnp.zeros((corpus.num_docs,), bool))
+        self.num_words_total = jnp.asarray(float(np.asarray(corpus.counts).sum()))
+        self.docs_seen = 0
+        self.history = History()
+        self._t0 = time.perf_counter()
+        if test_corpus is not None:
+            self._obs, self._held = split_heldout(test_corpus, seed=seed)
+        else:
+            self._obs = self._held = None
+
+    # -- batching ----------------------------------------------------------
+    def _epoch_order(self) -> np.ndarray:
+        d = self.corpus.num_docs
+        order = self.rng.permutation(d)
+        n = (d // self.batch_size) * self.batch_size
+        if n == 0:  # corpus smaller than one batch: sample with replacement
+            return self.rng.choice(d, size=(1, self.batch_size))
+        return order[:n].reshape(-1, self.batch_size)
+
+    # -- steps -------------------------------------------------------------
+    def run_epoch(self) -> None:
+        batches = self._epoch_order()
+        if self.algo == "mvi":
+            ids = self.corpus.token_ids[batches]     # (nb, B, L)
+            cnts = self.corpus.counts[batches]
+            self.state, _ = mvi_epoch(self.cfg, self.state, ids, cnts)
+            self.docs_seen += batches.size
+            return
+        for rows in batches:
+            self.run_minibatch(rows)
+
+    def run_minibatch(self, rows: Optional[np.ndarray] = None) -> None:
+        if rows is None:
+            rows = self.rng.choice(self.corpus.num_docs, size=self.batch_size,
+                                   replace=False)
+        idx = jnp.asarray(rows)
+        ids, cnts = self.corpus.token_ids[idx], self.corpus.counts[idx]
+        if self.algo == "svi":
+            self.state = svi_step(self.cfg, self.state, ids, cnts,
+                                  jnp.asarray(float(self.corpus.num_docs)))
+        elif self.algo == "ivi":
+            self.state, self.memo = ivi_step(
+                self.cfg, self.state, self.memo, ids, cnts, idx,
+                self.num_words_total)
+        elif self.algo == "sivi":
+            self.state, self.memo = sivi_step(
+                self.cfg, self.state, self.memo, ids, cnts, idx,
+                self.num_words_total)
+        else:
+            raise ValueError(self.algo)
+        self.docs_seen += len(rows)
+
+    # -- evaluation --------------------------------------------------------
+    def evaluate(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        if self._obs is not None:
+            out["lpp"] = float(log_predictive(self.cfg, self.state.lam,
+                                              self._obs, self._held))
+        self.history.docs_seen.append(self.docs_seen)
+        self.history.lpp.append(out.get("lpp", float("nan")))
+        self.history.wall.append(time.perf_counter() - self._t0)
+        return out
+
+    def full_bound(self) -> float:
+        """Exact corpus ELBO.
+
+        For the incremental engines this is the *memoized* bound — the exact
+        objective at (γ(π_memo), π_memo, λ), the quantity IVI monotonically
+        increases (γ is α₀ + Σ_l cnt·π, Alg. 1 line 6, so it is derived from
+        the memo and stays consistent with it). For MVI/SVI we report the
+        collapsed bound at freshly fitted γ.
+        """
+        cfg = self.cfg
+        if self.memo is not None:
+            gamma = cfg.alpha0 + jnp.einsum(
+                "dlk,dl->dk", self.memo.pi, self.corpus.counts)
+            return float(elbo_memoized(cfg, self.corpus, gamma,
+                                       self.memo.pi, self.state.lam))
+        eb = exp_dirichlet_expectation(self.state.lam, axis=0)
+        res = estep_mod.estep_gather(cfg, eb, self.corpus.token_ids,
+                                     self.corpus.counts)
+        return float(elbo_collapsed(cfg, self.corpus, res.gamma,
+                                    self.state.lam))

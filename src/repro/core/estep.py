@@ -1,0 +1,147 @@
+"""Batched variational E-step for LDA.
+
+Two interchangeable formulations:
+
+* ``gather`` — token-aligned: gathers rows of exp(E[ln φ]) at the batch's
+  token ids, shape (B, L, K). Memory-proportional to batch token count;
+  the default on CPU and for the engines' correctness paths.
+* ``dense`` — densifies the mini-batch into a count matrix C (B, V) so one
+  fixed-point sweep is two MXU matmuls. This is the formulation the Pallas
+  kernel (`repro.kernels.lda_estep`) implements; ``dense`` here is its
+  pure-jnp twin and oracle.
+
+Both return the converged document-topic parameter γ and the memoized
+responsibilities π in token layout (B, L, K) — the quantity IVI stores.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.types import LDAConfig
+
+_EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
+
+
+class EStepResult(NamedTuple):
+    gamma: jax.Array      # (B, K)
+    pi: jax.Array         # (B, L, K) token-aligned responsibilities
+    sstats: jax.Array     # (V, K) Σ_d Σ_l cnt·π scattered at token ids
+    iters: jax.Array      # () int32 fixed-point iterations used
+
+
+def _fixed_point(cfg: LDAConfig, update_fn, gamma0: jax.Array):
+    """Run γ ← update(γ) until mean |Δγ| < tol or max_iters."""
+
+    def cond(carry):
+        _, delta, it = carry
+        return jnp.logical_and(delta > cfg.estep_tol, it < cfg.estep_max_iters)
+
+    def body(carry):
+        gamma, _, it = carry
+        gamma_new = update_fn(gamma)
+        delta = jnp.abs(gamma_new - gamma).mean()
+        return gamma_new, delta, it + 1
+
+    init = (gamma0, jnp.asarray(jnp.inf, gamma0.dtype), jnp.asarray(0, jnp.int32))
+    gamma, _, iters = jax.lax.while_loop(cond, body, init)
+    return gamma, iters
+
+
+def scatter_sstats(token_ids: jax.Array, weighted_pi: jax.Array,
+                   vocab_size: int) -> jax.Array:
+    """Scatter (B, L, K) token-aligned weighted responsibilities into (V, K)."""
+    k = weighted_pi.shape[-1]
+    flat_ids = token_ids.reshape(-1)
+    flat_vals = weighted_pi.reshape(-1, k)
+    return jnp.zeros((vocab_size, k), weighted_pi.dtype).at[flat_ids].add(flat_vals)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estep_gather(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                 token_ids: jax.Array, counts: jax.Array,
+                 gamma0: Optional[jax.Array] = None) -> EStepResult:
+    """Token-aligned batched E-step (Algorithm 1, lines 4–7).
+
+    Args:
+      exp_elog_beta: (V, K) exp(E[ln φ]).
+      token_ids / counts: (B, L) padded unique-token BOW batch.
+    """
+    b = token_ids.shape[0]
+    eb = exp_elog_beta[token_ids]                      # (B, L, K)
+    if gamma0 is None:
+        gamma0 = jnp.full((b, cfg.num_topics), cfg.alpha0 + 1.0, jnp.float32)
+
+    def update(gamma):
+        etheta = exp_dirichlet_expectation(gamma)      # (B, K)
+        p = jnp.einsum("bk,blk->bl", etheta, eb) + _EPS
+        return cfg.alpha0 + etheta * jnp.einsum("bl,blk->bk", counts / p, eb)
+
+    gamma, iters = _fixed_point(cfg, update, gamma0)
+
+    etheta = exp_dirichlet_expectation(gamma)
+    p = jnp.einsum("bk,blk->bl", etheta, eb) + _EPS
+    pi = etheta[:, None, :] * eb / p[:, :, None]       # (B, L, K)
+    pi = jnp.where(counts[:, :, None] > 0, pi, 0.0)
+    sstats = scatter_sstats(token_ids, counts[:, :, None] * pi,
+                            exp_elog_beta.shape[0])
+    return EStepResult(gamma=gamma, pi=pi, sstats=sstats, iters=iters)
+
+
+def densify(token_ids: jax.Array, counts: jax.Array,
+            vocab_size: int) -> jax.Array:
+    """(B, L) BOW → dense count matrix C (B, V)."""
+    b = token_ids.shape[0]
+    c = jnp.zeros((b, vocab_size), counts.dtype)
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], token_ids.shape)
+    return c.at[rows.reshape(-1), token_ids.reshape(-1)].add(counts.reshape(-1))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estep_dense(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                token_ids: jax.Array, counts: jax.Array,
+                gamma0: Optional[jax.Array] = None) -> EStepResult:
+    """Dense-count E-step: one sweep = two (B,V)×(V,K) matmuls.
+
+    The TPU-native formulation (DESIGN.md §2): MXU-friendly, no gathers.
+    Matches ``estep_gather`` exactly (same fixed point, same π).
+    """
+    b = token_ids.shape[0]
+    v = exp_elog_beta.shape[0]
+    c = densify(token_ids, counts, v)                  # (B, V)
+    if gamma0 is None:
+        gamma0 = jnp.full((b, cfg.num_topics), cfg.alpha0 + 1.0, jnp.float32)
+
+    def update(gamma):
+        etheta = exp_dirichlet_expectation(gamma)      # (B, K)
+        p = etheta @ exp_elog_beta.T + _EPS            # (B, V)
+        return cfg.alpha0 + etheta * ((c / p) @ exp_elog_beta)
+
+    gamma, iters = _fixed_point(cfg, update, gamma0)
+
+    etheta = exp_dirichlet_expectation(gamma)
+    p = etheta @ exp_elog_beta.T + _EPS
+    sstats = exp_elog_beta * ((c / p).T @ etheta)      # (V, K)
+    # token-aligned π for the memo, recovered by gathering the dense solution
+    eb = exp_elog_beta[token_ids]
+    p_tok = jnp.einsum("bk,blk->bl", etheta, eb) + _EPS
+    pi = etheta[:, None, :] * eb / p_tok[:, :, None]
+    pi = jnp.where(counts[:, :, None] > 0, pi, 0.0)
+    return EStepResult(gamma=gamma, pi=pi, sstats=sstats, iters=iters)
+
+
+def estep(cfg: LDAConfig, exp_elog_beta: jax.Array, token_ids: jax.Array,
+          counts: jax.Array, gamma0: Optional[jax.Array] = None) -> EStepResult:
+    """Dispatch on ``cfg.estep_backend``."""
+    if cfg.estep_backend == "gather":
+        return estep_gather(cfg, exp_elog_beta, token_ids, counts, gamma0)
+    if cfg.estep_backend == "dense":
+        return estep_dense(cfg, exp_elog_beta, token_ids, counts, gamma0)
+    if cfg.estep_backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.estep_pallas(cfg, exp_elog_beta, token_ids, counts, gamma0)
+    raise ValueError(f"unknown estep backend: {cfg.estep_backend}")

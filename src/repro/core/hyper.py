@@ -1,0 +1,45 @@
+"""Symmetric Dirichlet hyperparameter learning (Minka fixed point).
+
+Real LDA deployments learn α₀ and β₀ rather than hand-setting them; the
+paper fixes them (§6) so these updates are OFF by default, exposed through
+``LDAEngine``-compatible helpers for the examples/benchmarks.
+
+Fixed-point for a symmetric Dirichlet prior a over dimension K given
+posterior parameter rows θ_d ~ Dir(γ_d):
+
+    a ← a · Σ_d Σ_k [ψ(γ_dk) − ψ(a_old)] / (K · Σ_d [ψ(Σ_k γ_dk) − ψ(K a_old)])
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma
+
+
+def minka_update(a: jax.Array, post: jax.Array, iters: int = 5,
+                 floor: float = 1e-4) -> jax.Array:
+    """One-or-more Minka fixed-point steps for symmetric prior ``a``.
+
+    post: (N, K) posterior Dirichlet parameters whose prior is a·1_K.
+    """
+    n, k = post.shape
+
+    def body(a_cur, _):
+        num = jnp.sum(digamma(post) - digamma(a_cur))
+        den = k * jnp.sum(digamma(post.sum(-1)) - digamma(k * a_cur))
+        a_new = a_cur * num / jnp.maximum(den, 1e-12)
+        return jnp.maximum(a_new, floor), None
+
+    a_out, _ = jax.lax.scan(body, jnp.asarray(a, jnp.float32), None,
+                            length=iters)
+    return a_out
+
+
+def update_alpha0(alpha0: float, gammas: jax.Array, iters: int = 5) -> float:
+    """Learn the document-topic prior from fitted γ (D, K)."""
+    return float(minka_update(alpha0, gammas, iters))
+
+
+def update_beta0(beta0: float, lam: jax.Array, iters: int = 5) -> float:
+    """Learn the topic-word prior from λ (V, K) — Dirichlets live on V."""
+    return float(minka_update(beta0, lam.T, iters))

@@ -1,0 +1,39 @@
+"""Shared LDA variational math: Dirichlet expectations and bound pieces."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma, gammaln
+
+
+def dirichlet_expectation(a: jax.Array, axis: int = -1) -> jax.Array:
+    """E_q[ln x] for x ~ Dirichlet(a) along ``axis``: ψ(a) − ψ(Σa)."""
+    return digamma(a) - digamma(a.sum(axis=axis, keepdims=True))
+
+
+def exp_dirichlet_expectation(a: jax.Array, axis: int = -1) -> jax.Array:
+    return jnp.exp(dirichlet_expectation(a, axis=axis))
+
+
+def dirichlet_elbo_term(post: jax.Array, prior0: float,
+                        elog: jax.Array, axis: int = -1) -> jax.Array:
+    """E_q[ln p(x; prior)] − E_q[ln q(x; post)] summed over all Dirichlets.
+
+    ``post`` is the posterior parameter array with the Dirichlet dimension on
+    ``axis``; ``elog`` is E_q[ln x] with matching shape; ``prior0`` the
+    symmetric prior. Returns a scalar.
+    """
+    n = post.shape[axis]
+    kl = (
+        jnp.sum((prior0 - post) * elog)
+        + jnp.sum(gammaln(post))
+        - jnp.sum(gammaln(post.sum(axis=axis)))
+    )
+    num = post.size // n
+    const = num * (gammaln(n * prior0) - n * gammaln(prior0))
+    return kl + const
+
+
+def safe_normalize(x: jax.Array, axis: int = -1,
+                   eps: float = 1e-30) -> jax.Array:
+    return x / (x.sum(axis=axis, keepdims=True) + eps)

@@ -1,0 +1,68 @@
+"""Topic-model quality metrics beyond held-out likelihood.
+
+* ``top_words`` — per-topic most probable token ids;
+* ``npmi_coherence`` — average normalized pointwise mutual information of
+  each topic's top-k word pairs under the corpus co-occurrence statistics
+  (the standard automatic coherence proxy);
+* ``effective_topics`` — exp(entropy) of corpus-level topic usage: detects
+  topic death (relevant to the IVI local-optima analysis, EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Corpus
+
+
+def top_words(lam: jax.Array, k: int = 10) -> np.ndarray:
+    """(K, k) token ids of each topic's top-k words."""
+    phi = np.asarray(lam / lam.sum(0, keepdims=True))      # (V, K)
+    return np.argsort(-phi, axis=0)[:k].T                  # (K, k)
+
+
+def _doc_presence(corpus: Corpus, vocab_size: int) -> np.ndarray:
+    """(D, V) binary token-presence matrix (host side)."""
+    d = corpus.num_docs
+    out = np.zeros((d, vocab_size), bool)
+    ids = np.asarray(corpus.token_ids)
+    cnt = np.asarray(corpus.counts)
+    rows = np.repeat(np.arange(d), ids.shape[1])
+    mask = cnt.reshape(-1) > 0
+    out[rows[mask], ids.reshape(-1)[mask]] = True
+    return out
+
+
+def npmi_coherence(lam: jax.Array, corpus: Corpus, k: int = 10,
+                   eps: float = 1e-12) -> float:
+    """Mean NPMI over all topics' top-k word pairs."""
+    v = lam.shape[0]
+    tops = top_words(lam, k)
+    pres = _doc_presence(corpus, v)
+    d = pres.shape[0]
+    p_w = pres.mean(0)                                     # (V,)
+    scores = []
+    for topic in tops:
+        s = []
+        for i in range(len(topic)):
+            for j in range(i + 1, len(topic)):
+                wi, wj = topic[i], topic[j]
+                p_ij = (pres[:, wi] & pres[:, wj]).mean()
+                if p_ij < eps:
+                    s.append(-1.0)
+                    continue
+                pmi = np.log(p_ij / (p_w[wi] * p_w[wj] + eps) + eps)
+                s.append(pmi / (-np.log(p_ij + eps)))
+        scores.append(np.mean(s))
+    return float(np.mean(scores))
+
+
+def effective_topics(lam: jax.Array) -> float:
+    """exp(H[topic usage]) from the topic-word mass."""
+    mass = np.asarray(lam.sum(0))                          # (K,)
+    p = mass / mass.sum()
+    h = -(p * np.log(p + 1e-12)).sum()
+    return float(np.exp(h))

@@ -1,0 +1,125 @@
+"""Core datatypes for incremental variational inference for LDA.
+
+The corpus is held in padded bag-of-words layout: each document is a row of
+*unique* token ids plus their counts, padded to the corpus-wide maximum
+number of unique tokens per document. This is the layout every engine
+(MVI / SVI / IVI / S-IVI / D-IVI) consumes; the Pallas kernels additionally
+densify a mini-batch into a count matrix ``C (B, V)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Corpus:
+    """Padded bag-of-words corpus.
+
+    Attributes:
+      token_ids: ``(D, L)`` int32 — unique token ids per document, padded
+        with 0. Padding is disambiguated by ``counts == 0``.
+      counts: ``(D, L)`` float32 — occurrence counts; 0 on padding.
+    """
+
+    token_ids: jax.Array
+    counts: jax.Array
+
+    @property
+    def num_docs(self) -> int:
+        return self.token_ids.shape[0]
+
+    @property
+    def max_unique(self) -> int:
+        return self.token_ids.shape[1]
+
+    @property
+    def num_words(self) -> jax.Array:
+        return self.counts.sum()
+
+    def take(self, idx: jax.Array) -> "Corpus":
+        return Corpus(self.token_ids[idx], self.counts[idx])
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    """Hyper-parameters — defaults are the paper's §6 experimental setup."""
+
+    num_topics: int = 100
+    vocab_size: int = 10_000
+    alpha0: float = 0.5          # document-topic Dirichlet prior
+    beta0: float = 0.05          # topic-word Dirichlet prior
+    kappa: float = 0.9           # learning-rate decay (SVI / S-IVI / D-IVI)
+    tau: float = 1.0             # learning-rate delay
+    estep_max_iters: int = 100   # cap on the local fixed point
+    estep_tol: float = 1e-4      # mean-abs-change convergence threshold
+    estep_backend: str = "gather"  # "gather" | "dense" | "pallas"
+
+    def rho(self, t: jax.Array) -> jax.Array:
+        """Robbins–Monro step size ρ_t = (t + τ)^(−κ)."""
+        return (t + self.tau) ** (-self.kappa)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GlobalState:
+    """Global variational state shared by every engine.
+
+    ``lam`` is the (V, K) topic-word Dirichlet parameter β in the paper;
+    ``m_vk`` is the global sufficient-statistic accumulator ⟨m_vk⟩ (only
+    maintained by the incremental engines; zeros otherwise); ``t`` counts
+    global updates (drives ρ_t for the stochastic engines).
+    """
+
+    lam: jax.Array           # (V, K)
+    m_vk: jax.Array          # (V, K)
+    t: jax.Array             # () int32
+
+    @property
+    def vocab_size(self) -> int:
+        return self.lam.shape[0]
+
+    @property
+    def num_topics(self) -> int:
+        return self.lam.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Memo:
+    """IVI per-document memoized responsibilities, token-aligned.
+
+    ``pi`` is ``(D, L, K)``: π_knd for each (document, unique-token) slot.
+    Rows of padding carry zeros. The per-document sufficient-statistic
+    contribution is ``segment_sum(counts[...,None] * pi, token_ids)``.
+    ``visited`` marks documents whose memo is live (contributes to ⟨m_vk⟩).
+    """
+
+    pi: jax.Array            # (D, L, K)
+    visited: jax.Array       # (D,) bool
+
+
+def init_global_state(cfg: LDAConfig, key: jax.Array,
+                      incremental: bool = False) -> GlobalState:
+    """Random λ initialisation as in the paper (Algorithm 1, line 1).
+
+    Matches the common Gamma(100, 0.01) init of onlineldavb so early
+    expectations are well scaled.
+    """
+    lam = jax.random.gamma(key, 100.0,
+                           (cfg.vocab_size, cfg.num_topics)) * 0.01
+    m = jnp.zeros_like(lam)
+    if incremental:
+        # incremental engines treat λ = β0 + ⟨m_vk⟩; initialise the
+        # accumulator so λ reproduces the random init exactly.
+        m = lam - cfg.beta0
+    return GlobalState(lam=lam, m_vk=m, t=jnp.zeros((), jnp.int32))
+
+
+def init_memo(cfg: LDAConfig, num_docs: int, max_unique: int) -> Memo:
+    return Memo(
+        pi=jnp.zeros((num_docs, max_unique, cfg.num_topics), jnp.float32),
+        visited=jnp.zeros((num_docs,), bool),
+    )

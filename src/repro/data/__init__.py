@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticSpec, make_corpus, PAPER_CORPORA
+from repro.data.bow import corpus_from_docs, pad_corpus
+from repro.data.uci import load_uci, save_uci

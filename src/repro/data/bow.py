@@ -1,0 +1,47 @@
+"""Bag-of-words utilities: ragged documents → padded unique-token layout."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Corpus
+
+
+def corpus_from_docs(docs: Sequence[np.ndarray], vocab_size: int,
+                     max_unique: int | None = None) -> Corpus:
+    """Build a padded Corpus from ragged arrays of token ids (with repeats)."""
+    uniq: List[Tuple[np.ndarray, np.ndarray]] = []
+    for doc in docs:
+        ids, cnts = np.unique(np.asarray(doc, dtype=np.int64),
+                              return_counts=True)
+        uniq.append((ids, cnts))
+    width = max((len(i) for i, _ in uniq), default=1)
+    if max_unique is not None:
+        width = min(width, max_unique)
+    width = max(width, 1)
+    d = len(uniq)
+    out_ids = np.zeros((d, width), np.int32)
+    out_cnt = np.zeros((d, width), np.float32)
+    for r, (ids, cnts) in enumerate(uniq):
+        if len(ids) > width:  # keep the most frequent tokens
+            top = np.argsort(-cnts)[:width]
+            ids, cnts = ids[top], cnts[top]
+        out_ids[r, : len(ids)] = ids
+        out_cnt[r, : len(ids)] = cnts
+    assert out_ids.max(initial=0) < vocab_size
+    return Corpus(jnp.asarray(out_ids), jnp.asarray(out_cnt))
+
+
+def pad_corpus(corpus: Corpus, num_docs: int) -> Corpus:
+    """Pad with empty documents so ``num_docs`` divides the batch grid."""
+    d = corpus.num_docs
+    if d >= num_docs:
+        return corpus
+    pad = num_docs - d
+    ids = jnp.concatenate(
+        [corpus.token_ids, jnp.zeros((pad, corpus.max_unique), jnp.int32)])
+    cnt = jnp.concatenate(
+        [corpus.counts, jnp.zeros((pad, corpus.max_unique), jnp.float32)])
+    return Corpus(ids, cnt)

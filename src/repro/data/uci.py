@@ -1,0 +1,74 @@
+"""UCI bag-of-words format loader (docword.txt / vocab.txt).
+
+The standard distribution format of the paper's corpora (NYT, Enron, ... on
+the UCI repository):
+
+    docword.txt:  D\n W\n NNZ\n  then lines "docID wordID count" (1-based)
+    vocab.txt:    one token per line (line i+1 = wordID i+1)
+
+`load_uci` returns (Corpus, vocab list). Files may be gzip-compressed.
+No network access is required — benchmarks/tests write synthetic files in
+this format to exercise the loader.
+"""
+from __future__ import annotations
+
+import gzip
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import Corpus
+from repro.data.bow import corpus_from_docs
+
+
+def _open(path: str):
+    return gzip.open(path, "rt") if path.endswith(".gz") else open(path)
+
+
+def load_uci(docword_path: str, vocab_path: Optional[str] = None,
+             max_docs: Optional[int] = None,
+             max_unique: Optional[int] = None) -> Tuple[Corpus, List[str]]:
+    """Parse UCI bag-of-words files into the padded Corpus layout."""
+    with _open(docword_path) as f:
+        d = int(f.readline())
+        w = int(f.readline())
+        nnz = int(f.readline())
+        n_docs = min(d, max_docs) if max_docs else d
+        ids: List[List[int]] = [[] for _ in range(n_docs)]
+        cnts: List[List[int]] = [[] for _ in range(n_docs)]
+        for line in f:
+            parts = line.split()
+            if len(parts) != 3:
+                continue
+            doc, word, cnt = int(parts[0]) - 1, int(parts[1]) - 1, int(parts[2])
+            if doc >= n_docs:
+                continue
+            ids[doc].append(word)
+            cnts[doc].append(cnt)
+    docs = [np.repeat(np.asarray(i, np.int64), np.asarray(c, np.int64))
+            for i, c in zip(ids, cnts)]
+    docs = [dd if len(dd) else np.zeros(1, np.int64) for dd in docs]
+    corpus = corpus_from_docs(docs, w, max_unique=max_unique)
+    vocab: List[str] = []
+    if vocab_path and os.path.exists(vocab_path):
+        with _open(vocab_path) as f:
+            vocab = [ln.strip() for ln in f]
+    return corpus, vocab
+
+
+def save_uci(corpus: Corpus, docword_path: str) -> None:
+    """Write a Corpus back out in UCI format (round-trip / interchange)."""
+    ids = np.asarray(corpus.token_ids)
+    cnt = np.asarray(corpus.counts).astype(np.int64)
+    rows = []
+    for d in range(ids.shape[0]):
+        live = cnt[d] > 0
+        for word, c in zip(ids[d][live], cnt[d][live]):
+            rows.append((d + 1, int(word) + 1, int(c)))
+    opener = gzip.open(docword_path, "wt") if docword_path.endswith(".gz") \
+        else open(docword_path, "w")
+    with opener as f:
+        f.write(f"{ids.shape[0]}\n{int(ids.max()) + 1}\n{len(rows)}\n")
+        for r in rows:
+            f.write(f"{r[0]} {r[1]} {r[2]}\n")

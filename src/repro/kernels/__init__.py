@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hotspot (the LDA E-step).
+
+Layout per repo convention: ``lda_estep.py`` holds the ``pl.pallas_call``
+kernels with explicit BlockSpec VMEM tiling, ``ops.py`` the jitted wrappers
+and ``ref.py`` the pure-jnp oracles.
+"""
+from repro.kernels import flash_attention, lda_estep, ops, ref

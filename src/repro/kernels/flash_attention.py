@@ -1,0 +1,108 @@
+"""Flash-attention Pallas TPU kernel (online-softmax tiling).
+
+The roofline table (EXPERIMENTS.md) shows the big dense archs
+(command-r-35b, gemma2-27b) compute-bound on attention-score FLOPs for the
+prefill/train shapes; this kernel is the TPU-native answer: q-block × kv-
+block tiling with running (max, sum) statistics in VMEM scratch so the
+(S, S) score matrix never leaves VMEM tiles.
+
+Grid: (batch·heads, q_blocks, kv_blocks) with the kv axis innermost —
+output blocks are revisited across kv steps and finalised on the last one.
+Causal masking skips fully-masked kv blocks via ``pl.when``. Matches the
+pure-jnp oracle (`ref.mha_ref`) to fp32 tolerance in interpret mode; on a
+real TPU the same code lowers to Mosaic.
+
+Sizing: bq=bk=128 tiles with hd ≤ 256 keep
+(q 128·hd + k/v 2·128·hd + scores 128·128 + acc 128·hd) ≈ 0.7 MB « VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(scale: float, causal: bool, num_kv: int, block_q: int,
+                  block_k: int,
+                  q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: kv block strictly after the q block is fully masked — skip
+    run = True
+    if causal:
+        run = kj * block_k <= (qi + 1) * block_q - 1
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        s = q @ k.T                                      # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = kj * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + p @ v_ref[0].astype(jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q, k, v: (BH, S, hd) — batch·heads flattened. Returns (BH, S, hd).
+
+    S must divide by the blocks (pad upstream); GQA callers repeat/flatten
+    heads before the call (see ops.flash_mha).
+    """
+    bh, s, hd = q.shape
+    block_q, block_k = min(block_q, s), min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    if scale is None:
+        scale = hd ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (bh, s // block_q, s // block_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale, causal, grid[2], block_q,
+                          block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

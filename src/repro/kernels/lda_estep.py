@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for the LDA E-step hotspot.
+
+Two kernels, both tiling the vocabulary dimension so that the topic matrix
+Eφ (V, K) streams HBM→VMEM once and the (B, V) intermediates (phinorm P and
+ratio R) live only in VMEM tile-by-tile:
+
+* ``estep_sweep``  — γ' = α₀ + Eθ ⊙ (R·Eφ),  R = C ⊘ (Eθ·Eφᵀ + ε)
+* ``sstats``       — S  = Eφ ⊙ (Rᵀ·Eθ)
+
+Tiling (DESIGN.md §7): B-tile × V-tile × K — K is padded to a multiple of
+128 by the wrapper (`ops.py`), V-tiles default to 512 and B-tiles to 128,
+so the per-step VMEM working set is
+
+    C (128·512) + Eφ (512·128) + Eθ/out (128·128)  ≈ 0.6 MB  « 16 MB VMEM
+
+and every matmul hits the MXU with ≥128 on both the lane and the
+contraction dimension. The reduction over V-tiles uses the classic
+revisited-output-block accumulator pattern (the V grid axis is innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
+
+
+# ---------------------------------------------------------------------------
+# γ-sweep kernel
+# ---------------------------------------------------------------------------
+
+def _sweep_kernel(alpha0: float, num_v_tiles: int,
+                  c_ref, et_ref, eb_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    et = et_ref[...]                                       # (bB, K)
+    eb = eb_ref[...]                                       # (bV, K)
+    p = jax.lax.dot_general(et, eb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) + _EPS
+    r = c_ref[...] / p                                     # (bB, bV)
+    out_ref[...] += jax.lax.dot(r, eb,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_v_tiles - 1)
+    def _fin():
+        out_ref[...] = alpha0 + et * out_ref[...]
+
+
+def estep_sweep(c: jax.Array, etheta: jax.Array, eb: jax.Array,
+                alpha0: float, *, block_b: int = 128, block_v: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """One fixed-point sweep γ' = α₀ + Eθ ⊙ ((C ⊘ Eθ·Eφᵀ)·Eφ).
+
+    Shapes: c (B, V), etheta (B, K), eb (V, K) → (B, K).
+    B, V, K must already be padded to the block grid (see ops.py).
+    """
+    b, v = c.shape
+    k = etheta.shape[1]
+    block_b, block_v = min(block_b, b), min(block_v, v)
+    assert b % block_b == 0 and v % block_v == 0, (b, v, block_b, block_v)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (b // block_b, v // block_v)
+    return pl.pallas_call(
+        functools.partial(_sweep_kernel, alpha0, grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_v, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(c, etheta, eb)
+
+
+# ---------------------------------------------------------------------------
+# sufficient-statistics kernel
+# ---------------------------------------------------------------------------
+
+def _sstats_kernel(num_b_tiles: int, c_ref, et_ref, eb_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    et = et_ref[...]                                       # (bB, K)
+    eb = eb_ref[...]                                       # (bV, K)
+    p = jax.lax.dot_general(et, eb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) + _EPS
+    r = c_ref[...] / p                                     # (bB, bV)
+    out_ref[...] += jax.lax.dot_general(
+        r, et, (((0,), (0,)), ((), ())),                   # Rᵀ·Eθ → (bV, K)
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_b_tiles - 1)
+    def _fin():
+        out_ref[...] *= eb
+
+
+def sstats(c: jax.Array, etheta: jax.Array, eb: jax.Array, *,
+           block_b: int = 128, block_v: int = 512,
+           interpret: bool | None = None) -> jax.Array:
+    """Expected topic-word counts S = Eφ ⊙ (Rᵀ·Eθ) → (V, K)."""
+    b, v = c.shape
+    k = etheta.shape[1]
+    block_b, block_v = min(block_b, b), min(block_v, v)
+    assert b % block_b == 0 and v % block_v == 0, (b, v, block_b, block_v)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (v // block_v, b // block_b)                    # B-axis innermost
+    return pl.pallas_call(
+        functools.partial(_sstats_kernel, grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, j: (j, i)),
+            pl.BlockSpec((block_b, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_v, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, k), jnp.float32),
+        interpret=interpret,
+    )(c, etheta, eb)

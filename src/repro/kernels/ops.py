@@ -1,0 +1,136 @@
+"""Jitted wrappers around the LDA Pallas kernels.
+
+``estep_pallas`` is a drop-in replacement for ``repro.core.estep.estep_dense``
+(select with ``LDAConfig(estep_backend="pallas")``): it pads (B, V, K) to the
+kernel block grid, runs the fixed point with the fused sweep kernel, and
+produces the same ``EStepResult`` (γ, token-aligned π, sufficient stats).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estep import EStepResult, densify
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.types import LDAConfig
+from repro.kernels import lda_estep
+from repro.kernels.flash_attention import flash_attention
+
+_EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_inputs(c: jax.Array, eb: jax.Array, block_b: int, block_v: int,
+               block_k: int = 128):
+    """Pad C (B,V) and Eφ (V,K) to the kernel grid.
+
+    Padding values keep the math exact: padded documents have zero counts
+    (contribute nothing), padded vocabulary rows of Eφ are 1.0 so their
+    phinorm contribution is harmless (their C is 0), padded topics get
+    Eφ = 0 so they never win responsibilities — and padded γ columns are
+    stripped before returning.
+    """
+    b, v = c.shape
+    k = eb.shape[1]
+    bp, vp, kp = (_round_up(b, block_b), _round_up(v, block_v),
+                  _round_up(k, block_k))
+    c = jnp.pad(c, ((0, bp - b), (0, vp - v)))
+    # padded vocab rows get Eφ = 1.0 (NOT 0: a zero row makes the phinorm
+    # P exactly 0 on that tile — the fp32 epsilon underflows — and C/P
+    # would be 0/0); their C is 0 so they contribute nothing either way.
+    eb = jnp.pad(eb, ((0, vp - v), (0, 0)), constant_values=1.0)
+    eb = jnp.pad(eb, ((0, 0), (0, kp - k)))       # padded topics stay 0
+    return c, eb, (b, v, k)
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_b", "block_v"))
+def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                 token_ids: jax.Array, counts: jax.Array,
+                 gamma0: Optional[jax.Array] = None, *,
+                 block_b: int = 128, block_v: int = 512) -> EStepResult:
+    """Full batched E-step using the Pallas kernels (dense formulation)."""
+    bsz = token_ids.shape[0]
+    v = exp_elog_beta.shape[0]
+    c = densify(token_ids, counts, v)
+    cpad, ebpad, (b, _, k) = pad_inputs(c, exp_elog_beta, block_b, block_v)
+    if gamma0 is None:
+        gamma0 = jnp.full((bsz, cfg.num_topics), cfg.alpha0 + 1.0, jnp.float32)
+    # pad γ topics with α₀ (they stay exactly α₀: padded Eφ column is zero)
+    gpad = jnp.pad(gamma0, ((0, cpad.shape[0] - b), (0, ebpad.shape[1] - k)),
+                   constant_values=cfg.alpha0)
+
+    def elog_theta_exp(g):
+        # digamma expectation over the *real* topics only; padded topics
+        # carry exactly α₀ and a zero Eφ column, set their Eθ to 0.
+        real = jnp.arange(g.shape[1]) < k
+        gm = jnp.where(real, g, 0.0)
+        s = gm.sum(-1, keepdims=True)
+        et = jnp.exp(jax.scipy.special.digamma(jnp.maximum(g, 1e-10))
+                     - jax.scipy.special.digamma(s))
+        return jnp.where(real, et, 0.0)
+
+    def cond(carry):
+        _, delta, it = carry
+        return jnp.logical_and(delta > cfg.estep_tol,
+                               it < cfg.estep_max_iters)
+
+    def body(carry):
+        g, _, it = carry
+        et = elog_theta_exp(g)
+        g_new = lda_estep.estep_sweep(cpad, et, ebpad, cfg.alpha0,
+                                      block_b=block_b, block_v=block_v)
+        real = jnp.arange(g.shape[1]) < k
+        g_new = jnp.where(real, g_new, cfg.alpha0)
+        delta = jnp.abs(g_new - g).mean()
+        return g_new, delta, it + 1
+
+    init = (gpad, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
+    gpad, _, iters = jax.lax.while_loop(cond, body, init)
+
+    et = elog_theta_exp(gpad)
+    spad = lda_estep.sstats(cpad, et, ebpad, block_b=block_b, block_v=block_v)
+    gamma = gpad[:bsz, :k]
+    sstats_out = spad[:v, :k]
+
+    # token-aligned π for the IVI memo (identical to estep_dense)
+    etheta = et[:bsz, :k]
+    ebg = exp_elog_beta[token_ids]
+    p_tok = jnp.einsum("bk,blk->bl", etheta, ebg) + _EPS
+    pi = etheta[:, None, :] * ebg / p_tok[:, :, None]
+    pi = jnp.where(counts[:, :, None] > 0, pi, 0.0)
+    return EStepResult(gamma=gamma, pi=pi, sstats=sstats_out, iters=iters)
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              scale: Optional[float] = None) -> jax.Array:
+    """GQA-aware wrapper: q (B, S, H, hd), k/v (B, S, KV, hd) → (B, S, H, hd).
+
+    Repeats KV heads to the query-head count, flattens (B, H) and pads S to
+    the 128-block grid before invoking the flash kernel.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    blk = 128 if s >= 128 else s
+    s_pad = ((s + blk - 1) // blk) * blk
+    qf, kf, vf = flat(q), flat(kf), flat(vf)
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        qf, kf, vf = jnp.pad(qf, pad), jnp.pad(kf, pad), jnp.pad(vf, pad)
+    out = flash_attention(qf, kf, vf, causal=causal, scale=scale,
+                          block_q=blk, block_k=blk)
+    out = out[:, :s].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return out

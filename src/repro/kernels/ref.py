@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the LDA Pallas kernels.
+
+The E-step hotspot in the dense TPU formulation (DESIGN.md §2 & §7):
+
+  P = Eθ · Eφᵀ              (B, V)   "phinorm"
+  R = C ⊘ (P + ε)           (B, V)
+  sweep:  γ' = α₀ + Eθ ⊙ (R · Eφ)            — one fixed-point iteration
+  sstats: S  = Eφ ⊙ (Rᵀ · Eθ)                — Σ_d cnt·π scattered to (V, K)
+
+Everything is two (B,V)×(V,K)-shaped MXU matmuls plus elementwise work;
+the kernels tile over V so Eφ streams HBM→VMEM exactly once per call and
+the (B, V) intermediates never materialise in HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
+
+
+def estep_sweep_ref(c: jax.Array, etheta: jax.Array, eb: jax.Array,
+                    alpha0: float) -> jax.Array:
+    """One dense fixed-point sweep: γ' (B, K)."""
+    p = etheta @ eb.T + _EPS                   # (B, V)
+    return alpha0 + etheta * ((c / p) @ eb)
+
+
+def sstats_ref(c: jax.Array, etheta: jax.Array, eb: jax.Array) -> jax.Array:
+    """Expected topic-word counts for the batch: S (V, K)."""
+    p = etheta @ eb.T + _EPS                   # (B, V)
+    return eb * ((c / p).T @ etheta)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+            scale: float | None = None) -> jax.Array:
+    """Oracle for the flash-attention kernel. q,k,v: (BH, S, hd)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)

@@ -1,0 +1,192 @@
+"""GQA self-attention: training (q-chunked causal) and KV-cache decode.
+
+Features required by the assigned architectures: grouped-query attention,
+rotary or no positions, sliding windows (gemma2 local layers and the
+long-context variant), attention-logit softcaps (gemma2), QK-RMSNorm
+(qwen3), QKV biases (qwen2/internvl), custom query scale (gemma2).
+
+Training attention is computed in query chunks (``cfg.attn_chunk``) with a
+``lax.scan`` so the (chunk, S) score tile is the only materialised score
+buffer — flash-attention-style memory behaviour in pure JAX/XLA. Decode uses
+a ring-buffer cache: ``slot_pos`` tracks the absolute position in each slot,
+which makes the sliding-window mask implicit (overwritten slots simply fall
+out of the window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_norm, rope, softcap, \
+    truncated_normal
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps padded rows NaN-free
+
+
+def attn_init(cfg: ModelConfig, key) -> Params:
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": truncated_normal(ks[0], (d, h, hd), d ** -0.5),
+        "wk": truncated_normal(ks[1], (d, kv, hd), d ** -0.5),
+        "wv": truncated_normal(ks[2], (d, kv, hd), d ** -0.5),
+        "wo": truncated_normal(ks[3], (h, hd, d), (h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd))
+        p["bk"] = jnp.zeros((kv, hd))
+        p["bv"] = jnp.zeros((kv, hd))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: Params, x: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dgk->btgk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms(q) * p["q_norm"].astype(dt)
+        k = _rms(k) * p["k_norm"].astype(dt)
+    return q, k, v
+
+
+def _rms(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+    return y.astype(x.dtype)
+
+
+def _scale(cfg: ModelConfig) -> float:
+    return (cfg.query_scale if cfg.query_scale is not None
+            else cfg.resolved_head_dim ** -0.5)
+
+
+# ---------------------------------------------------------------------------
+# training path — q-chunked causal attention
+# ---------------------------------------------------------------------------
+
+def attention_train(cfg: ModelConfig, p: Params, x: jax.Array,
+                    window: Optional[int] = None,
+                    positions: Optional[jax.Array] = None) -> jax.Array:
+    """Causal (optionally sliding-window) self-attention over full sequences.
+
+    x: (B, S, D) → (B, S, D). S must be divisible by cfg.attn_chunk (callers
+    pad); positions default to arange(S).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = h // kv
+    q, k, v = _qkv(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(s)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = q * _scale(cfg)
+
+    # pad queries to the chunk grid; padded rows are sliced off afterwards
+    # and padded keys are masked out by the causal test (their positions
+    # exceed every real query position).
+    c = min(cfg.attn_chunk, s)
+    s_pad = ((s + c - 1) // c) * c
+    kpos = jnp.broadcast_to(positions, (s,))
+    qpos_all = jnp.concatenate(
+        [kpos, kpos[-1] + 1 + jnp.arange(s_pad - s)]) if s_pad != s else kpos
+    qg = q.reshape(b, s, kv, rep, hd)
+    if s_pad != s:
+        qg = jnp.pad(qg, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+    nc = s_pad // c
+    qc = qg.reshape(b, nc, c, kv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    pc = qpos_all.reshape(nc, c)
+
+    # checkpointed: the (c, S) score tile is recomputed in the backward pass
+    # instead of being saved per chunk — flash-attention memory behaviour.
+    @jax.checkpoint
+    def chunk(_, inp):
+        qi, qpos = inp                                    # (B,c,kv,rep,hd),(c,)
+        logits = jnp.einsum("bqgrk,bsgk->bgrqs", qi, k)   # (B,kv,rep,c,S)
+        logits = softcap(logits, cfg.attn_logit_softcap)
+        mask = qpos[:, None] >= kpos[None, :]             # causal (c, S)
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None, None], logits.astype(jnp.float32),
+                           NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bgrqs,bsgk->bqgrk", w, v)       # (B,c,kv,rep,hd)
+        return None, out
+
+    _, outs = jax.lax.scan(chunk, None, (qc, pc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s_pad, h, hd)[:, :s]
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode path — ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, W, kv, hd) — rope already applied
+    v: jax.Array          # (B, W, kv, hd)
+    slot_pos: jax.Array   # (B, W) int32 absolute position per slot (−1 empty)
+
+
+def init_cache(cfg: ModelConfig, batch: int, window: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, window, kv, hd), dtype),
+        v=jnp.zeros((batch, window, kv, hd), dtype),
+        slot_pos=jnp.full((batch, window), -1, jnp.int32),
+    )
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                     cache: KVCache, pos: jax.Array,
+                     window: Optional[int] = None
+                     ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); pos: (B,) absolute positions.
+
+    The new token's K/V overwrite slot ``pos % W`` (ring). Attention runs
+    over the updated cache; masking = slot occupied ∧ (window if given).
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = h // kv
+    w_slots = cache.k.shape[1]
+
+    q, k, v = _qkv(cfg, p, x)                      # q (B,1,h,hd), k/v (B,1,kv,hd)
+    if cfg.use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    q = q * _scale(cfg)
+
+    slot = (pos % w_slots).astype(jnp.int32)       # (B,)
+    bidx = jnp.arange(b)
+    new_k = cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype))
+    new_sp = cache.slot_pos.at[bidx, slot].set(pos.astype(jnp.int32))
+
+    qg = q.reshape(b, kv, rep, hd)
+    logits = jnp.einsum("bgrk,bsgk->bgrs", qg, new_k.astype(q.dtype))
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    valid = new_sp >= 0                            # (B, W)
+    valid &= new_sp <= pos[:, None]
+    if window is not None:
+        valid &= new_sp > (pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits.astype(jnp.float32),
+                       NEG_INF)
+    wgt = jax.nn.softmax(logits, axis=-1).astype(new_v.dtype)
+    out = jnp.einsum("bgrs,bsgk->bgrk", wgt, new_v).reshape(b, 1, h, hd)
+    y = jnp.einsum("bthk,hkd->btd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return y, KVCache(new_k, new_v, new_sp)

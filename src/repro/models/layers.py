@@ -1,0 +1,102 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary/sinusoidal pos."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict
+
+
+def truncated_normal(key, shape, std: float, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * std
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.zeros((d,)) if cfg.norm == "rmsnorm_gemma"
+            else jnp.ones((d,))}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps)
+        w = (1.0 + p["scale"]) if cfg.norm == "rmsnorm_gemma" else p["scale"]
+        y = y * w
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+
+def mlp_init(cfg: ModelConfig, key, d: int, f: int,
+             gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": truncated_normal(ks[0], (d, f), d ** -0.5),
+         "w_down": truncated_normal(ks[1], (f, d), f ** -0.5)}
+    if gated:
+        p["w_gate"] = truncated_normal(ks[2], (d, f), d ** -0.5)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = x @ p["w_up"].astype(dt)
+    if "w_gate" in p:
+        h = _act(cfg, x @ p["w_gate"].astype(dt)) * h
+    else:
+        h = _act(cfg, h)
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., T, H, hd); positions: (T,) or (B, T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., T, half)
+    if ang.ndim == 2:                                          # (T, half)
+        ang = ang[None, :, None, :]                            # (1, T, 1, half)
+    else:                                                      # (B, T, half)
+        ang = ang[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = jnp.cos(ang).astype(x.dtype), jnp.sin(ang).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(T,) → (T, d) fixed sinusoidal table (musicgen)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

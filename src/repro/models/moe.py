@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with TPU-native expert parallelism.
+
+Dispatch scheme (DESIGN.md §5): activations are data-sharded and replicated
+over the ``model`` axis, experts are sharded over ``model``. Every model
+rank therefore already holds all of its data-shard's tokens; it sorts them
+by routed expert (stable argsort), slices the *contiguous* segment belonging
+to its local experts (one dynamic_slice, static capacity bound), runs the
+expert FFNs with ``jax.lax.ragged_dot`` (dropless up to the capacity bound),
+scatters back, and a single psum over ``model`` combines expert partial
+sums — the same collective a tensor-parallel dense FFN would need, with no
+all-to-all and no (tokens × experts × capacity) dispatch tensor.
+
+Paper tie-in (DESIGN.md §4): expert-load statistics are *expected counts*
+exactly like LDA's ⟨m_vk⟩. The layer returns per-expert counts; the training
+loop maintains them with the paper's incremental/decaying update (S-IVI
+eq. 5 applied to router counts) and they feed the load-balance loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, truncated_normal
+
+
+class MeshCtx(NamedTuple):
+    """Axis names for shard_map sub-regions (None → single-device math)."""
+
+    mesh: object                  # jax.sharding.Mesh
+    data_axes: Tuple[str, ...]    # e.g. ("pod", "data")
+    model_axis: str               # "model"
+    seq_shard: bool = False       # sequence-parallel residual stream (SP)
+
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": truncated_normal(ks[0], (d, e), d ** -0.5),
+        "w_gate": truncated_normal(ks[1], (e, d, f), d ** -0.5),
+        "w_up": truncated_normal(ks[2], (e, d, f), d ** -0.5),
+        "w_down": truncated_normal(ks[3], (e, f, d), f ** -0.5),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": truncated_normal(kk[0], (d, fs), d ** -0.5),
+            "w_up": truncated_normal(kk[1], (d, fs), d ** -0.5),
+            "w_down": truncated_normal(kk[2], (fs, d), fs ** -0.5),
+        }
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int, m_size: int) -> int:
+    """Static per-rank token-slot capacity."""
+    rows = n_tokens * cfg.num_experts_per_tok
+    cap = int(rows * cfg.moe_capacity_factor / m_size) + 8
+    cap = max(cap, 8 * cfg.num_experts_per_tok)
+    cap = min(cap, rows)
+    return ((cap + 7) // 8) * 8 if cap >= 8 else cap
+
+
+def moe_ffn_local(cfg: ModelConfig, p: Params, x: jax.Array,
+                  rank: jax.Array, m_size: int
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Routed-expert FFN for one model rank's expert shard.
+
+    x: (N, D) local tokens (replicated across model ranks);
+    p["w_*"]: local expert shard (E/m, D|F, F|D); p["router"]: replicated.
+    Returns the *partial* output (to be psum'd over model) and aux stats.
+    """
+    n, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    el = e // m_size
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # (N, k)
+    if cfg.norm_topk_prob:
+        top_p = top_p / (top_p.sum(-1, keepdims=True) + 1e-20)
+
+    e_flat = top_i.reshape(-1)                                  # (N·k,)
+    w_flat = top_p.reshape(-1)
+    order = jnp.argsort(e_flat)                                 # stable
+    counts = jnp.bincount(e_flat, length=e)                     # (E,)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)])             # (E+1,)
+
+    cap = _capacity(cfg, n, m_size)
+    lo = offsets[rank * el]
+    hi = offsets[rank * el + el]
+    # pad so the slice never clamps its start (dynamic_slice clamps when
+    # lo + cap > len, silently misaligning the group offsets); padded
+    # entries point at row 0 and are neutralised by the `live` mask below
+    order_padded = jnp.concatenate([order, jnp.zeros((cap,), order.dtype)])
+    seg_idx = jax.lax.dynamic_slice_in_dim(order_padded, lo, cap)  # (cap,)
+    seg_tok = seg_idx // k
+    xs = x[seg_tok]                                             # (cap, D)
+    ws = w_flat[seg_idx]                                        # (cap,)
+    live = jnp.arange(cap) < (hi - lo)                          # capacity mask
+
+    # group sizes for my experts, clipped to the slice and capacity
+    cum = jnp.clip(jax.lax.dynamic_slice_in_dim(offsets, rank * el, el + 1)
+                   - lo, 0, cap)
+    gs = jnp.diff(cum).astype(jnp.int32)
+    gs = gs.at[-1].add(cap - gs.sum())          # absorb padding rows
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["w_gate"].astype(dt), gs)) \
+        * jax.lax.ragged_dot(xs, p["w_up"].astype(dt), gs)
+    out_seg = jax.lax.ragged_dot(h, p["w_down"].astype(dt), gs)  # (cap, D)
+    out_seg = out_seg * (ws * live)[:, None].astype(dt)
+
+    y = jnp.zeros_like(x).at[seg_tok].add(out_seg)              # (N, D)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"].astype(dt)) * (x @ sp["w_up"].astype(dt))
+        y = y + hs @ sp["w_down"].astype(dt)
+
+    # router statistics: expected counts (the LDA ⟨m_vk⟩ analogue) + switch
+    # load-balance ingredients (batch fraction f_e, mean prob p_e)
+    aux = {
+        "counts": counts.astype(jnp.float32),
+        "lb_loss": e * jnp.sum((counts / (n * k)) * probs.mean(0)),
+        "dropped": jnp.maximum((hi - lo) - cap, 0).astype(jnp.float32),
+    }
+    return y, aux
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array,
+            ctx: Optional[MeshCtx]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) → (B, S, D). Caller wraps in shard_map when ctx given;
+    here ctx only tells us the model-axis name for rank/psum."""
+    b, s, d = x.shape
+    flat = x.reshape(-1, d)
+    if ctx is None:
+        y, aux = moe_ffn_local(cfg, p, flat, jnp.asarray(0, jnp.int32), 1)
+    else:
+        m_size = ctx.mesh.shape[ctx.model_axis]
+        rank = jax.lax.axis_index(ctx.model_axis)
+        y, aux = moe_ffn_local(cfg, p, flat, rank, m_size)
+        y = jax.lax.psum(y, ctx.model_axis)
+        aux = {k2: jax.lax.psum(v, ctx.model_axis) / m_size
+               for k2, v in aux.items()}
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,590 @@
+"""Recurrent blocks: Mamba2 (SSD), xLSTM mLSTM / sLSTM.
+
+One chunked scalar-decay linear-recurrence core serves both Mamba2 and the
+mLSTM: both obey
+
+    S_t = a_t · S_{t−1} + i_t · k_t ⊗ v_t          (state (N, P) per head)
+    y_t = q_t · S_t  [ / normalizer for mLSTM ]
+
+with per-step scalar decay a_t. Mamba2 is the unstabilised case
+(a = exp(Δ·A) ∈ (0,1), i = Δ folded into v); the mLSTM uses an exponential
+input gate and therefore carries the xLSTM stabiliser m with the state.
+Training runs chunk-parallel (intra-chunk (L,L) matmuls on the MXU,
+inter-chunk lax.scan) — the TPU-native adaptation of the CUDA scan kernels
+(DESIGN.md §2); decode is the O(1) recurrence.
+
+The sLSTM has a true hidden-to-hidden recurrence (block-diagonal R), so its
+training path is an honest lax.scan over time — the xLSTM paper accelerates
+it with a fused CUDA kernel; on TPU it stays sequential (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_norm, truncated_normal
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked scalar-decay linear recurrence (shared core)
+# ---------------------------------------------------------------------------
+
+class RecurrentState(NamedTuple):
+    c: jax.Array        # (B, H, N, P) (stabilised for mLSTM)
+    n: jax.Array        # (B, H, N) normaliser (zeros when unused)
+    m: jax.Array        # (B, H) stabiliser (zeros when unused)
+
+
+def init_state(b: int, h: int, n: int, p: int,
+               dtype=jnp.float32) -> RecurrentState:
+    return RecurrentState(jnp.zeros((b, h, n, p), dtype),
+                          jnp.zeros((b, h, n), dtype),
+                          jnp.zeros((b, h), dtype))
+
+
+def chunked_scan(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array,
+                 log_i: Optional[jax.Array], state: RecurrentState,
+                 chunk: int, stabilize: bool
+                 ) -> Tuple[jax.Array, RecurrentState]:
+    """Chunk-parallel linear recurrence.
+
+    q, k: (B, T, H, N); v: (B, T, H, P); log_a, log_i: (B, T, H).
+    Returns y (B, T, H, P) and the final state. T must divide by ``chunk``.
+    """
+    b, t, h, n = q.shape
+    p = v.shape[-1]
+    L = min(chunk, t)
+    assert t % L == 0, (t, L)
+    nc = t // L
+
+    def to_chunks(x, feat):
+        x = x.reshape((b, nc, L, h) + ((feat,) if feat else ()))
+        return jnp.moveaxis(x, 3, 2)            # (B, nc, H, L[, feat])
+
+    qc, kc, vc = to_chunks(q, n), to_chunks(k, n), to_chunks(v, p)
+    lac = to_chunks(log_a, 0)
+    lic = to_chunks(log_i, 0) if log_i is not None else jnp.zeros_like(lac)
+    qc, kc, vc, lac, lic = (jnp.moveaxis(x, 1, 0)
+                            for x in (qc, kc, vc, lac, lic))  # (nc, B, H, ...)
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]       # j ≥ i
+
+    def body(carry: RecurrentState, inp):
+        qi, ki, vi, la, li = inp                # (B,H,L,N/P), (B,H,L)
+        laf = la.astype(jnp.float32)
+        lif = li.astype(jnp.float32)
+        f = jnp.cumsum(laf, axis=-1)            # F_j (B,H,L)
+        # decay from step i to j (i ≤ j): F_j − F_i + li_i
+        g = f[..., :, None] - f[..., None, :] + lif[..., None, :]
+        g = jnp.where(causal, g, NEG_INF)       # (B,H,L,L)
+        binit = f + carry.m[..., None]          # init-state decay (B,H,L)
+        if stabilize:
+            mj = jnp.maximum(g.max(-1), binit)  # (B,H,L)
+        else:
+            mj = jnp.zeros_like(binit)
+        w = jnp.exp(g - mj[..., None])          # (B,H,L,L)
+        scores = jnp.einsum("bhjn,bhin->bhji", qi, ki)
+        ws = jnp.where(causal, w * scores.astype(jnp.float32), 0.0)
+        num = jnp.einsum("bhji,bhip->bhjp", ws.astype(vi.dtype), vi)
+        einit = jnp.exp(binit - mj)             # (B,H,L)
+        num = num + einit[..., None].astype(vi.dtype) * jnp.einsum(
+            "bhjn,bhnp->bhjp", qi, carry.c.astype(qi.dtype))
+        if stabilize:
+            den = ws.sum(-1) + einit * jnp.einsum(
+                "bhjn,bhn->bhj", qi, carry.n.astype(qi.dtype)
+            ).astype(jnp.float32)
+            den = jnp.maximum(jnp.abs(den), jnp.exp(-mj)) + 1e-6
+            y = num / den[..., None].astype(num.dtype)
+        else:
+            y = num
+        # ---- state update -------------------------------------------------
+        ftot = f[..., -1]                       # F_L (B,H)
+        gstate = ftot[..., None] - f + lif      # F_L − F_i + li_i (B,H,L)
+        bstate = ftot + carry.m                 # F_L + m_prev (B,H)
+        if stabilize:
+            mnew = jnp.maximum(gstate.max(-1), bstate)
+        else:
+            mnew = jnp.zeros_like(bstate)
+        wst = jnp.exp(gstate - mnew[..., None])  # (B,H,L)
+        est = jnp.exp(bstate - mnew)
+        c_new = (est[..., None, None] * carry.c.astype(jnp.float32)
+                 + jnp.einsum("bhl,bhln,bhlp->bhnp", wst,
+                              ki.astype(jnp.float32), vi.astype(jnp.float32)))
+        n_new = (est[..., None] * carry.n
+                 + jnp.einsum("bhl,bhln->bhn", wst, ki.astype(jnp.float32)))
+        return RecurrentState(c_new, n_new, mnew), y
+
+    final, ys = jax.lax.scan(body, state, (qc, kc, vc, lac, lic))
+    y = jnp.moveaxis(ys, 0, 1)                  # (B, nc, H, L, P)
+    y = jnp.moveaxis(y, 2, 3).reshape(b, t, h, p)
+    return y, final
+
+
+def recurrence_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                    log_a: jax.Array, log_i: Optional[jax.Array],
+                    state: RecurrentState, stabilize: bool
+                    ) -> Tuple[jax.Array, RecurrentState]:
+    """Single-token decode step. q, k: (B, H, N); v: (B, H, P); gates (B, H)."""
+    laf = log_a.astype(jnp.float32)
+    lif = (log_i if log_i is not None else jnp.zeros_like(log_a)
+           ).astype(jnp.float32)
+    if stabilize:
+        mnew = jnp.maximum(laf + state.m, lif)
+    else:
+        mnew = jnp.zeros_like(laf)
+    fz = jnp.exp(laf + state.m - mnew)          # (B, H)
+    iz = jnp.exp(lif - mnew)
+    c = (fz[..., None, None] * state.c
+         + iz[..., None, None] * jnp.einsum("bhn,bhp->bhnp",
+                                            k.astype(jnp.float32),
+                                            v.astype(jnp.float32)))
+    nvec = fz[..., None] * state.n + iz[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), c)
+    if stabilize:
+        den = jnp.einsum("bhn,bhn->bh", q.astype(jnp.float32), nvec)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-mnew)) + 1e-6
+        y = num / den[..., None]
+    else:
+        y = num
+    return y.astype(v.dtype), RecurrentState(c, nvec, mnew)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (+ decode ring state)
+# ---------------------------------------------------------------------------
+
+def conv1d_train(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, T, C); w: (K, C) depthwise causal; returns (B, T, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    t = x.shape[1]
+    out = sum(xp[:, i:i + t] * w[i] for i in range(k))
+    return out + b
+
+
+def conv1d_step(x: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, C); conv_state: (B, K−1, C) of previous inputs (oldest first).
+
+    Compute in the activation dtype; the returned state keeps the cache
+    dtype so scan carries stay type-stable.
+    """
+    full = jnp.concatenate([conv_state.astype(x.dtype), x[:, None]], axis=1)
+    y = jnp.einsum("bkc,kc->bc", full, w) + b
+    return y, full[:, 1:].astype(conv_state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state
+
+
+def mamba2_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    d_in, nh, ns = mamba2_dims(cfg)
+    conv_c = d_in + 2 * ns
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * d_in + 2 * ns + nh),
+                                    d ** -0.5),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_conv, conv_c), 0.2),
+        "conv_b": jnp.zeros((conv_c,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,)),
+        "norm_scale": jnp.ones((d_in,)),
+        "out_proj": truncated_normal(ks[3], (d_in, d), d_in ** -0.5),
+    }
+
+
+class Mamba2Cache(NamedTuple):
+    conv: jax.Array          # (B, K−1, d_in + 2N)
+    ssm: RecurrentState
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int) -> Mamba2Cache:
+    d_in, nh, ns = mamba2_dims(cfg)
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * ns)),
+        ssm=init_state(batch, nh, ns, cfg.ssm_head_dim))
+
+
+def _mamba2_pre(cfg: ModelConfig, p: Params, zxbcdt: jax.Array):
+    """Split in_proj output; returns (z, xbc, dt)."""
+    d_in, nh, ns = mamba2_dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * ns], axis=-1)
+    return z, xbc, dt
+
+
+def _mamba2_core(cfg: ModelConfig, p: Params, xbc: jax.Array,
+                 dt: jax.Array):
+    """Common post-conv math: split conv output and build SSD operands."""
+    d_in, nh, ns = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (..., nh)
+    a = -jnp.exp(p["a_log"])                                      # (nh,)
+    log_a = dt * a                                                # (..., nh)
+    return xs, bmat, cmat, dt, log_a
+
+
+def mamba2_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, T, D) → (B, T, D)."""
+    b, t, d = x.shape
+    d_in, nh, ns = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _mamba2_pre(cfg, p, zxbcdt)
+    xbc = jax.nn.silu(conv1d_train(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xs, bmat, cmat, dtf, log_a = _mamba2_core(cfg, p, xbc, dt)
+    xh = xs.reshape(b, t, nh, hd)
+    v = xh * dtf[..., None].astype(xh.dtype)                  # fold Δ into v
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, t, nh, ns))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, t, nh, ns))
+    y, _ = chunked_scan(q, k, v, log_a, None,
+                        init_state(b, nh, ns, hd), cfg.chunk_size,
+                        stabilize=False)
+    y = y + p["d_skip"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, t, d_in)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_step(cfg: ModelConfig, p: Params, x: jax.Array,
+                cache: Mamba2Cache) -> Tuple[jax.Array, Mamba2Cache]:
+    """x: (B, 1, D) single-token decode."""
+    b = x.shape[0]
+    d_in, nh, ns = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _mamba2_pre(cfg, p, zxbcdt)
+    xbc, conv = conv1d_step(xbc, cache.conv, p["conv_w"].astype(x.dtype),
+                            p["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat, dtf, log_a = _mamba2_core(cfg, p, xbc, dt)
+    xh = xs.reshape(b, nh, hd)
+    v = xh * dtf[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(bmat[:, None, :], (b, nh, ns))
+    q = jnp.broadcast_to(cmat[:, None, :], (b, nh, ns))
+    y, ssm = recurrence_step(q, k, v, log_a, None, cache.ssm,
+                             stabilize=False)
+    y = y + p["d_skip"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(b, 1, d_in)
+    y = _gated_rmsnorm(y, z[:, None], p["norm_scale"])
+    return y @ p["out_proj"].astype(x.dtype), Mamba2Cache(conv, ssm)
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    out = gf * jax.lax.rsqrt((gf ** 2).mean(-1, keepdims=True) + eps)
+    return (out * scale).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = 2 * cfg.d_model            # proj_factor = 2
+    heads = cfg.num_heads
+    return d_in, heads, d_in // heads
+
+
+def mlstm_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    d_in, h, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_up": truncated_normal(ks[0], (d, 2 * d_in), d ** -0.5),
+        "conv_w": truncated_normal(ks[1], (4, d_in), 0.2),
+        "conv_b": jnp.zeros((d_in,)),
+        "wq": truncated_normal(ks[2], (d_in, d_in), d_in ** -0.5),
+        "wk": truncated_normal(ks[3], (d_in, d_in), d_in ** -0.5),
+        "w_gates": truncated_normal(ks[4], (d_in, 2 * h), d_in ** -0.5),
+        "b_gates": jnp.concatenate([jnp.zeros((h,)),           # input gate
+                                    jnp.linspace(3.0, 6.0, h)]),  # forget
+        "skip": jnp.ones((d_in,)),
+        "norm_scale": jnp.ones((d_in,)),
+        "w_down": truncated_normal(ks[5], (d_in, d), d_in ** -0.5),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    conv: jax.Array           # (B, 3, d_in)
+    cell: RecurrentState
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    d_in, h, hd = mlstm_dims(cfg)
+    return MLSTMCache(conv=jnp.zeros((batch, 3, d_in)),
+                      cell=init_state(batch, h, hd, hd))
+
+
+def _mlstm_qkvg(cfg: ModelConfig, p: Params, xi: jax.Array, xc: jax.Array):
+    """xi: pre-conv branch, xc: post-conv. Returns q,k,v,(log_f, log_i)."""
+    d_in, h, hd = mlstm_dims(cfg)
+    shp = xi.shape[:-1]
+    q = (xc @ p["wq"].astype(xc.dtype)).reshape(shp + (h, hd)) * hd ** -0.5
+    k = (xc @ p["wk"].astype(xc.dtype)).reshape(shp + (h, hd)) * hd ** -0.5
+    v = xi.reshape(shp + (h, hd))
+    gates = xi @ p["w_gates"].astype(xi.dtype) + p["b_gates"].astype(xi.dtype)
+    log_i, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, log_f, log_i
+
+
+def mlstm_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, t, d = x.shape
+    d_in, h, hd = mlstm_dims(cfg)
+    up = x @ p["w_up"].astype(x.dtype)
+    xi, zg = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(conv1d_train(xi, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype)))
+    q, k, v, log_f, log_i = _mlstm_qkvg(cfg, p, xi, xc)
+    y, _ = chunked_scan(q, k, v, log_f, log_i, init_state(b, h, hd, hd),
+                        cfg.chunk_size, stabilize=True)
+    y = _headwise_rmsnorm(y, p["norm_scale"]).reshape(b, t, d_in)
+    y = y + p["skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(zg)
+    return y @ p["w_down"].astype(x.dtype)
+
+
+def mlstm_step(cfg: ModelConfig, p: Params, x: jax.Array,
+               cache: MLSTMCache) -> Tuple[jax.Array, MLSTMCache]:
+    b = x.shape[0]
+    d_in, h, hd = mlstm_dims(cfg)
+    up = x[:, 0] @ p["w_up"].astype(x.dtype)
+    xi, zg = jnp.split(up, 2, axis=-1)
+    xc, conv = conv1d_step(xi, cache.conv, p["conv_w"].astype(x.dtype),
+                           p["conv_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    q, k, v, log_f, log_i = _mlstm_qkvg(cfg, p, xi, xc)
+    y, cell = recurrence_step(q, k, v, log_f, log_i, cache.cell,
+                              stabilize=True)
+    y = _headwise_rmsnorm(y[:, None], p["norm_scale"])[:, 0]
+    y = y.reshape(b, d_in) + p["skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(zg)
+    return (y @ p["w_down"].astype(x.dtype))[:, None], MLSTMCache(conv, cell)
+
+
+def _headwise_rmsnorm(y: jax.Array, scale: jax.Array,
+                      eps: float = 1e-6) -> jax.Array:
+    """y: (..., H, hd) — RMS per head, then flatten and scale."""
+    yf = y.astype(jnp.float32)
+    yn = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + eps)
+    flat = yn.reshape(y.shape[:-2] + (-1,))
+    return (flat * scale).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM fused-sequence cell with custom VJP
+# ---------------------------------------------------------------------------
+#
+# A naive jax.grad through the time scan reduces the recurrent-weight
+# gradient dR across the (sharded) batch at EVERY timestep — T×L all-reduces
+# of |R| bytes dominate the xlstm roofline (§Perf xlstm iterations 1–2).
+# This custom VJP does what fused CUDA LSTM kernels do: the forward scan
+# saves per-step activations, the backward scan only propagates (gc, gn, gh)
+# and emits per-step gate deltas; dR and the input cotangents are then ONE
+# time-batched einsum outside the scan — a single gradient reduction.
+# The stabiliser m is treated as a constant in the backward pass (standard
+# for xLSTM: gradients do not flow through max-stabilisers).
+
+from functools import partial as _partial
+
+
+def _slstm_gates(r, wxb, xc, h, state, heads):
+    """Shared forward-step math. Returns new state + residuals."""
+    b, d = h.shape
+    hd = d // heads
+    c, n, m = state
+    hh = h.reshape(b, heads, hd)
+    rz, ri, rf, ro = (jnp.einsum("bhj,hjk->bhk", hh, r[g]).reshape(b, d)
+                      for g in range(4))
+    zr, ir, fr, orr = jnp.split(wxb, 4, axis=-1)
+    z = jnp.tanh(zr + rz)
+    log_i = ir + xc + ri
+    pre_f = fr + xc + rf
+    log_f = jax.nn.log_sigmoid(pre_f)
+    sig_f = jnp.exp(log_f)
+    o = jax.nn.sigmoid(orr + ro)
+    m_new = jnp.maximum(log_f + m, log_i)
+    iz = jnp.exp(log_i - m_new)
+    fz = jnp.exp(log_f + m - m_new)
+    c_new = fz * c + iz * z
+    n_new = fz * n + iz
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), (z, iz, fz, o, sig_f)
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(0,))
+def slstm_seq(heads: int, r, wxb, xc):
+    """hs (B,T,D) from pre-activations wxb (B,T,4D) + conv branch xc (B,T,D).
+
+    All in float32 (caller casts); r: (4, H, hd, hd).
+    """
+    hs, _ = _slstm_seq_fwd(heads, r, wxb, xc)
+    return hs
+
+
+def _slstm_seq_fwd(heads, r, wxb, xc):
+    b, t, d4 = wxb.shape
+    d = d4 // 4
+
+    def step(carry, inp):
+        c, n, m, h = carry
+        wxb_t, xc_t = inp
+        (c, n, m, h), res = _slstm_gates(r, wxb_t, xc_t, h, (c, n, m), heads)
+        return (c, n, m, h), (h, c, n) + res
+
+    z0 = jnp.zeros((b, d), jnp.float32)
+    _, ys = jax.lax.scan(step, (z0, z0, z0, z0),
+                         (jnp.moveaxis(wxb, 1, 0), jnp.moveaxis(xc, 1, 0)))
+    h_seq, c_seq, n_seq, z, iz, fz, o, sig_f = ys      # each (T, B, D)
+    hs = jnp.moveaxis(h_seq, 0, 1)
+    return hs, (r, h_seq, c_seq, n_seq, z, iz, fz, o, sig_f)
+
+
+def _slstm_seq_bwd(heads, res, ghs):
+    r, h_seq, c_seq, n_seq, z, iz, fz, o, sig_f = res
+    t, b, d = h_seq.shape
+    hd = d // heads
+    # shifted (t−1) sequences; step 0 sees the zero initial state
+    shift = lambda x: jnp.concatenate([jnp.zeros((1, b, d), x.dtype), x[:-1]])
+    h_prev, c_prev, n_prev = shift(h_seq), shift(c_seq), shift(n_seq)
+    gh_out = jnp.moveaxis(ghs.astype(jnp.float32), 1, 0)   # (T, B, D)
+
+    def step(carry, inp):
+        gc, gn, gh_rec = carry
+        (gho, cp, np_, ct, nt, zt, izt, fzt, ot, sft) = inp
+        gh = gho + gh_rec
+        nhat = jnp.maximum(nt, 1e-6)
+        do = gh * ct / nhat
+        dc = gc + gh * ot / nhat
+        dn = gn - jnp.where(nt >= 1e-6, gh * ot * ct / (nhat * nhat), 0.0)
+        dz = dc * izt
+        dlog_i = (dc * zt + dn) * izt
+        dlog_f = (dc * cp + dn * np_) * fzt
+        gc_prev = dc * fzt
+        gn_prev = dn * fzt
+        d_z = dz * (1.0 - zt * zt)
+        d_i = dlog_i
+        d_f = dlog_f * (1.0 - sft)
+        d_o = do * ot * (1.0 - ot)
+        # recurrent cotangent: δg · R_gᵀ per head
+        def back(delta, rg):
+            dh = delta.reshape(b, heads, hd)
+            return jnp.einsum("bhk,hjk->bhj", dh, rg).reshape(b, d)
+        gh_prev = (back(d_z, r[0]) + back(d_i, r[1])
+                   + back(d_f, r[2]) + back(d_o, r[3]))
+        return (gc_prev, gn_prev, gh_prev), (d_z, d_i, d_f, d_o)
+
+    init = (jnp.zeros((b, d)), jnp.zeros((b, d)), jnp.zeros((b, d)))
+    _, deltas = jax.lax.scan(
+        step, init,
+        (gh_out, c_prev, n_prev, c_seq, n_seq, z, iz, fz, o, sig_f),
+        reverse=True)
+    d_z, d_i, d_f, d_o = deltas                         # (T, B, D) each
+    # ONE time-batched weight-gradient einsum per gate (single reduction)
+    hp = h_prev.reshape(t, b, heads, hd)
+
+    def dr(delta):
+        return jnp.einsum("tbhj,tbhk->hjk", hp, delta.reshape(t, b, heads, hd))
+
+    d_r = jnp.stack([dr(d_z), dr(d_i), dr(d_f), dr(d_o)])
+    d_wxb = jnp.moveaxis(jnp.concatenate([d_z, d_i, d_f, d_o], -1), 0, 1)
+    d_xc = jnp.moveaxis(d_i + d_f, 0, 1)
+    return d_r, d_wxb, d_xc
+
+
+slstm_seq.defvjp(_slstm_seq_fwd, _slstm_seq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — honest sequential scan
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    f_up = int(d * 4 / 3)
+    ks = jax.random.split(key, 4)
+    return {
+        "conv_w": truncated_normal(ks[0], (4, d), 0.2),
+        "conv_b": jnp.zeros((d,)),
+        "w_in": truncated_normal(ks[1], (d, 4 * d), d ** -0.5),   # z,i,f,o
+        "r": truncated_normal(ks[2], (4, h, hd, hd), hd ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.repeat(jnp.linspace(3.0, 6.0, h), hd),
+                              jnp.zeros((d,))]),
+        "norm_scale": jnp.ones((d,)),
+        "w_up": truncated_normal(ks[3], (d, f_up), d ** -0.5),
+        "w_down": truncated_normal(jax.random.fold_in(key, 9), (f_up, d),
+                                   f_up ** -0.5),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    conv: jax.Array        # (B, 3, D)
+    c: jax.Array           # (B, D)
+    n: jax.Array           # (B, D)
+    h: jax.Array           # (B, D)
+    m: jax.Array           # (B, D)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d))
+    return SLSTMCache(conv=jnp.zeros((batch, 3, d)), c=z, n=z, h=z, m=z)
+
+
+def slstm_train(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, t, d = x.shape
+    xc = jax.nn.silu(conv1d_train(x, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype)))
+    wxb = x @ p["w_in"].astype(x.dtype) + p["b"].astype(x.dtype)
+    y = slstm_seq(cfg.num_heads, p["r"].astype(jnp.float32),
+                  wxb.astype(jnp.float32), xc.astype(jnp.float32))
+    y = y.astype(x.dtype)                                    # (B, T, D)
+    y = _headwise_rmsnorm(y.reshape(b, t, cfg.num_heads, -1),
+                          p["norm_scale"])
+    y = jax.nn.gelu(y @ p["w_up"].astype(x.dtype))
+    return y @ p["w_down"].astype(x.dtype)
+
+
+def slstm_step(cfg: ModelConfig, p: Params, x: jax.Array,
+               cache: SLSTMCache) -> Tuple[jax.Array, SLSTMCache]:
+    b = x.shape[0]
+    xt = x[:, 0]
+    xc, conv = conv1d_step(xt, cache.conv, p["conv_w"].astype(x.dtype),
+                           p["conv_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    wxb = xt @ p["w_in"].astype(x.dtype) + p["b"].astype(x.dtype)
+    (c, n, m, hid), _ = _slstm_gates(
+        p["r"].astype(jnp.float32), wxb.astype(jnp.float32),
+        xc.astype(jnp.float32), cache.h, (cache.c, cache.n, cache.m),
+        cfg.num_heads)
+    y = _headwise_rmsnorm(hid.astype(x.dtype).reshape(b, 1, cfg.num_heads, -1),
+                          p["norm_scale"])[:, 0]
+    y = jax.nn.gelu(y @ p["w_up"].astype(x.dtype))
+    y = y @ p["w_down"].astype(x.dtype)
+    return y[:, None], SLSTMCache(conv, c, n, hid, m)

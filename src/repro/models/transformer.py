@@ -1,0 +1,522 @@
+"""Generic decoder assembly for all assigned architectures.
+
+The per-layer ``layer_pattern`` is segmented into *stages*: maximal
+``(cycle, reps)`` chunks where the same cycle of block kinds repeats.
+Parameters of a stage are stacked on a leading ``reps`` dim and applied with
+``lax.scan`` — compile time scales with the number of distinct stages
+(≤ 3 for every assigned arch), not with depth.
+
+Supports: training forward (full sequence), single-token decode with
+per-layer caches (KV ring buffers / recurrent states), MoE blocks via
+shard_map islands (see ``repro.models.moe``), the zamba2 shared attention
+block (one parameter set applied at many depths), VLM patch-embedding
+prefixes and MusicGen multi-codebook embedding/readout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_PARALLEL, MAMBA2,
+                                MAMBA2_SHARED, MLSTM, MOE, SLSTM,
+                                ModelConfig, effective_window)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models.layers import (Params, apply_mlp, apply_norm, mlp_init,
+                                 norm_init, rope, sinusoidal, softcap,
+                                 truncated_normal)
+from repro.models.moe import MeshCtx
+
+AuxDict = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# pattern segmentation
+# ---------------------------------------------------------------------------
+
+def segment_pattern(pattern: Sequence[str],
+                    max_cycle: int = 8) -> List[Tuple[Tuple[str, ...], int]]:
+    """Greedy left-to-right factorisation into (cycle, reps) stages."""
+    segs: List[Tuple[Tuple[str, ...], int]] = []
+    i, L = 0, len(pattern)
+    while i < L:
+        best_p, best_r = 1, 1
+        for p in range(1, max_cycle + 1):
+            if i + p > L:
+                break
+            r = 1
+            while (i + p * (r + 1) <= L
+                   and tuple(pattern[i + p * r: i + p * (r + 1)])
+                   == tuple(pattern[i: i + p])):
+                r += 1
+            # only multi-layer cycles that actually repeat are worth a
+            # stage; otherwise emit single layers (keeps stacked params
+            # homogeneous instead of bundling unrelated kinds)
+            if r >= 2 and p * r > best_p * best_r:
+                best_p, best_r = p, r
+        segs.append((tuple(pattern[i: i + best_p]), best_r))
+        i += best_p * best_r
+    # merge adjacent single-kind stages of the same kind
+    merged: List[Tuple[Tuple[str, ...], int]] = []
+    for cyc, reps in segs:
+        if merged and merged[-1][0] == cyc:
+            merged[-1] = (cyc, merged[-1][1] + reps)
+        else:
+            merged.append((cyc, reps))
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _attn_layer_init(cfg: ModelConfig, key, moe: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": norm_init(cfg, cfg.d_model),
+                 "attn": attn_mod.attn_init(cfg, ks[0]),
+                 "norm2": norm_init(cfg, cfg.d_model)}
+    if moe:
+        p["moe"] = moe_mod.moe_init(cfg, ks[1])
+    else:
+        p["mlp"] = mlp_init(cfg, ks[1], cfg.d_model,
+                            cfg.dense_d_ff or cfg.d_ff, gated=cfg.mlp_gated)
+    if cfg.post_block_norm:
+        p["norm1_post"] = norm_init(cfg, cfg.d_model)
+        p["norm2_post"] = norm_init(cfg, cfg.d_model)
+    return p
+
+
+def layer_init(cfg: ModelConfig, kind: str, key) -> Params:
+    if kind in (ATTN, ATTN_LOCAL):
+        return _attn_layer_init(cfg, key, moe=False)
+    if kind == MOE:
+        return _attn_layer_init(cfg, key, moe=True)
+    if kind == ATTN_PARALLEL:
+        ks = jax.random.split(key, 2)
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "attn": attn_mod.attn_init(cfg, ks[0]),
+                "mlp": mlp_init(cfg, ks[1], cfg.d_model, cfg.d_ff,
+                                gated=cfg.mlp_gated)}
+    if kind in (MAMBA2, MAMBA2_SHARED):
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "mamba": rec_mod.mamba2_init(cfg, key)}
+    if kind == MLSTM:
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "cell": rec_mod.mlstm_init(cfg, key)}
+    if kind == SLSTM:
+        return {"norm": norm_init(cfg, cfg.d_model),
+                "cell": rec_mod.slstm_init(cfg, key)}
+    raise ValueError(kind)
+
+
+def shared_attn_init(cfg: ModelConfig, key) -> Params:
+    """Zamba2 shared block: consumes concat(x, emb0) (2D → D) then attn+MLP."""
+    ks = jax.random.split(key, 3)
+    return {"norm_in": norm_init(cfg, 2 * cfg.d_model),
+            "in_proj": truncated_normal(ks[0], (2 * cfg.d_model, cfg.d_model),
+                                        (2 * cfg.d_model) ** -0.5),
+            "attn": attn_mod.attn_init(cfg, ks[1]),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "mlp": mlp_init(cfg, ks[2], cfg.d_model, cfg.d_ff)}
+
+
+def _zero_aux(cfg: ModelConfig) -> AuxDict:
+    return {"lb_loss": jnp.zeros(()),
+            "counts": jnp.zeros((max(cfg.num_experts, 1),)),
+            "dropped": jnp.zeros(())}
+
+
+def _acc_aux(a: AuxDict, b: AuxDict) -> AuxDict:
+    return {k: a[k] + b[k] for k in a}
+
+
+def _moe_block(cfg: ModelConfig, p: Params, x: jax.Array,
+               ctx: Optional[MeshCtx]) -> Tuple[jax.Array, AuxDict]:
+    if ctx is None:
+        return moe_mod.moe_ffn(cfg, p, x, None)
+    especs = {"router": P(None, None),
+              "w_gate": P("model", None, None),
+              "w_up": P("model", None, None),
+              "w_down": P("model", None, None)}
+    if cfg.num_shared_experts:
+        especs["shared"] = {"w_gate": P(None, "model"),
+                            "w_up": P(None, "model"),
+                            "w_down": P("model", None)}
+    n_data = 1
+    for a in ctx.data_axes:
+        n_data *= ctx.mesh.shape[a]
+    # B=1 decode (long-context) cannot shard the token batch over the data
+    # axes: replicate it instead (each data rank redundantly computes the
+    # single token — negligible — and no data-psum is needed).
+    data_sharded = x.shape[0] % n_data == 0
+    dp = P(ctx.data_axes, None, None) if data_sharded else P(None, None, None)
+
+    def inner(pp, xx):
+        y, aux = moe_mod.moe_ffn(cfg, pp, xx, ctx)
+        if data_sharded:
+            # reduce stats over data so outputs are fully replicated scalars
+            aux = {"lb_loss": jax.lax.psum(aux["lb_loss"],
+                                           ctx.data_axes) / n_data,
+                   "counts": jax.lax.psum(aux["counts"], ctx.data_axes),
+                   "dropped": jax.lax.psum(aux["dropped"], ctx.data_axes)}
+        return y, aux
+
+    fn = jax.shard_map(inner, mesh=ctx.mesh, in_specs=(especs, dp),
+                       out_specs=(dp, P()), check_vma=False)
+    return fn(p, x)
+
+
+def apply_layer(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                emb0: Optional[jax.Array], shared: Optional[Params],
+                ctx: Optional[MeshCtx],
+                positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, AuxDict]:
+    """Training-time application of one block. x: (B, S, D)."""
+    aux = _zero_aux(cfg)
+    if kind in (ATTN, ATTN_LOCAL, MOE):
+        window = effective_window(cfg, kind)
+        h = attn_mod.attention_train(cfg, p["attn"],
+                                     apply_norm(cfg, p["norm1"], x),
+                                     window=window, positions=positions)
+        if cfg.post_block_norm:
+            h = apply_norm(cfg, p["norm1_post"], h)
+        x = x + h
+        hin = apply_norm(cfg, p["norm2"], x)
+        if kind == MOE:
+            h, aux = _moe_block(cfg, p["moe"], hin, ctx)
+        else:
+            h = apply_mlp(cfg, p["mlp"], hin)
+        if cfg.post_block_norm:
+            h = apply_norm(cfg, p["norm2_post"], h)
+        return x + h, aux
+    if kind == ATTN_PARALLEL:
+        n = apply_norm(cfg, p["norm"], x)
+        return (x + attn_mod.attention_train(
+                    cfg, p["attn"], n, window=effective_window(cfg, kind),
+                    positions=positions)
+                + apply_mlp(cfg, p["mlp"], n)), aux
+    if kind in (MAMBA2, MAMBA2_SHARED):
+        x = x + rec_mod.mamba2_train(cfg, p["mamba"],
+                                     apply_norm(cfg, p["norm"], x))
+        if kind == MAMBA2_SHARED:
+            assert shared is not None and emb0 is not None
+            cat = jnp.concatenate([x, emb0], axis=-1)
+            h = apply_norm(cfg, shared["norm_in"], cat) \
+                @ shared["in_proj"].astype(x.dtype)
+            x = x + attn_mod.attention_train(cfg, shared["attn"], h,
+                                             positions=positions)
+            x = x + apply_mlp(cfg, shared["mlp"],
+                              apply_norm(cfg, shared["norm2"], x))
+        return x, aux
+    if kind == MLSTM:
+        return x + rec_mod.mlstm_train(cfg, p["cell"],
+                                       apply_norm(cfg, p["norm"], x)), aux
+    if kind == SLSTM:
+        return x + rec_mod.slstm_train(cfg, p["cell"],
+                                       apply_norm(cfg, p["norm"], x)), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    stages = segment_pattern(cfg.pattern)
+    ks = jax.random.split(key, len(stages) + 4)
+    params: Params = {}
+    d, v = cfg.d_model, cfg.vocab_size
+    if cfg.modality == "audio":
+        params["embed"] = truncated_normal(ks[0], (cfg.num_codebooks, v, d),
+                                           d ** -0.5)
+        params["heads"] = truncated_normal(ks[1], (cfg.num_codebooks, d, v),
+                                           d ** -0.5)
+    else:
+        params["embed"] = truncated_normal(ks[0], (v, d), d ** -0.5)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal(ks[1], (d, v), d ** -0.5)
+    params["final_norm"] = norm_init(cfg, d)
+    if MAMBA2_SHARED in cfg.pattern:
+        params["shared_attn"] = shared_attn_init(cfg, ks[2])
+
+    stage_params = []
+    for si, (cycle, reps) in enumerate(stages):
+        rep_keys = jax.random.split(ks[3 + si], reps)
+        per_pos = []
+        for pos, kind in enumerate(cycle):
+            plist = [layer_init(cfg, kind, jax.random.fold_in(rk, pos))
+                     for rk in rep_keys]
+            per_pos.append(jax.tree.map(lambda *xs: jnp.stack(xs), *plist))
+        stage_params.append(tuple(per_pos))
+    params["stages"] = tuple(stage_params)
+    return params
+
+
+def stage_layout(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    return segment_pattern(cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+           dtype) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B, S, D), positions (S,))."""
+    tokens = batch["tokens"]
+    if cfg.modality == "audio":
+        # tokens: (B, S, C) — sum the codebook embeddings
+        emb = params["embed"].astype(dtype)                  # (C, V, D)
+        x = sum(emb[c][tokens[..., c]] for c in range(cfg.num_codebooks))
+    else:
+        x = params["embed"].astype(dtype)[tokens]            # (B, S, D)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if cfg.modality == "vision" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    if not cfg.use_rope and cfg.modality == "audio":
+        x = x + sinusoidal(positions, cfg.d_model).astype(dtype)[None]
+    return x, positions
+
+
+def _readout(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.modality == "audio":
+        logits = jnp.einsum("bsd,cdv->bscv", x, params["heads"].astype(dt))
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    else:
+        logits = x @ params["lm_head"].astype(dt)
+    logits = logits * cfg.logit_scale
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params,
+                   batch: Dict[str, jax.Array],
+                   ctx: Optional[MeshCtx] = None
+                   ) -> Tuple[jax.Array, AuxDict]:
+    """Full-sequence forward up to (but not including) the readout."""
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions = _embed(cfg, params, batch, dtype)
+    x = _shard(x, ctx, P(None, None, None), batch_axes=True)
+    emb0 = x if MAMBA2_SHARED in cfg.pattern else None
+    shared = params.get("shared_attn")
+    aux = _zero_aux(cfg)
+    stages = stage_layout(cfg)
+    for (cycle, reps), sp in zip(stages, params["stages"]):
+        def body(carry, xs):
+            xx, ax = carry
+            for i, kind in enumerate(cycle):
+                xx, ai = apply_layer(cfg, kind, xs[i], xx, emb0, shared, ctx,
+                                     positions)
+                ax = _acc_aux(ax, ai)
+            xx = _shard(xx, ctx, P(None, None, None), batch_axes=True)
+            return (xx, ax), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), sp)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            ctx: Optional[MeshCtx] = None) -> Tuple[jax.Array, AuxDict]:
+    """Full-sequence forward. Returns (logits, aux)."""
+    x, aux = forward_hidden(cfg, params, batch, ctx)
+    return _readout(cfg, params, x), aux
+
+
+def _shard(x: jax.Array, ctx: Optional[MeshCtx], spec: P,
+           batch_axes: bool = False, force_rep: bool = False):
+    if ctx is None:
+        return x
+    if batch_axes:
+        if not force_rep and ctx.seq_shard and x.ndim == 3 \
+                and x.shape[1] > 1 \
+                and x.shape[1] % ctx.mesh.shape[ctx.model_axis] == 0:
+            # sequence parallelism: the residual stream (and thus every
+            # scan-saved remat carry) is S-sharded over the model axis
+            spec = P(ctx.data_axes, ctx.model_axis, None)
+        else:
+            spec = P(ctx.data_axes, *spec[1:])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            ctx: Optional[MeshCtx] = None, lb_coef: float = 0.01,
+            loss_chunk: int = 1024) -> Tuple[jax.Array, AuxDict]:
+    """Next-token cross entropy (labels pre-shifted; −1 = masked).
+
+    The readout + softmax is computed in sequence chunks under
+    ``jax.checkpoint`` so the (B, S, V) fp32 logits are never materialised —
+    for 150k–256k vocabularies that one buffer would otherwise dominate HBM.
+    """
+    hidden, aux = forward_hidden(cfg, params, batch, ctx)
+    labels = batch["labels"]
+    b, s = hidden.shape[:2]
+    c = min(loss_chunk, s)
+    s_pad = ((s + c - 1) // c) * c
+    if s_pad != s:
+        hidden = jnp.pad(hidden, ((0, 0), (0, s_pad - s)) + ((0, 0),))
+        pad_lab = ((0, 0), (0, s_pad - s)) + ((0, 0),) * (labels.ndim - 2)
+        labels = jnp.pad(labels, pad_lab, constant_values=-1)
+    nc = s_pad // c
+    hs = jnp.moveaxis(hidden.reshape(b, nc, c, -1), 1, 0)
+    ls = jnp.moveaxis(labels.reshape((b, nc, c) + labels.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def chunk_ce(carry, inp):
+        h, lab = inp
+        logits = _readout(cfg, params, h)
+        m = (lab >= 0).astype(jnp.float32)
+        lb = jnp.maximum(lab, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + (nll * m).sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_ce, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    n_moe = sum(1 for k in cfg.pattern if k == MOE)
+    total = ce + (lb_coef * aux["lb_loss"] / max(n_moe, 1) if n_moe else 0.0)
+    metrics = {"loss": total, "ce": ce, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch_size: int, cache_len: int,
+                dtype=jnp.bfloat16) -> Tuple:
+    """Per-stage caches mirroring params['stages'] (leading reps dim)."""
+    def one(kind, window):
+        if kind in (ATTN, ATTN_LOCAL, ATTN_PARALLEL, MOE):
+            w = effective_window(cfg, kind)
+            return attn_mod.init_cache(cfg, batch_size,
+                                       min(w or cache_len, cache_len), dtype)
+        if kind == MAMBA2:
+            return rec_mod.mamba2_init_cache(cfg, batch_size)
+        if kind == MAMBA2_SHARED:
+            return (rec_mod.mamba2_init_cache(cfg, batch_size),
+                    attn_mod.init_cache(cfg, batch_size, cache_len, dtype))
+        if kind == MLSTM:
+            return rec_mod.mlstm_init_cache(cfg, batch_size)
+        if kind == SLSTM:
+            return rec_mod.slstm_init_cache(cfg, batch_size)
+        raise ValueError(kind)
+
+    caches = []
+    for cycle, reps in stage_layout(cfg):
+        per_pos = []
+        for kind in cycle:
+            c = one(kind, cfg.sliding_window)
+            per_pos.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), c))
+        caches.append(tuple(per_pos))
+    return tuple(caches)
+
+
+def apply_layer_decode(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                       cache, pos: jax.Array, emb0, shared,
+                       ctx: Optional[MeshCtx]):
+    """x: (B, 1, D); pos: (B,) absolute positions."""
+    if kind in (ATTN, ATTN_LOCAL, ATTN_PARALLEL, MOE):
+        window = effective_window(cfg, kind)
+        if kind == ATTN_PARALLEL:
+            n = apply_norm(cfg, p["norm"], x)
+            h, cache = attn_mod.attention_decode(cfg, p["attn"], n, cache,
+                                                 pos, window)
+            return x + h + apply_mlp(cfg, p["mlp"], n), cache
+        h, cache = attn_mod.attention_decode(
+            cfg, p["attn"], apply_norm(cfg, p["norm1"], x), cache, pos,
+            window)
+        if cfg.post_block_norm:
+            h = apply_norm(cfg, p["norm1_post"], h)
+        x = x + h
+        hin = apply_norm(cfg, p["norm2"], x)
+        if kind == MOE:
+            h, _ = _moe_block(cfg, p["moe"], hin, ctx)
+        else:
+            h = apply_mlp(cfg, p["mlp"], hin)
+        if cfg.post_block_norm:
+            h = apply_norm(cfg, p["norm2_post"], h)
+        return x + h, cache
+    if kind in (MAMBA2, MAMBA2_SHARED):
+        mcache = cache[0] if kind == MAMBA2_SHARED else cache
+        h, mcache = rec_mod.mamba2_step(cfg, p["mamba"],
+                                        apply_norm(cfg, p["norm"], x), mcache)
+        x = x + h
+        if kind == MAMBA2_SHARED:
+            cat = jnp.concatenate([x, emb0], axis=-1)
+            hin = apply_norm(cfg, shared["norm_in"], cat) \
+                @ shared["in_proj"].astype(x.dtype)
+            h, acache = attn_mod.attention_decode(cfg, shared["attn"], hin,
+                                                  cache[1], pos, None)
+            x = x + h
+            x = x + apply_mlp(cfg, shared["mlp"],
+                              apply_norm(cfg, shared["norm2"], x))
+            return x, (mcache, acache)
+        return x, mcache
+    if kind == MLSTM:
+        h, cache = rec_mod.mlstm_step(cfg, p["cell"],
+                                      apply_norm(cfg, p["norm"], x), cache)
+        return x + h, cache
+    if kind == SLSTM:
+        h, cache = rec_mod.slstm_step(cfg, p["cell"],
+                                      apply_norm(cfg, p["norm"], x), cache)
+        return x + h, cache
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params: Params, caches,
+                tokens: jax.Array, pos: jax.Array,
+                ctx: Optional[MeshCtx] = None):
+    """One-token decode. tokens: (B,) (or (B, C) audio); pos: (B,).
+
+    Returns (logits (B, V) or (B, C, V), new caches).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.modality == "audio":
+        emb = params["embed"].astype(dtype)
+        x = sum(emb[c][tokens[:, c]] for c in range(cfg.num_codebooks))
+        x = x[:, None]
+    else:
+        x = params["embed"].astype(dtype)[tokens][:, None]   # (B, 1, D)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if not cfg.use_rope and cfg.modality == "audio":
+        x = x + jax.vmap(lambda p_: sinusoidal(p_[None], cfg.d_model)[0]
+                         )(pos).astype(dtype)[:, None]
+    x = _shard(x, ctx, P(None, None, None), batch_axes=True)
+    emb0 = x if MAMBA2_SHARED in cfg.pattern else None
+    shared = params.get("shared_attn")
+
+    new_caches = []
+    for (cycle, reps), sp, sc in zip(stage_layout(cfg), params["stages"],
+                                     caches):
+        def body(xx, xs):
+            pp, cc = xs
+            ncs = []
+            for i, kind in enumerate(cycle):
+                xx, nc = apply_layer_decode(cfg, kind, pp[i], xx, cc[i], pos,
+                                            emb0, shared, ctx)
+                ncs.append(nc)
+            return xx, tuple(ncs)
+        x, nc = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(nc)
+    logits = _readout(cfg, params, x)[:, 0]
+    return logits, tuple(new_caches)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd, iag,
+                                    apply_updates, clip_by_global_norm,
+                                    cosine_schedule)

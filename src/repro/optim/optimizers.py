@@ -1,0 +1,126 @@
+"""Optimizers (no external deps): AdamW, SGD, and IAG.
+
+IAG — *incremental aggregate gradient* — is the paper's mechanism lifted to
+gradient training (DESIGN.md §4): like IVI memoizes per-document statistics
+and updates the global accumulator by subtract-old/add-new, IAG memoizes the
+last gradient of each data shard and keeps the aggregate gradient exact:
+
+    G ← G − g_shard_old + g_shard_new ;   θ ← θ − η · G / S
+
+(Le Roux et al. 2012's SAG; the paper itself notes S-IVI ≈ SAG.) Memory is
+one gradient copy per shard, exactly analogous to IVI's O(K·N) memo.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params) → (upd, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** c), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** c), v)
+        step = lr_fn(c)
+        upd = jax.tree.map(
+            lambda mm, vv, p: -step * (mm / (jnp.sqrt(vv) + eps)
+                                       + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return upd, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        upd = jax.tree.map(lambda m: -lr_fn(c) * m, mu)
+        return upd, {"mu": mu, "count": c}
+
+    return Optimizer(init, update)
+
+
+def iag(lr, num_shards: int) -> Optimizer:
+    """Incremental aggregate gradient (SAG). ``update`` needs ``shard=`` id.
+
+    State holds the per-shard gradient memory (num_shards, ...) and the
+    aggregate; each call replaces one shard's memoized gradient — the exact
+    subtract-old/add-new bookkeeping of IVI eq. (4), applied to gradients.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "memo": jax.tree.map(
+                lambda p: jnp.zeros((num_shards,) + p.shape, jnp.float32),
+                params),
+            "agg": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params),
+            "seen": jnp.zeros((num_shards,), bool),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, *, shard):
+        c = state["count"] + 1
+        old = jax.tree.map(lambda m: m[shard], state["memo"])
+        agg = jax.tree.map(lambda a, g, o: a + g.astype(jnp.float32) - o,
+                           state["agg"], grads, old)
+        memo = jax.tree.map(lambda m, g: m.at[shard].set(g.astype(jnp.float32)),
+                            state["memo"], grads)
+        seen = state["seen"].at[shard].set(True)
+        denom = jnp.maximum(seen.sum().astype(jnp.float32), 1.0)
+        upd = jax.tree.map(lambda a: -lr_fn(c) * a / denom, agg)
+        return upd, {"memo": memo, "agg": agg, "seen": seen, "count": c}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (param_specs, batch_specs, cache_specs,
+                                  named, fsdp_axes)

@@ -1,0 +1,239 @@
+"""Partition-spec rules: parameter paths → PartitionSpec on (pod,data,model).
+
+Strategy (DESIGN.md §5):
+* ``model`` axis — tensor/expert parallel: attention heads, FFN hidden,
+  expert dim, vocab dim of embeddings/heads.
+* ``fsdp`` = the data axes (("pod","data") or ("data",)) — fully-sharded
+  parameters on the *other* matrix dim; XLA all-gathers per layer inside the
+  scan, which is what keeps 27B/35B models inside a v5e's HBM.
+* every axis is applied **only when the dim is divisible** by the mesh axis
+  size — archs with 2/4/8 KV heads simply replicate those dims over
+  ``model`` instead of failing to lower.
+
+Stage parameters are stacked (reps, ...); the leading dim is always
+replicated (it is scanned over).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Return ``axes`` if dim divides evenly over them, else None."""
+    if isinstance(mesh, _NoModel) and (axes == "model"
+                                       or (not isinstance(axes, str)
+                                           and axes and "model" in axes)):
+        return None
+    return axes if axes and dim % _axis_size(mesh, axes) == 0 else None
+
+
+class _NoModel:
+    """Mesh proxy that vetoes the model axis (fsdp_only profile)."""
+
+    def __init__(self, mesh: Mesh):
+        self._mesh = mesh
+
+    @property
+    def shape(self):
+        return self._mesh.shape
+
+    @property
+    def axis_names(self):
+        return self._mesh.axis_names
+
+
+def _leaf_spec(mesh: Mesh, path: Tuple[str, ...], shape: Tuple[int, ...],
+               lead: int, use_model: bool = True) -> P:
+    """Spec for one parameter; ``lead`` = number of stacked leading dims."""
+    fs = fsdp_axes(mesh)
+    if not use_model:
+        # fsdp_only profile: tensor parallelism off — model axis becomes a
+        # second pure-data axis (params replicated across it, batch over it)
+        mesh = _NoModel(mesh)
+    name = path[-1]
+    parents = set(path)
+    core = shape[lead:]
+    nd = len(core)
+
+    def spec(*axes):
+        return P(*([None] * lead), *axes)
+
+    if name == "embed":
+        if nd == 3:   # audio (C, V, D)
+            return spec(None, _fit(mesh, core[1], "model"),
+                        _fit(mesh, core[2], fs))
+        return spec(_fit(mesh, core[0], "model"), _fit(mesh, core[1], fs))
+    if name == "lm_head":
+        return spec(_fit(mesh, core[0], fs), _fit(mesh, core[1], "model"))
+    if name == "heads":   # audio (C, D, V)
+        return spec(None, _fit(mesh, core[1], fs),
+                    _fit(mesh, core[2], "model"))
+    if name in ("wq", "wk", "wv"):
+        if nd == 3:                      # attention (D, H, hd)
+            return spec(_fit(mesh, core[0], fs),
+                        _fit(mesh, core[1], "model"), None)
+        return spec(None, _fit(mesh, core[1], "model"))   # mLSTM (di, di)
+    if name == "wo":                     # (H, hd, D)
+        return spec(_fit(mesh, core[0], "model"), None,
+                    _fit(mesh, core[2], fs))
+    if name in ("bq", "bk", "bv"):       # (H, hd)
+        return spec(_fit(mesh, core[0], "model"), None)
+    if "moe" in parents and name == "router":
+        return spec(_fit(mesh, core[0], fs), None)
+    if "moe" in parents and name in ("w_gate", "w_up", "w_down") \
+            and nd == 3:                 # experts (E, D|F, F|D)
+        return spec(_fit(mesh, core[0], "model"), _fit(mesh, core[1], fs),
+                    None)
+    if name in ("w_gate", "w_up", "w_in"):   # (D, F)
+        return spec(_fit(mesh, core[0], fs), _fit(mesh, core[1], "model"))
+    if name == "w_down":                 # (F, D)
+        return spec(_fit(mesh, core[0], "model"), _fit(mesh, core[1], fs))
+    if name == "in_proj":                # (D|2D, X)
+        return spec(_fit(mesh, core[0], fs), _fit(mesh, core[1], "model"))
+    if name == "out_proj":               # (d_in, D)
+        return spec(_fit(mesh, core[0], "model"), _fit(mesh, core[1], fs))
+    if name == "conv_w":                 # (K, C)
+        return spec(None, _fit(mesh, core[1], "model"))
+    if name in ("conv_b", "norm_scale", "skip"):
+        return spec(_fit(mesh, core[0], "model"))
+    if name == "w_gates":                # mLSTM (d_in, 2H)
+        return spec(_fit(mesh, core[0], "model"), None)
+    if name in ("dt_bias", "a_log", "d_skip"):
+        return spec(_fit(mesh, core[0], "model"))
+    if name == "r":                      # sLSTM (4, H, hd, hd)
+        # shard the output head_dim: the per-timestep gradient all-reduce
+        # of dR (inside the recurrence scan) then moves only 1/model of the
+        # bytes per device (§Perf xlstm iteration 2)
+        return spec(None, _fit(mesh, core[1], "model"), None,
+                    _fit(mesh, core[3], "model")
+                    if not _fit(mesh, core[1], "model") else None)
+    # norms, biases, small vectors: replicated
+    return spec(*([None] * nd))
+
+
+def _lead_dims(path) -> int:
+    """Stage params are nested under (..., 'stages', i, j): stacked reps dim.
+
+    Works for raw params and for optimizer-state trees that mirror them
+    (e.g. ('m', 'stages', ...)).
+    """
+    return 1 if "stages" in path[:-1] else 0
+
+
+def _walk(mesh: Mesh, tree, path: Tuple, use_model: bool) -> Any:
+    if isinstance(tree, dict):
+        return {k: _walk(mesh, v, path + (k,), use_model)
+                for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(_walk(mesh, v, path + (str(i),), use_model)
+                          for i, v in enumerate(tree))
+    # leaf: ShapeDtypeStruct or array
+    strpath = tuple(p for p in path if not p.isdigit())
+    return _leaf_spec(mesh, strpath, tree.shape, _lead_dims(path), use_model)
+
+
+def param_specs(mesh: Mesh, params_shapes, profile: str = "tp_fsdp") -> Any:
+    """PartitionSpec pytree matching ``params_shapes`` (from eval_shape).
+
+    ``profile``: "tp_fsdp" (default) shards over model+fsdp; "fsdp_only"
+    drops tensor parallelism (small models where per-layer TP all-reduce
+    dwarfs compute — §Perf hillclimb lever).
+    """
+    return _walk(mesh, params_shapes, (), profile != "fsdp_only")
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, shape: InputShape,
+                train: bool) -> Dict[str, P]:
+    """Input shardings: batch over the data axes when divisible."""
+    fs = fsdp_axes(mesh)
+    bdim = _fit(mesh, shape.global_batch, fs)
+    if train or shape.kind == "prefill":
+        specs = {"tokens": P(bdim, None) if cfg.modality != "audio"
+                 else P(bdim, None, None)}
+        if cfg.modality == "vision":
+            specs["vision_embeds"] = P(bdim, None, None)
+        if train:
+            specs["labels"] = (P(bdim, None) if cfg.modality != "audio"
+                               else P(bdim, None, None))
+        return specs
+    # decode: tokens (B,) (+ (B,C) audio), pos (B,)
+    return {"tokens": P(bdim) if cfg.modality != "audio" else P(bdim, None),
+            "pos": P(bdim)}
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, caches) -> Any:
+    """Shard caches.
+
+    * batch dim (index 1, after the stacked reps dim) over the data axes;
+    * KV-cache tensors (reps, B, W, kv, hd): KV heads over ``model`` when
+      divisible, otherwise the cache length W is sharded over ``model`` —
+      MHA archs (musicgen kv=24, command-r kv=8) would otherwise replicate
+      the entire cache on all 16 model ranks;
+    * batch==1 (long-context): the cache length takes the data axes too.
+    """
+    from repro.models.attention import KVCache
+
+    fs = fsdp_axes(mesh)
+
+    def default_leaf(x):
+        shp = x.shape
+        if len(shp) < 2:
+            return P(*([None] * len(shp)))
+        baxis = _fit(mesh, shp[1], fs)
+        rest = [None] * (len(shp) - 2)
+        if baxis is None and len(shp) >= 3 and _fit(mesh, shp[2], fs):
+            rest[0] = fs
+        return P(None, baxis, *rest)
+
+    def kv_cache(c: KVCache):
+        reps, b, w, kv, hd = c.k.shape
+        baxis = _fit(mesh, b, fs)
+        waxes = []
+        if baxis is None and _fit(mesh, w, fs):
+            waxes.append(fs)
+        if not _fit(mesh, kv, "model"):
+            waxes.append("model")
+        kvaxis = "model" if _fit(mesh, kv, "model") else None
+        wspec = tuple(a for ws in waxes for a in
+                      ((ws,) if isinstance(ws, str) else ws)) or None
+        if wspec is not None and w % _axis_size(mesh, wspec) != 0:
+            wspec = None
+        kspec = P(None, baxis, wspec, kvaxis, None)
+        return KVCache(k=kspec, v=kspec, slot_pos=P(None, baxis, wspec))
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            return kv_cache(node)
+        if isinstance(node, tuple) and not hasattr(node, "_fields"):
+            return tuple(walk(v) for v in node)
+        if hasattr(node, "_fields"):    # other NamedTuple caches
+            return type(node)(*(walk(v) for v in node))
+        return default_leaf(node)
+
+    return walk(caches)

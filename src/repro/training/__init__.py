@@ -1,0 +1,2 @@
+from repro.training.steps import (make_train_step, make_serve_step,
+                                  make_prefill_step, TrainState)

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: tests run on the single host CPU device —
+XLA_FLAGS device-count forcing is reserved for launch/dryrun.py and the
+subprocess-based distribution tests."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    from repro.data import PAPER_CORPORA, make_corpus
+    spec = PAPER_CORPORA["tiny"]
+    return (make_corpus(spec, split="train", seed=0),
+            make_corpus(spec, split="test", seed=0), spec)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

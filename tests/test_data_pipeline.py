@@ -1,0 +1,90 @@
+"""Data pipeline: BOW construction, synthetic corpus statistics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import PAPER_CORPORA, corpus_from_docs, make_corpus, \
+    pad_corpus
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_corpus_from_docs_preserves_counts(seed):
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, 50, size=rng.integers(1, 30))
+            for _ in range(12)]
+    corpus = corpus_from_docs(docs, 50)
+    for i, doc in enumerate(docs):
+        want = np.bincount(doc, minlength=50).astype(np.float32)
+        got = np.zeros(50, np.float32)
+        ids = np.asarray(corpus.token_ids[i])
+        cnt = np.asarray(corpus.counts[i])
+        np.add.at(got, ids, cnt)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_unique_token_layout():
+    corpus = corpus_from_docs([np.array([3, 3, 3, 7])], 10)
+    ids = np.asarray(corpus.token_ids[0])
+    cnt = np.asarray(corpus.counts[0])
+    live = cnt > 0
+    assert len(np.unique(ids[live])) == live.sum()   # no duplicate slots
+    assert cnt.sum() == 4
+
+
+def test_pad_corpus():
+    corpus = corpus_from_docs([np.array([1, 2]), np.array([3])], 10)
+    padded = pad_corpus(corpus, 5)
+    assert padded.num_docs == 5
+    assert float(padded.counts[2:].sum()) == 0.0
+    assert float(padded.num_words) == float(corpus.num_words)
+
+
+def test_synthetic_matches_table1_statistics():
+    spec = PAPER_CORPORA["ap"]
+    corpus = make_corpus(spec, split="train", seed=0, scale=0.2)
+    lens = np.asarray(corpus.counts.sum(-1))
+    # mean length within 15% of the paper's Table 1
+    assert abs(lens.mean() - spec.mean_len) / spec.mean_len < 0.15
+    assert int(np.asarray(corpus.token_ids).max()) < spec.vocab_size
+
+
+def test_train_test_share_topics():
+    """Same ground-truth φ generates both splits → a model trained on train
+    must transfer to test (checked indirectly: vocab overlap is high)."""
+    spec = PAPER_CORPORA["tiny"]
+    tr = make_corpus(spec, split="train", seed=0)
+    te = make_corpus(spec, split="test", seed=0)
+    vtr = set(np.asarray(tr.token_ids)[np.asarray(tr.counts) > 0].tolist())
+    vte = set(np.asarray(te.token_ids)[np.asarray(te.counts) > 0].tolist())
+    inter = len(vtr & vte) / max(len(vte), 1)
+    assert inter > 0.6, inter
+
+
+def test_uci_roundtrip(tmp_path):
+    """save_uci → load_uci reproduces the corpus counts exactly."""
+    import os
+    from repro.data import load_uci, save_uci
+    spec = PAPER_CORPORA["tiny"]
+    corpus = make_corpus(spec, split="train", seed=0)
+    path = os.path.join(tmp_path, "docword.txt.gz")
+    save_uci(corpus, path)
+    loaded, vocab = load_uci(path)
+    a = np.zeros((corpus.num_docs, spec.vocab_size))
+    b = np.zeros_like(a)
+    for c, out in ((corpus, a), (loaded, b)):
+        ids, cnt = np.asarray(c.token_ids), np.asarray(c.counts)
+        for d in range(ids.shape[0]):
+            np.add.at(out[d], ids[d], cnt[d])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_uci_max_docs(tmp_path):
+    import os
+    from repro.data import load_uci, save_uci
+    spec = PAPER_CORPORA["tiny"]
+    corpus = make_corpus(spec, split="train", seed=0)
+    path = os.path.join(tmp_path, "docword.txt")
+    save_uci(corpus, path)
+    loaded, _ = load_uci(path, max_docs=10)
+    assert loaded.num_docs == 10

@@ -1,0 +1,122 @@
+"""D-IVI distribution semantics.
+
+Single-device tests use the vmap worker simulation; the production
+shard_map path is validated in a subprocess with 8 forced host devices
+(bit-exact agreement with the simulation is the acceptance criterion).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, log_predictive, split_heldout
+from repro.data import PAPER_CORPORA, make_corpus
+from repro.dist import DIVIConfig, DIVIEngine
+
+
+def _data():
+    spec = PAPER_CORPORA["tiny"]
+    return (make_corpus(spec, split="train", seed=0),
+            make_corpus(spec, split="test", seed=0), spec)
+
+
+def test_divi_single_worker_matches_sivi_quality():
+    train, test, spec = _data()
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=40)
+    obs, held = split_heldout(test)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=1, batch_size=16), train,
+                     seed=0)
+    for _ in range(12):
+        eng.run_round()
+    lpp = float(log_predictive(cfg, eng.lam, obs, held))
+    assert np.isfinite(lpp) and lpp > -4.0
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_divi_quality_stable_across_P(workers):
+    """Table 2: LPP is essentially flat in the number of processors."""
+    train, test, spec = _data()
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=40)
+    obs, held = split_heldout(test)
+    ref_eng = DIVIEngine(cfg, DIVIConfig(num_workers=1, batch_size=16),
+                         train, seed=0)
+    par_eng = DIVIEngine(cfg, DIVIConfig(num_workers=workers, batch_size=16),
+                         train, seed=0)
+    rounds = 16
+    for _ in range(rounds):
+        ref_eng.run_round()
+    for _ in range(rounds // workers):
+        par_eng.run_round()
+    ref_lpp = float(log_predictive(cfg, ref_eng.lam, obs, held))
+    par_lpp = float(log_predictive(cfg, par_eng.lam, obs, held))
+    assert abs(ref_lpp - par_lpp) < 0.35, (ref_lpp, par_lpp)
+
+
+def test_divi_delay_robustness():
+    """Fig. 5: convergence persists under dropped/delayed workers."""
+    train, test, spec = _data()
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=40)
+    obs, held = split_heldout(test)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=4, batch_size=16,
+                                     delay_prob=0.5), train, seed=0)
+    first = float(log_predictive(cfg, eng.lam, obs, held))
+    for _ in range(16):
+        eng.run_round()
+    last = float(log_predictive(cfg, eng.lam, obs, held))
+    assert last > first + 0.2
+
+
+def test_divi_staleness_still_converges():
+    train, test, spec = _data()
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=40)
+    obs, held = split_heldout(test)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=2, batch_size=16,
+                                     staleness=3), train, seed=0)
+    first = float(log_predictive(cfg, eng.lam, obs, held))
+    for _ in range(6):
+        eng.run_round()
+    last = float(log_predictive(cfg, eng.lam, obs, held))
+    assert last > first + 0.2
+
+
+_SHARDMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, numpy as np
+    from repro.core import LDAConfig
+    from repro.dist import DIVIEngine, DIVIConfig
+    from repro.data import PAPER_CORPORA, make_corpus
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    spec = PAPER_CORPORA["tiny"]
+    train = make_corpus(spec, split="train", seed=0)
+    cfg = LDAConfig(num_topics=8, vocab_size=250, estep_max_iters=40)
+    dcfg = DIVIConfig(num_workers=4, batch_size=16)
+    e1 = DIVIEngine(cfg, dcfg, train, seed=0, mesh=mesh)
+    e2 = DIVIEngine(cfg, dcfg, train, seed=0)
+    for _ in range(5):
+        e1.run_round(); e2.run_round()
+    diff = float(np.abs(np.asarray(e1.lam) - np.asarray(e2.lam)).max())
+    print(json.dumps({"diff": diff}))
+""")
+
+
+def test_divi_shard_map_matches_vmap_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SHARDMAP_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    diff = json.loads(out.stdout.strip().splitlines()[-1])["diff"]
+    assert diff < 1e-4, diff

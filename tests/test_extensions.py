@@ -1,0 +1,217 @@
+"""Extended components: CVB0, topic metrics, hyperparameter learning,
+flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CVB0Engine, LDAConfig, LDAEngine, effective_topics,
+                        log_predictive, npmi_coherence, split_heldout,
+                        top_words, update_alpha0, update_beta0)
+from repro.data import PAPER_CORPORA, make_corpus
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import flash_mha
+from repro.kernels.ref import mha_ref
+
+
+# ---------------------------------------------------------------------------
+# CVB0
+# ---------------------------------------------------------------------------
+
+def test_cvb0_improves_lpp(tiny_corpus):
+    train, test, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size)
+    obs, held = split_heldout(test)
+    eng = CVB0Engine(cfg, train, batch_size=16, seed=0)
+    first = float(log_predictive(cfg, eng.lam, obs, held))
+    for _ in range(5):
+        eng.run_epoch()
+    last = float(log_predictive(cfg, eng.lam, obs, held))
+    assert last > first + 0.3
+
+
+def test_cvb0_count_conservation(tiny_corpus):
+    """Σ_vk N_vk must equal the corpus word count at all times."""
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size)
+    eng = CVB0Engine(cfg, train, batch_size=16, seed=0)
+    total = float(train.num_words)
+    for _ in range(6):
+        eng.run_minibatch()
+        np.testing.assert_allclose(float(eng.state.n_vk.sum()), total,
+                                   rtol=1e-4)
+
+
+def test_cvb0_competitive_with_ivi(tiny_corpus):
+    train, test, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size)
+    obs, held = split_heldout(test)
+    cvb = CVB0Engine(cfg, train, batch_size=16, seed=0)
+    ivi = LDAEngine(cfg, train, algo="ivi", batch_size=16, seed=0)
+    for _ in range(6):
+        cvb.run_epoch()
+        ivi.run_epoch()
+    l_cvb = float(log_predictive(cfg, cvb.lam, obs, held))
+    l_ivi = float(log_predictive(cfg, ivi.state.lam, obs, held))
+    assert abs(l_cvb - l_ivi) < 0.4, (l_cvb, l_ivi)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_topic_metrics(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size)
+    eng = LDAEngine(cfg, train, algo="ivi", batch_size=16, seed=0)
+    for _ in range(5):
+        eng.run_epoch()
+    tw = top_words(eng.state.lam, k=5)
+    assert tw.shape == (8, 5)
+    coh_trained = npmi_coherence(eng.state.lam, train, k=5)
+    lam_rand = jax.random.gamma(jax.random.key(3), 100.0,
+                                (spec.vocab_size, 8)) * 0.01
+    coh_rand = npmi_coherence(lam_rand, train, k=5)
+    assert coh_trained > coh_rand, (coh_trained, coh_rand)
+    eff = effective_topics(eng.state.lam)
+    assert 1.0 <= eff <= 8.0
+
+
+# ---------------------------------------------------------------------------
+# hyperparameter learning
+# ---------------------------------------------------------------------------
+
+def test_minka_recovers_concentration():
+    """Fit symmetric α from Dirichlet-posterior-like samples."""
+    rng = np.random.default_rng(0)
+    true_a = 0.7
+    k, n = 10, 4000
+    # posterior params = prior + counts from docs of length ~50
+    theta = rng.dirichlet([true_a] * k, size=n)
+    counts = np.stack([rng.multinomial(50, t) for t in theta])
+    post = jnp.asarray(true_a + counts, jnp.float32)
+    a_hat = update_alpha0(0.1, post, iters=50)
+    assert abs(a_hat - true_a) < 0.25, a_hat
+
+
+def test_update_beta0_runs(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size)
+    eng = LDAEngine(cfg, train, algo="ivi", batch_size=16, seed=0)
+    eng.run_epoch()
+    b = update_beta0(cfg.beta0, eng.state.lam)
+    assert 0 < b < 10
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+FA_SHAPES = [
+    (2, 256, 64, 128, 128, True),
+    (2, 256, 64, 64, 128, False),
+    (4, 512, 128, 128, 64, True),
+    (1, 128, 32, 128, 128, True),
+    (3, 384, 64, 128, 128, True),
+]
+
+
+@pytest.mark.parametrize("bh,s,hd,bq,bk,causal", FA_SHAPES)
+def test_flash_attention_matches_ref(bh, s, hd, bq, bk, causal, rng):
+    q = jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (bh, s, hd)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (2, 256, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (2, 256, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (2, 256, 64))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True)
+    want = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), s=st.sampled_from([128, 256]),
+       hd=st.sampled_from([32, 64]))
+def test_flash_attention_property(seed, s, hd):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (2, s, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, s, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, s, hd)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, block_q=min(128, s),
+                          block_k=min(128, s))
+    want = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_flash_mha_gqa_and_padding(rng):
+    """GQA repeat + non-128-multiple sequence (pad/unpad) path."""
+    q = jnp.asarray(rng.normal(0, 1, (2, 70, 8, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (2, 70, 2, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (2, 70, 2, 32)).astype(np.float32))
+    got = flash_mha(q, k, v)
+    kf, vf = jnp.repeat(k, 4, 2), jnp.repeat(v, 4, 2)
+    fl = lambda x: x.transpose(0, 2, 1, 3).reshape(16, 70, 32)
+    want = mha_ref(fl(q), fl(kf), fl(vf)).reshape(2, 8, 70, 32) \
+        .transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend end-to-end (engine runs its E-step through the kernels)
+# ---------------------------------------------------------------------------
+
+def test_engine_with_pallas_backend_matches_dense(tiny_corpus):
+    """IVI engine run end-to-end through the Pallas kernels.
+
+    One update must match the jnp dense backend tightly; over two epochs
+    the trajectories may diverge chaotically (the fixed-point iteration
+    count is tolerance-dependent), so the long-horizon check is on quality.
+    """
+    import dataclasses
+    train, test, spec = tiny_corpus
+    base = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                     estep_max_iters=40)
+    res = {}
+    for backend in ("dense", "pallas"):
+        cfg = dataclasses.replace(base, estep_backend=backend)
+        eng = LDAEngine(cfg, train, algo="ivi", batch_size=16, seed=0,
+                        test_corpus=test)
+        eng.run_minibatch(rows=np.arange(16))
+        lam1 = np.asarray(eng.state.lam)
+        for _ in range(2):
+            eng.run_epoch()
+        res[backend] = (lam1, eng.evaluate()["lpp"])
+    np.testing.assert_allclose(res["dense"][0], res["pallas"][0],
+                               rtol=2e-2, atol=2e-2)
+    assert np.isfinite(res["pallas"][1])
+    assert abs(res["dense"][1] - res["pallas"][1]) < 0.1
+
+
+def test_sivi_robbins_monro_blend(tiny_corpus):
+    """S-IVI eq. (5): λ_t must be the exact Robbins–Monro blend of λ_{t−1}
+    and β₀ + ⟨m_vk⟩ after the incremental correction."""
+    import jax
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=40)
+    eng = LDAEngine(cfg, train, algo="sivi", batch_size=16, seed=0)
+    eng.run_epoch()
+    lam_prev = np.asarray(eng.state.lam)
+    t_prev = int(eng.state.t)
+    eng.run_minibatch()
+    rho = (t_prev + 1 + cfg.tau) ** (-cfg.kappa)
+    lam_hat = cfg.beta0 + np.asarray(eng.state.m_vk) \
+        + float(eng.state.init_frac) * np.asarray(eng.state.init_mass)
+    want = (1 - rho) * lam_prev + rho * lam_hat
+    np.testing.assert_allclose(np.asarray(eng.state.lam), want,
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,226 @@
+"""Unit tests for substrate pieces: attention masking, recurrence core,
+MoE dispatch, pattern segmentation, norms/rope."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA2, MAMBA2_SHARED,
+                                MLSTM, MOE, SLSTM, ModelConfig)
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.layers import rope
+from repro.models.transformer import segment_pattern
+
+
+def _attn_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                attn_chunk=8, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _naive_attention(cfg, p, x, window=None):
+    """O(S²) reference without chunking."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = A._qkv(cfg, p, x)
+    pos = jnp.arange(s)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    q = q * A._scale(cfg)
+    qg = q.reshape(b, s, kv, h // kv, hd)
+    logits = jnp.einsum("bqgrk,bsgk->bgrqs", qg, k).astype(jnp.float32)
+    from repro.models.layers import softcap
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    mask = pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    logits = jnp.where(mask, logits, A.NEG_INF)
+    w = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bgrqs,bsgk->bqgrk", w.astype(v.dtype), v)
+    return jnp.einsum("bthk,hkd->btd", out.reshape(b, s, h, hd), p["wo"])
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("s", [16, 24])   # 24: not divisible by chunk 8? yes it is; use 20
+def test_chunked_attention_matches_naive(window, s, rng):
+    cfg = _attn_cfg()
+    p = A.attn_init(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.normal(0, 1, (2, s, 64)).astype(np.float32))
+    got = A.attention_train(cfg, p, x, window=window)
+    want = _naive_attention(cfg, p, x, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_padding_path(rng):
+    """Sequence not divisible by the q-chunk (VLM prefix case)."""
+    cfg = _attn_cfg(attn_chunk=8)
+    p = A.attn_init(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.normal(0, 1, (2, 19, 64)).astype(np.float32))
+    got = A.attention_train(cfg, p, x)
+    want = _naive_attention(cfg, p, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_softcap_and_qknorm(rng):
+    cfg = _attn_cfg(attn_logit_softcap=30.0, qk_norm=True)
+    p = A.attn_init(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, 64)).astype(np.float32))
+    got = A.attention_train(cfg, p, x)
+    want = _naive_attention(cfg, p, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked recurrence core
+# ---------------------------------------------------------------------------
+
+def _naive_recurrence(q, k, v, log_a, log_i, stabilize):
+    """Step-by-step reference using recurrence_step."""
+    b, t, h, n = q.shape
+    p = v.shape[-1]
+    state = R.init_state(b, h, n, p)
+    ys = []
+    for i in range(t):
+        li = log_i[:, i] if log_i is not None else None
+        y, state = R.recurrence_step(q[:, i], k[:, i], v[:, i],
+                                     log_a[:, i], li, state, stabilize)
+        ys.append(y)
+    return jnp.stack(ys, 1), state
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), stab=st.booleans(),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_chunked_scan_matches_stepwise(seed, stab, chunk):
+    rng = np.random.default_rng(seed)
+    b, t, h, n, p = 2, 16, 3, 5, 4
+    q = jnp.asarray(rng.normal(0, 1, (b, t, h, n)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, t, h, n)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, t, h, p)).astype(np.float32))
+    la = jnp.asarray(-np.abs(rng.normal(0.5, 0.5, (b, t, h))).astype(np.float32))
+    li = jnp.asarray(rng.normal(0, 1, (b, t, h)).astype(np.float32)) if stab \
+        else None
+    y1, s1 = R.chunked_scan(q, k, v, la, li, R.init_state(b, h, n, p),
+                            chunk, stabilize=stab)
+    y2, s2 = _naive_recurrence(q, k, v, la, li, stab)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1.c, s2.c, rtol=2e-4, atol=2e-4)
+
+
+def test_conv1d_train_step_agree(rng):
+    x = jnp.asarray(rng.normal(0, 1, (2, 10, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (4, 6)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 1, (6,)).astype(np.float32))
+    full = R.conv1d_train(x, w, b)
+    state = jnp.zeros((2, 3, 6))
+    outs = []
+    for t in range(10):
+        y, state = R.conv1d_step(x[:, t], state, w, b)
+        outs.append(y)
+    np.testing.assert_allclose(full, jnp.stack(outs, 1), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def _dense_moe_reference(cfg, p, x):
+    """All-experts dense reference."""
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    if cfg.norm_topk_prob:
+        top_p = top_p / top_p.sum(-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("nd,edf->nef", x, p["w_gate"])) \
+        * jnp.einsum("nd,edf->nef", x, p["w_up"])
+    out_all = jnp.einsum("nef,efd->ned", h, p["w_down"])
+    y = jnp.zeros_like(x)
+    for j in range(cfg.num_experts_per_tok):
+        y = y + top_p[:, j:j+1] * jnp.take_along_axis(
+            out_all, top_i[:, j][:, None, None], axis=1)[:, 0]
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) \
+            @ sp["w_down"]
+    return y
+
+
+@pytest.mark.parametrize("shared", [0, 1])
+def test_moe_ragged_matches_dense(shared, rng):
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=11,
+                      num_experts=4, num_experts_per_tok=2, moe_d_ff=16,
+                      num_shared_experts=shared, moe_capacity_factor=4.0,
+                      dtype="float32")
+    p = M.moe_init(cfg, jax.random.key(0))
+    x = jnp.asarray(rng.normal(0, 0.5, (24, 32)).astype(np.float32))
+    got, aux = M.moe_ffn_local(cfg, p, x, jnp.asarray(0), 1)
+    want = _dense_moe_reference(cfg, p, x)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    assert float(aux["counts"].sum()) == 24 * 2
+    assert float(aux["dropped"]) == 0.0
+
+
+def test_moe_rank_partition_sums_to_full(rng):
+    """Σ over simulated model ranks of partial outputs == single-rank out."""
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=0, vocab_size=11,
+                      num_experts=8, num_experts_per_tok=2, moe_d_ff=8,
+                      moe_capacity_factor=8.0, dtype="float32")
+    p = M.moe_init(cfg, jax.random.key(1))
+    x = jnp.asarray(rng.normal(0, 0.5, (16, 16)).astype(np.float32))
+    full, _ = M.moe_ffn_local(cfg, p, x, jnp.asarray(0), 1)
+    m_size = 4
+    el = cfg.num_experts // m_size
+    partials = []
+    for r in range(m_size):
+        pr = dict(p)
+        pr["w_gate"] = p["w_gate"][r * el:(r + 1) * el]
+        pr["w_up"] = p["w_up"][r * el:(r + 1) * el]
+        pr["w_down"] = p["w_down"][r * el:(r + 1) * el]
+        y, _ = M.moe_ffn_local(cfg, pr, x, jnp.asarray(r), m_size)
+        partials.append(y)
+    np.testing.assert_allclose(sum(partials), full, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# pattern segmentation
+# ---------------------------------------------------------------------------
+
+def test_segment_pattern_roundtrip():
+    for arch, cfg in ARCHS.items():
+        segs = segment_pattern(cfg.pattern)
+        rebuilt = tuple(k for cyc, reps in segs for _ in range(reps)
+                        for k in cyc)
+        assert rebuilt == cfg.pattern, arch
+        assert len(segs) <= 3, (arch, len(segs))
+
+
+def test_segment_pattern_examples():
+    assert segment_pattern((ATTN,) * 5) == [((ATTN,), 5)]
+    assert segment_pattern((ATTN_LOCAL, ATTN) * 3) == [((ATTN_LOCAL, ATTN), 3)]
+    assert segment_pattern((ATTN, MOE, MOE)) == [((ATTN,), 1), ((MOE,), 2)]
+
+
+def test_rope_relative_property(rng):
+    """⟨rope(q,i), rope(k,j)⟩ depends only on i−j."""
+    hd = 16
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, hd)).astype(np.float32))
+
+    def dot_at(i, j):
+        qi = rope(q, jnp.asarray([i]), 10000.0)
+        kj = rope(k, jnp.asarray([j]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-4
+    assert abs(dot_at(10, 10) - dot_at(0, 0)) < 1e-4

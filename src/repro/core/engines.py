@@ -66,22 +66,38 @@ def init_engine_state(cfg: LDAConfig, key: jax.Array) -> EngineState:
 # MVI — batch coordinate ascent
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 5))
 def mvi_epoch(cfg: LDAConfig, state: EngineState, ids_b: jax.Array,
-              cnts_b: jax.Array) -> tuple[EngineState, jax.Array]:
-    """One full batch pass. ids_b/cnts_b: (num_batches, B, L)."""
+              cnts_b: jax.Array, doc_idx_b: jax.Array,
+              gamma_buf: jax.Array
+              ) -> tuple[EngineState, jax.Array, jax.Array]:
+    """One full batch pass. ids_b/cnts_b/doc_idx_b: (num_batches, B, ...).
+
+    γ persists across epochs in ``gamma_buf`` (D, K): each document's E-step
+    resumes from α₀ + Σ_l cnt·π of its previous visit — proper batch
+    coordinate ascent in the sense of Neal & Hinton (1998), and the *same*
+    warm-start reconstruction the incremental engines use. Without this,
+    a ``estep_max_iters``-truncated E-step restarts from scratch every
+    epoch while IVI resumes from its memo, and the two full-batch
+    trajectories drift apart for reasons that have nothing to do with the
+    incremental bookkeeping (see test_fullbatch_ivi_equals_mvi).
+    """
     eb = exp_dirichlet_expectation(state.lam, axis=0)
 
-    def body(acc, batch):
-        ids, cnts = batch
-        res = estep(cfg, eb, ids, cnts)
-        return acc + res.sstats, res.gamma
+    def body(carry, batch):
+        acc, gbuf = carry
+        ids, cnts, idx = batch
+        res = estep(cfg, eb, ids, cnts, gbuf[idx])
+        gbuf = gbuf.at[idx].set(
+            cfg.alpha0 + jnp.einsum("blk,bl->bk", res.pi, cnts))
+        return (acc + res.sstats, gbuf), res.gamma
 
-    sstats, gammas = jax.lax.scan(
-        body, jnp.zeros_like(state.lam), (ids_b, cnts_b))
+    (sstats, gamma_buf), gammas = jax.lax.scan(
+        body, (jnp.zeros_like(state.lam), gamma_buf),
+        (ids_b, cnts_b, doc_idx_b))
     lam = cfg.beta0 + sstats
     new = dataclasses.replace(state, lam=lam, t=state.t + 1)
-    return new, gammas.reshape(-1, cfg.num_topics)
+    return new, gamma_buf, gammas.reshape(-1, cfg.num_topics)
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +120,59 @@ def svi_step(cfg: LDAConfig, state: EngineState, ids: jax.Array,
 # IVI / S-IVI — incremental updates (eqs. 4 & 5)
 # ---------------------------------------------------------------------------
 
+def memo_correction(cfg: LDAConfig, eb: jax.Array, ids: jax.Array,
+                    cnts: jax.Array, old_pi: jax.Array,
+                    visited_rows: jax.Array):
+    """E-step + subtract-old/add-new core shared by IVI, S-IVI and D-IVI.
+
+    The distributed engine (``repro.dist``) calls this same function for its
+    workers, which is what keeps the single-host and distributed paths
+    numerically interchangeable (test_divi_single_worker_round_equals_sivi_step).
+
+    Returns (correction (V, K), first-visit word count, EStepResult).
+    """
+    # Warm-start γ from the memo for already-visited documents: coordinate
+    # ascent from the memoized point can only improve the bound, which is
+    # what makes IVI's monotonicity exact (fresh inits could hop to a worse
+    # local optimum of the per-document subproblem).
+    gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, cnts)
+    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
+    gamma0 = jnp.where(visited_rows[:, None], gamma_memo, fresh)
+    res = estep(cfg, eb, ids, cnts, gamma0)
+
+    delta = cnts[:, :, None] * (res.pi - old_pi)
+    correction = scatter_sstats(ids, delta, cfg.vocab_size)  # (V, K)
+    words_first = jnp.sum(jnp.where(~visited_rows, cnts.sum(-1), 0.0))
+    return correction, words_first, res
+
+
+def retire_init_frac(init_frac: jax.Array, words_first: jax.Array,
+                     num_words_total: jax.Array) -> jax.Array:
+    """Retire the first-visit words' pro-rata share of the random-init mass.
+
+    Snaps the fp32 subtraction residue to an exact zero once every document
+    has been visited, so λ = β₀ + ⟨m_vk⟩ holds exactly afterwards (eq. 4).
+    """
+    frac = jnp.maximum(init_frac - words_first / num_words_total, 0.0)
+    return jnp.where(frac < 1e-6, 0.0, frac)
+
+
+def sivi_global_update(cfg: LDAConfig, state, corr: jax.Array,
+                       frac: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Eq. 5 global step: λ ← (1−ρ_t)λ + ρ_t(β₀ + ⟨m_vk⟩⁺ + frac·init_mass).
+
+    Duck-typed over EngineState / the distributed DIVIState (same fields);
+    elementwise in V, so it applies unchanged to the model-sharded rows of
+    ``repro.dist`` — keeping the single-host and distributed master updates
+    one code path. Returns (λ, ⟨m_vk⟩⁺); the caller bumps ``t``.
+    """
+    m_vk = state.m_vk + corr
+    lam_hat = cfg.beta0 + m_vk + frac * state.init_mass
+    rho = cfg.rho(state.t + 1)
+    lam = (1.0 - rho) * state.lam + rho * lam_hat
+    return lam, m_vk
+
+
 def _incremental_correction(cfg: LDAConfig, state: EngineState, memo: Memo,
                             ids: jax.Array, cnts: jax.Array,
                             doc_idx: jax.Array, num_words_total: jax.Array):
@@ -112,27 +181,9 @@ def _incremental_correction(cfg: LDAConfig, state: EngineState, memo: Memo,
     Returns (correction (V,K), new memo, new init_frac, gamma).
     """
     eb = exp_dirichlet_expectation(state.lam, axis=0)
-    old_pi = memo.pi[doc_idx]                               # (B, L, K)
-    # Warm-start γ from the memo for already-visited documents: coordinate
-    # ascent from the memoized point can only improve the bound, which is
-    # what makes IVI's monotonicity exact (fresh inits could hop to a worse
-    # local optimum of the per-document subproblem).
-    gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, cnts)
-    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
-    gamma0 = jnp.where(memo.visited[doc_idx][:, None], gamma_memo, fresh)
-    res = estep(cfg, eb, ids, cnts, gamma0)
-
-    delta = cnts[:, :, None] * (res.pi - old_pi)
-    correction = scatter_sstats(ids, delta, cfg.vocab_size)  # (V, K)
-
-    # retire the pro-rata share of the random-init mass for first visits
-    first = ~memo.visited[doc_idx]                           # (B,)
-    frac_batch = jnp.sum(jnp.where(first, cnts.sum(-1), 0.0)) / num_words_total
-    new_frac = jnp.maximum(state.init_frac - frac_batch, 0.0)
-    # snap fp32 subtraction residue to an exact zero once the pass is done,
-    # so λ = β₀ + ⟨m_vk⟩ holds exactly afterwards (eq. 4)
-    new_frac = jnp.where(new_frac < 1e-6, 0.0, new_frac)
-
+    correction, words_first, res = memo_correction(
+        cfg, eb, ids, cnts, memo.pi[doc_idx], memo.visited[doc_idx])
+    new_frac = retire_init_frac(state.init_frac, words_first, num_words_total)
     memo = Memo(pi=memo.pi.at[doc_idx].set(res.pi),
                 visited=memo.visited.at[doc_idx].set(True))
     return correction, memo, new_frac, res.gamma
@@ -159,10 +210,7 @@ def sivi_step(cfg: LDAConfig, state: EngineState, memo: Memo, ids: jax.Array,
     """Eq. 5: the incremental estimate inside a Robbins–Monro average."""
     corr, memo, frac, _ = _incremental_correction(
         cfg, state, memo, ids, cnts, doc_idx, num_words_total)
-    m_vk = state.m_vk + corr
-    lam_hat = cfg.beta0 + m_vk + frac * state.init_mass
-    rho = cfg.rho(state.t + 1)
-    lam = (1.0 - rho) * state.lam + rho * lam_hat
+    lam, m_vk = sivi_global_update(cfg, state, corr, frac)
     state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
                                 t=state.t + 1)
     return state, memo
@@ -192,11 +240,16 @@ class LDAEngine:
         self.rng = np.random.default_rng(seed)
         self.state = init_engine_state(cfg, jax.random.key(seed))
         self.memo = None
+        self._gamma_buf = None
         if algo in ("ivi", "sivi"):
             self.memo = Memo(
                 pi=jnp.zeros((corpus.num_docs, corpus.max_unique,
                               cfg.num_topics), jnp.float32),
                 visited=jnp.zeros((corpus.num_docs,), bool))
+        elif algo == "mvi":
+            # per-document warm starts carried across epochs (see mvi_epoch)
+            self._gamma_buf = jnp.full((corpus.num_docs, cfg.num_topics),
+                                       cfg.alpha0 + 1.0, jnp.float32)
         self.num_words_total = jnp.asarray(float(np.asarray(corpus.counts).sum()))
         self.docs_seen = 0
         self.history = History()
@@ -221,7 +274,9 @@ class LDAEngine:
         if self.algo == "mvi":
             ids = self.corpus.token_ids[batches]     # (nb, B, L)
             cnts = self.corpus.counts[batches]
-            self.state, _ = mvi_epoch(self.cfg, self.state, ids, cnts)
+            self.state, self._gamma_buf, _ = mvi_epoch(
+                self.cfg, self.state, ids, cnts, jnp.asarray(batches),
+                self._gamma_buf)
             self.docs_seen += batches.size
             return
         for rows in batches:

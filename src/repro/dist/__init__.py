@@ -1,0 +1,21 @@
+"""Asynchronous distributed incremental variational inference (paper §4).
+
+Two bit-comparable execution paths for the same master/worker protocol:
+
+* ``repro.dist.protocol`` — round semantics + the single-device
+  vmap-over-workers simulation (delay/staleness experiments, tests);
+* ``repro.dist.divi`` — the shard_map production path on a
+  ``("data", "model")`` device mesh;
+* ``repro.dist.engine`` — the host driver (sharding, sampling, timing).
+
+See ``docs/divi.md`` for the protocol write-up.
+"""
+from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
+                                 divi_round, master_update,
+                                 worker_correction)
+from repro.dist.divi import make_divi_round
+from repro.dist.engine import DIVIEngine, shard_corpus
+
+__all__ = ["DIVIConfig", "DIVIState", "WorkerShard", "DIVIEngine",
+           "divi_round", "make_divi_round", "master_update",
+           "worker_correction", "shard_corpus"]

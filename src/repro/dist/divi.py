@@ -1,0 +1,117 @@
+"""D-IVI production path: one global round as a ``shard_map`` program.
+
+Sharding layout on a ``("data", "model")`` (optionally ``("pod", "data",
+"model")``) mesh — DESIGN mirrors the paper's master/worker message flow:
+
+* **master state** λ / ⟨m_vk⟩ / init_mass: model-sharded on V
+  (``P("model", None)``) — the master is itself distributed over the model
+  axis; scalars (init_frac, t) replicated;
+* **worker shards** (token_ids / counts / π-memo / visited) and the
+  per-round inputs (idx, delay): data-sharded on the leading worker axis;
+* each sub-round reduces the (V, K) corrections with **one psum over the
+  data axes** — the same single message the paper's workers send to the
+  master — and the λ fetch is one all-gather of the model-sharded rows.
+
+The worker E-step runs on the *full* mini-batch of each worker (replicated
+across the model axis). This is deliberate: the E-step's fixed-point stop
+criterion couples the documents of a batch, so splitting a worker's batch
+over the model axis would change its numerics — and bit-parity with the
+single-device vmap simulation (``repro.dist.protocol.divi_round``) is the
+correctness contract validated by ``tests/test_divi.py``. The two paths
+share ``worker_correction`` / ``master_update`` verbatim; the only
+difference is *where* the worker loop runs (vmap axis vs. data-mesh axis)
+and how the corrections are reduced (``sum`` vs. ``psum``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+
+try:                                      # jax >= 0.6: out of experimental
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.types import LDAConfig
+from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
+                                 divi_round, master_update,
+                                 worker_correction)
+
+__all__ = ["DIVIConfig", "DIVIState", "WorkerShard", "divi_round",
+           "make_divi_round"]
+
+
+def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
+                    data_axes) -> jax.stages.Wrapped:
+    """Build the jitted shard_map round for ``mesh``.
+
+    Returns a callable/lowerable ``round(state, shard, idx, delay,
+    num_words_total) -> (state, shard)`` with
+
+      state: DIVIState — (V, K) leaves sharded ``P("model", None)``;
+      shard: WorkerShard — leading worker axis sharded over ``data_axes``;
+      idx:   (W, S, B) int32, delay: (W, S) bool, same data sharding;
+      num_words_total: () float32, replicated.
+    """
+    data_axes = tuple(data_axes)
+    model = "model" if "model" in mesh.axis_names else None
+    n_data = math.prod(int(mesh.shape[a]) for a in data_axes)
+    if dcfg.num_workers % n_data:
+        raise ValueError(
+            f"num_workers={dcfg.num_workers} not divisible by the data-mesh "
+            f"size {n_data} ({data_axes})")
+    if model and cfg.vocab_size % int(mesh.shape[model]):
+        raise ValueError(
+            f"vocab_size={cfg.vocab_size} not divisible by the model axis "
+            f"({int(mesh.shape[model])}) — pad V")
+
+    mrow = P(model, None)
+    state_specs = DIVIState(lam=mrow, m_vk=mrow, init_mass=mrow,
+                            init_frac=P(), t=P())
+    shard_specs = WorkerShard(token_ids=P(data_axes, None, None),
+                              counts=P(data_axes, None, None),
+                              pi=P(data_axes, None, None, None),
+                              visited=P(data_axes, None))
+    in_specs = (state_specs, shard_specs, P(data_axes, None, None),
+                P(data_axes, None), P())
+    out_specs = (state_specs, shard_specs)
+
+    def round_body(state, shard, idx, delay, num_words_total):
+        # "fetch λ from the master": all-gather the model-sharded rows, then
+        # compute exp(E[ln φ]) exactly as the simulation does on the full λ.
+        lam_full = (jax.lax.all_gather(state.lam, model, axis=0, tiled=True)
+                    if model else state.lam)
+        eb = exp_dirichlet_expectation(lam_full, axis=0)
+        v_local = state.lam.shape[0]
+        row0 = (jax.lax.axis_index(model) * v_local) if model else 0
+
+        def substep(carry, xs):
+            st, pi, vis = carry
+            idx_s, delay_s = xs                      # (W_loc, B), (W_loc,)
+            corr_w, words_w, pi, vis = jax.vmap(
+                partial(worker_correction, cfg, eb))(
+                    shard.token_ids, shard.counts, pi, vis, idx_s, delay_s)
+            # "send the correction to the master": the round's one message.
+            corr = corr_w.sum(0)
+            words = words_w.sum()
+            if data_axes:
+                corr = jax.lax.psum(corr, data_axes)
+                words = jax.lax.psum(words, data_axes)
+            corr = jax.lax.dynamic_slice_in_dim(corr, row0, v_local, axis=0) \
+                if model else corr
+            st = master_update(cfg, st, corr, words, num_words_total)
+            return (st, pi, vis), None
+
+        (state, pi, vis), _ = jax.lax.scan(
+            substep, (state, shard.pi, shard.visited),
+            (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
+        return state, WorkerShard(token_ids=shard.token_ids,
+                                  counts=shard.counts, pi=pi, visited=vis)
+
+    fn = shard_map(round_body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(0, 1))

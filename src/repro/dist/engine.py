@@ -1,0 +1,135 @@
+"""Host driver for D-IVI: corpus sharding, round sampling, path selection.
+
+The engine owns everything that is host-side in the paper's system — the
+assignment of documents to workers, the per-round mini-batch sampling and
+the Bernoulli sleep/drop coin flips — and hands the resulting index arrays
+to the jitted round. Both execution paths (single-device vmap simulation
+and mesh shard_map) therefore consume bit-identical inputs from the same
+seeded generator, which is what makes them comparable array-for-array.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.engines import init_engine_state
+from repro.core.types import Corpus, LDAConfig
+from repro.dist.divi import make_divi_round
+from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
+                                 divi_round)
+
+
+def shard_corpus(corpus: Corpus, num_workers: int,
+                 num_topics: int) -> Tuple[WorkerShard, int]:
+    """Split the corpus into ``num_workers`` contiguous document shards.
+
+    The trailing ``num_docs % num_workers`` documents are dropped (every
+    worker must hold the same shard shape for vmap/shard_map); with one
+    worker the shard is the corpus in its original order, which is what
+    makes the P=1 engine comparable to the single-host S-IVI step.
+    """
+    d = corpus.num_docs
+    dw = d // num_workers
+    if dw == 0:
+        raise ValueError(f"corpus of {d} docs cannot feed "
+                         f"{num_workers} workers")
+    n = num_workers * dw
+    ids = jnp.asarray(np.asarray(corpus.token_ids)[:n], jnp.int32)
+    cnts = jnp.asarray(np.asarray(corpus.counts)[:n], jnp.float32)
+    l = corpus.max_unique
+    shard = WorkerShard(
+        token_ids=ids.reshape(num_workers, dw, l),
+        counts=cnts.reshape(num_workers, dw, l),
+        pi=jnp.zeros((num_workers, dw, l, num_topics), jnp.float32),
+        visited=jnp.zeros((num_workers, dw), bool),
+    )
+    return shard, dw
+
+
+class DIVIEngine:
+    """Paper §4 driver: P workers, staleness S, Bernoulli round-dropping.
+
+    ``mesh=None`` runs the single-device vmap simulation; passing a mesh
+    with a data axis (and optionally a ``"model"`` axis sharding V) runs the
+    shard_map production path — same protocol, same numbers.
+    """
+
+    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
+                 seed: int = 0, mesh=None,
+                 data_axes: Optional[Tuple[str, ...]] = None):
+        self.cfg, self.dcfg = cfg, dcfg
+        self.rng = np.random.default_rng(seed)
+        self.shard, self.docs_per_worker = shard_corpus(
+            corpus, dcfg.num_workers, cfg.num_topics)
+        if dcfg.batch_size > self.docs_per_worker:
+            # sampling with replacement would put a document into a batch
+            # twice, double-applying its memo delta — refuse instead
+            raise ValueError(
+                f"batch_size={dcfg.batch_size} exceeds the "
+                f"{self.docs_per_worker} documents each of the "
+                f"{dcfg.num_workers} workers holds; shrink the batch or the "
+                f"worker count")
+        # identical λ₀ to the single-host engines at the same seed
+        es = init_engine_state(cfg, jax.random.key(seed))
+        self.state = DIVIState(lam=es.lam, m_vk=es.m_vk,
+                               init_mass=es.init_mass,
+                               init_frac=es.init_frac, t=es.t)
+        # retire init mass against the sharded corpus' word total so the
+        # retirement completes exactly after every shard is visited
+        self.num_words_total = jnp.asarray(
+            float(np.asarray(self.shard.counts).sum()), jnp.float32)
+        self.mesh = mesh
+        if mesh is None:
+            self._round = jax.jit(partial(divi_round, cfg, dcfg),
+                                  donate_argnums=(0, 1))
+        else:
+            if data_axes is None:
+                data_axes = tuple(a for a in mesh.axis_names if a != "model")
+            self._round = make_divi_round(cfg, dcfg, mesh, data_axes)
+            model = "model" if "model" in mesh.axis_names else None
+            mrow = NamedSharding(mesh, P(model, None))
+            rep = NamedSharding(mesh, P())
+            self.state = DIVIState(
+                lam=jax.device_put(self.state.lam, mrow),
+                m_vk=jax.device_put(self.state.m_vk, mrow),
+                init_mass=jax.device_put(self.state.init_mass, mrow),
+                init_frac=jax.device_put(self.state.init_frac, rep),
+                t=jax.device_put(self.state.t, rep))
+            dsh = lambda *rest: NamedSharding(mesh, P(tuple(data_axes), *rest))
+            self.shard = WorkerShard(
+                token_ids=jax.device_put(self.shard.token_ids,
+                                         dsh(None, None)),
+                counts=jax.device_put(self.shard.counts, dsh(None, None)),
+                pi=jax.device_put(self.shard.pi, dsh(None, None, None)),
+                visited=jax.device_put(self.shard.visited, dsh(None)))
+        self.docs_seen = 0
+
+    # -- rounds ------------------------------------------------------------
+    def _sample_round(self) -> Tuple[np.ndarray, np.ndarray]:
+        w, s, b = (self.dcfg.num_workers, self.dcfg.staleness,
+                   self.dcfg.batch_size)
+        dw = self.docs_per_worker
+        idx = np.empty((w, s, b), np.int64)
+        for i in range(w):
+            for j in range(s):
+                idx[i, j] = self.rng.choice(dw, size=b, replace=False)
+        delay = self.rng.random((w, s)) < self.dcfg.delay_prob
+        return idx, delay
+
+    def run_round(self) -> None:
+        """One global round: S sub-rounds of P concurrent worker batches."""
+        idx, delay = self._sample_round()
+        self.state, self.shard = self._round(
+            self.state, self.shard, jnp.asarray(idx, jnp.int32),
+            jnp.asarray(delay), self.num_words_total)
+        self.docs_seen += int(self.dcfg.batch_size * (~delay).sum())
+
+    # -- views -------------------------------------------------------------
+    @property
+    def lam(self) -> jax.Array:
+        return self.state.lam

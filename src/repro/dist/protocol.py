@@ -1,0 +1,162 @@
+"""D-IVI master/worker round semantics (paper §4), shared by both paths.
+
+The paper's asynchronous distributed algorithm: *P* workers each own a
+disjoint shard of the corpus and its π-memo; the master owns the global
+state (λ, ⟨m_vk⟩, the un-retired random-init mass). A worker repeatedly
+
+  1. fetches (possibly stale) topics λ from the master,
+  2. runs the partial E-step on a mini-batch of *its own* documents,
+     warm-starting γ from its memo (Alg. 1 lines 4–7),
+  3. sends the subtract-old/add-new correction Σ_d cnt·(π_new − π_memo)
+     back to the master — one (V, K) message.
+
+Because the corrections are exact memo deltas they commute: the master can
+fold them in *in any order and at any lag* and ⟨m_vk⟩ stays a faithful
+(if slightly stale) accumulator — this is what makes the asynchronous
+protocol correct where gradient-based schemes need care. The master folds
+each reduced correction into the S-IVI Robbins–Monro update (eq. 5).
+
+Round structure used here (identical in the vmap simulation and the
+shard_map production path, see ``repro.dist.divi``):
+
+* one *global round* = ``staleness`` sub-rounds;
+* every worker runs all ``staleness`` mini-batches against the **round-
+  start** λ, while the master's state advances one S-IVI update per
+  sub-round — so corrections arrive at parameter lag 0..staleness−1,
+  the paper's sleep/μ staleness model;
+* each worker independently *drops* a sub-round with probability
+  ``delay_prob`` (the paper's Fig. 5 sleep experiments): a dropped worker
+  contributes no correction and leaves its memo untouched;
+* a worker's own memo is never stale — workers own their documents, only
+  the master parameters lag.
+
+Host-side sampling (mini-batch indices, drop coin-flips) lives in
+``DIVIEngine`` and is passed in as arrays, so the two execution paths are
+driven by bit-identical inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engines import (memo_correction, retire_init_frac,
+                                sivi_global_update)
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.types import LDAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DIVIConfig:
+    """Distribution hyper-parameters (hashable: usable as a jit static)."""
+
+    num_workers: int = 4
+    batch_size: int = 64
+    delay_prob: float = 0.0   # P(worker drops a sub-round) — Fig. 5
+    staleness: int = 1        # sub-rounds per global round (parameter lag)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DIVIState:
+    """Master variational state — mirrors ``EngineState`` field-for-field.
+
+    In the shard_map path the (V, K) leaves hold this device's model-axis
+    rows; the scalar leaves are replicated.
+    """
+
+    lam: jax.Array         # (V, K) topic-word Dirichlet parameter
+    m_vk: jax.Array        # (V, K) incremental accumulator ⟨m_vk⟩
+    init_mass: jax.Array   # (V, K) un-attributed random-init mass
+    init_frac: jax.Array   # () share of init_mass still live in λ
+    t: jax.Array           # () int32 master update counter (drives ρ_t)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class WorkerShard:
+    """Per-worker corpus shards and π-memos, leading axis = worker."""
+
+    token_ids: jax.Array   # (W, D_w, L) int32 padded unique-token ids
+    counts: jax.Array      # (W, D_w, L) float32 counts, 0 on padding
+    pi: jax.Array          # (W, D_w, L, K) memoized responsibilities
+    visited: jax.Array     # (W, D_w) bool — memo rows that are live
+
+
+def worker_correction(cfg: LDAConfig, eb: jax.Array, token_ids: jax.Array,
+                      counts: jax.Array, pi: jax.Array, visited: jax.Array,
+                      idx: jax.Array, delayed: jax.Array):
+    """One worker, one mini-batch, against stale topics ``eb``.
+
+    Args:
+      eb: (V, K) exp(E[ln φ]) computed from the *round-start* λ.
+      token_ids/counts/pi/visited: this worker's full shard (no W axis).
+      idx: (B,) local document indices into the shard — duplicate-free
+        (a document appearing twice would double-apply its memo delta;
+        ``DIVIEngine`` enforces batch_size ≤ docs-per-worker for this).
+      delayed: () bool — this worker dropped the sub-round: it contributes
+        nothing and its memo stays untouched (paper's sleep model).
+
+    Returns (correction (V, K), first-visit word count, new pi, new visited).
+    """
+    ids, cnts = token_ids[idx], counts[idx]
+    old_pi = pi[idx]                                         # (B, L, K)
+    corr, words, res = memo_correction(cfg, eb, ids, cnts, old_pi,
+                                       visited[idx])
+
+    live = ~delayed
+    corr = jnp.where(live, corr, 0.0)
+    words = jnp.where(live, words, 0.0)
+    pi = pi.at[idx].set(jnp.where(live, res.pi, old_pi))
+    visited = visited.at[idx].set(visited[idx] | live)
+    return corr, words, pi, visited
+
+
+def master_update(cfg: LDAConfig, state: DIVIState, corr: jax.Array,
+                  words_retired: jax.Array,
+                  num_words_total: jax.Array) -> DIVIState:
+    """Fold the reduced correction into the S-IVI master step (eq. 5).
+
+    ``corr`` and the (V, K) state leaves may be the local model-axis rows —
+    the update is elementwise in V, so the sharded and replicated layouts
+    share the exact single-host code path (and its float behaviour).
+    """
+    frac = retire_init_frac(state.init_frac, words_retired, num_words_total)
+    lam, m_vk = sivi_global_update(cfg, state, corr, frac)
+    return DIVIState(lam=lam, m_vk=m_vk, init_mass=state.init_mass,
+                     init_frac=frac, t=state.t + 1)
+
+
+def divi_round(cfg: LDAConfig, dcfg: DIVIConfig, state: DIVIState,
+               shard: WorkerShard, idx: jax.Array, delay: jax.Array,
+               num_words_total: jax.Array) -> Tuple[DIVIState, WorkerShard]:
+    """One D-IVI global round — single-device vmap-over-workers simulation.
+
+    Args:
+      idx: (W, S, B) int32 per-worker local document indices.
+      delay: (W, S) bool dropped-sub-round flags.
+
+    All workers' E-steps use the round-start λ (``eb`` below); the master
+    state advances one S-IVI update per sub-round, so sub-round *s* folds in
+    corrections computed at parameter lag *s* — the staleness model.
+    """
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+
+    def substep(carry, xs):
+        st, pi, vis = carry
+        idx_s, delay_s = xs                                  # (W, B), (W,)
+        corr_w, words_w, pi, vis = jax.vmap(
+            partial(worker_correction, cfg, eb))(
+                shard.token_ids, shard.counts, pi, vis, idx_s, delay_s)
+        st = master_update(cfg, st, corr_w.sum(0), words_w.sum(),
+                           num_words_total)
+        return (st, pi, vis), None
+
+    (state, pi, vis), _ = jax.lax.scan(
+        substep, (state, shard.pi, shard.visited),
+        (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
+    return state, WorkerShard(token_ids=shard.token_ids, counts=shard.counts,
+                              pi=pi, visited=vis)

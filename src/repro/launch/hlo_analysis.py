@@ -214,10 +214,16 @@ def _dot_flops(ins: Instr, defs: Dict[str, str]) -> float:
     argm = re.search(r"dot\(([^)]*)\)", ins.text)
     if not argm:
         return 0.0
-    args = [a.strip().lstrip("%") for a in argm.group(1).split(",")]
+    arg_txt = argm.group(1)
+    if _SHAPE_RE.search(arg_txt):
+        # operands carry inline shapes (xla in jax<=0.4): first shape = lhs
+        lhs_txt = arg_txt
+    else:
+        # name-only operands: resolve through the module symbol table
+        lhs_txt = defs.get(arg_txt.split(",")[0].strip().lstrip("%"), "")
     cdim = 1
-    if lhs_c and args and args[0] in defs:
-        _, lhs_dims = _shape_dims(defs[args[0]])
+    if lhs_c and lhs_txt:
+        _, lhs_dims = _shape_dims(lhs_txt)
         for ci in lhs_c.group(1).split(","):
             if ci != "" and int(ci) < len(lhs_dims):
                 cdim *= lhs_dims[int(ci)]

@@ -1,0 +1,118 @@
+"""D-IVI protocol-level guarantees, beyond the quality checks in
+test_divi.py: determinism, exact reduction to the single-host S-IVI step,
+delay/staleness bookkeeping invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LDAConfig
+from repro.core.engines import init_engine_state, sivi_step
+from repro.core.types import Memo
+from repro.data import PAPER_CORPORA, make_corpus
+from repro.dist import DIVIConfig, DIVIEngine, shard_corpus
+
+
+def _cfg(spec):
+    return LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                     estep_max_iters=40)
+
+
+def test_divi_deterministic_across_runs(tiny_corpus):
+    """Same seed ⇒ identical λ, memo and doc counter across two engines."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    dcfg = DIVIConfig(num_workers=2, batch_size=16, delay_prob=0.3,
+                      staleness=2)
+    e1 = DIVIEngine(cfg, dcfg, train, seed=7)
+    e2 = DIVIEngine(cfg, dcfg, train, seed=7)
+    for _ in range(4):
+        e1.run_round()
+        e2.run_round()
+    assert e1.docs_seen == e2.docs_seen
+    np.testing.assert_array_equal(np.asarray(e1.lam), np.asarray(e2.lam))
+    np.testing.assert_array_equal(np.asarray(e1.shard.pi),
+                                  np.asarray(e2.shard.pi))
+
+
+def test_divi_single_worker_round_equals_sivi_step(tiny_corpus):
+    """One round with P=1, delay_prob=0, S=1 IS the single-host S-IVI step
+    on the same mini-batch (the protocol's base case)."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=1, batch_size=16), train,
+                     seed=0)
+    idx, delay = eng._sample_round()
+    assert not delay.any()
+    state, shard = eng._round(eng.state, eng.shard,
+                              jnp.asarray(idx, jnp.int32),
+                              jnp.asarray(delay), eng.num_words_total)
+
+    ref = init_engine_state(cfg, jax.random.key(0))
+    memo = Memo(pi=jnp.zeros((train.num_docs, train.max_unique,
+                              cfg.num_topics), jnp.float32),
+                visited=jnp.zeros((train.num_docs,), bool))
+    rows = jnp.asarray(idx[0, 0])
+    nw = jnp.asarray(float(np.asarray(train.counts).sum()))
+    ref, memo = sivi_step(cfg, ref, memo, train.token_ids[rows],
+                          train.counts[rows], rows, nw)
+    np.testing.assert_allclose(np.asarray(state.lam), np.asarray(ref.lam),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.m_vk), np.asarray(ref.m_vk),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(shard.pi[0][rows]),
+                               np.asarray(memo.pi[rows]),
+                               rtol=1e-6, atol=1e-6)
+    assert int(state.t) == int(ref.t) == 1
+
+
+def test_divi_fully_delayed_round_is_identity(tiny_corpus):
+    """If every worker drops every sub-round, λ moves only by the
+    Robbins–Monro decay toward β₀ + ⟨m_vk⟩ and the memo stays untouched."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=2, batch_size=8,
+                                     staleness=2), train, seed=0)
+    idx, _ = eng._sample_round()
+    delay = np.ones((2, 2), bool)
+    m_vk0 = np.asarray(eng.state.m_vk).copy()   # the round donates its args
+    state, shard = eng._round(eng.state, eng.shard,
+                              jnp.asarray(idx, jnp.int32),
+                              jnp.asarray(delay), eng.num_words_total)
+    # no corrections folded in, no documents visited, no mass retired
+    np.testing.assert_array_equal(np.asarray(state.m_vk), m_vk0)
+    assert not bool(shard.visited.any())
+    assert float(state.init_frac) == 1.0
+    assert int(state.t) == 2  # the master clock still ticks per sub-round
+
+
+def test_divi_staleness_processes_s_batches_per_round(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=2, batch_size=8,
+                                     staleness=3), train, seed=0)
+    eng.run_round()
+    assert int(eng.state.t) == 3           # one master update per sub-round
+    assert eng.docs_seen == 2 * 3 * 8      # P × S × B (no delays)
+
+
+def test_shard_corpus_partitions_in_order(tiny_corpus):
+    train, _, spec = tiny_corpus
+    shard, dw = shard_corpus(train, 4, 8)
+    assert dw == train.num_docs // 4
+    np.testing.assert_array_equal(
+        np.asarray(shard.token_ids).reshape(4 * dw, -1),
+        np.asarray(train.token_ids)[: 4 * dw])
+    assert shard.pi.shape == (4, dw, train.max_unique, 8)
+
+
+def test_divi_init_mass_fully_retired_after_cover(tiny_corpus):
+    """Once every document has been visited, λ = β₀+⟨m_vk⟩ exactly at the
+    λ̂ level: init_frac snaps to exact zero (the eq. 4 invariant)."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    eng = DIVIEngine(cfg, DIVIConfig(num_workers=4, batch_size=24), train,
+                     seed=0)
+    for _ in range(8):   # 96 docs / (4×24 per round) — covered many times
+        eng.run_round()
+    assert bool(eng.shard.visited.all())
+    assert float(eng.state.init_frac) == 0.0

@@ -5,15 +5,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS
 from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_abstract_mesh
 from repro.models import transformer as T
 from repro.sharding import cache_specs, fsdp_axes, param_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH3 = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisibility(shapes, specs, mesh):

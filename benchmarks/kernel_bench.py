@@ -6,9 +6,30 @@ their timings are NOT the TPU numbers. What we measure and report:
     throughput reference;
   * the gather-formulation E-step (engine default);
   * kernel-vs-oracle max error, as a guard.
+
+``estep_report`` (also ``python -m benchmarks.kernel_bench --estep-json``)
+compares the OLD per-sweep Pallas path (`ops.estep_pallas_sweeps` + jnp
+memo correction) against the FUSED path (`ops.memo_correction_pallas`) and
+emits ``BENCH_estep.json``:
+
+  * tokens/s and fixed-point sweep counts for both paths (interpret-mode
+    wall time — a CPU proxy, kept for trend tracking only);
+  * kernel-launch structure from the jaxpr (`hlo_analysis.
+    pallas_call_sites`): the fused path must show ``under_loop == 0``
+    (one pallas_call per fixed point, not one per sweep) and
+    ``blk_intermediates == 0`` (no (B, L, K) jnp math);
+  * a structural HBM-traffic model (`modeled_estep_hbm_bytes`, documented
+    in docs/estep.md): per-sweep block fetches for the old path vs the
+    fused pipeline's fetch-once-per-index-change behaviour plus bf16
+    streaming — the acceptance bar is ≥2× fewer modeled bytes per E-step.
+
 Roofline expectations for the TPU kernel are in EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +40,8 @@ from repro.core import LDAConfig
 from repro.core.estep import estep_dense, estep_gather
 from repro.core.math import exp_dirichlet_expectation
 from repro.data import PAPER_CORPORA, make_corpus
-from repro.kernels import lda_estep, ref
+from repro.kernels import lda_estep, ops, ref
+from repro.launch.hlo_analysis import pallas_call_sites
 
 
 def rows():
@@ -51,4 +73,167 @@ def rows():
         us = time_call(lambda: fn(cfg, eb, ids, cnts))
         out.append((f"kernel/estep_{name}/B64", us,
                     f"tokens_per_s={float(cnts.sum()) / (us / 1e6):.0f}"))
+    return out + estep_rows()
+
+
+# ---------------------------------------------------------------------------
+# fused vs per-sweep E-step: BENCH_estep.json
+# ---------------------------------------------------------------------------
+
+def modeled_estep_hbm_bytes(path: str, b: int, v: int, k: int, l: int,
+                            iters: int, *, stream_bytes: int = 4,
+                            block_b: int = 128, block_v: int = 512,
+                            delta_block_b: int = 16) -> int:
+    """Structural HBM traffic of one E-step + memo correction.
+
+    Counts block fetches/stores the way the Pallas TPU pipeline issues
+    them — a block is (re-)fetched only when its index-map output changes
+    between consecutive grid steps (so with a V-resident layout, nv == 1,
+    the fused kernel reads C once per B-tile and Eφ once per call, while
+    the per-sweep path re-launches and therefore re-reads both every
+    sweep). jnp intermediates count one write + one read each. Worked
+    numbers in docs/estep.md.
+    """
+    nb = -(-b // block_b)
+    nv = -(-v // block_v)
+    bk = b * k * 4
+    if path == "sweeps":
+        # per sweep: one pallas_call (C + nb·Eφ re-read) + γ out + jnp Eθ
+        # recomputation (read γ, write Eθ, kernel reads Eθ)
+        per_sweep = (b * v + nb * v * k) * 4 + 4 * bk
+        sstats_kernel = (b * v + nb * v * k + v * k) * 4
+        # jnp π/correction: ebg write+read×2, π write+read, Δ write+read,
+        # old_pi read, scatter out (V, K)
+        pi_path = 7 * b * l * k * 4 + 2 * v * k * 4
+        return iters * per_sweep + sstats_kernel + pi_path
+    if path == "fused":
+        if nv == 1:
+            c_elems, eb_elems = b * v, v * k          # fetched once
+        else:
+            c_elems = iters * b * v                   # re-streamed per sweep
+            eb_elems = iters * nb * v * k
+        fixed_point = (c_elems + eb_elems) * stream_bytes + 3 * bk
+        # memo_delta kernel: ids+cnts+ebtok+old_pi in, π out, and the two
+        # (V, K) one-hot accumulators spilled once per revisiting B-tile
+        nbd = -(-b // delta_block_b)
+        delta = (2 * b * l * 4 + 3 * b * l * k * 4
+                 + 2 * (2 * nbd - 1) * v * k * 4 + bk)
+        return fixed_point + delta
+    raise ValueError(path)
+
+
+def estep_report(json_path: str | None = None):
+    """Old per-sweep vs fused Pallas E-step: the BENCH_estep record.
+
+    The shape keeps Eφ V-resident (one V tile) — the regime the fused
+    kernel targets; at larger V both paths stream Eφ per sweep and the
+    fused win reduces to the removed γ/Eθ round-trips, the removed
+    (B, L, K) jnp path and the bf16 streams.
+    """
+    b, v, k, l = 128, 4096, 128, 64
+    block_v = 4096                         # V-resident: Eφ one VMEM block
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+    cnts = jnp.asarray((rng.poisson(1.5, (b, l)) + 1).astype(np.float32))
+    lam = jax.random.gamma(jax.random.key(0), 100.0, (v, k)) * 0.01
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    old_pi = jnp.zeros((b, l, k), jnp.float32)
+    visited = jnp.zeros((b,), bool)
+    cfg = LDAConfig(num_topics=k, vocab_size=v, estep_max_iters=30,
+                    estep_backend="pallas")
+    cfg_bf16 = dataclasses.replace(cfg, estep_stream_dtype="bfloat16")
+    tokens = float(cnts.sum())
+
+    def legacy_correction(cfg_):
+        """Pre-fusion path: per-sweep kernel + jnp subtract-old/add-new."""
+        from repro.core.estep import scatter_sstats
+        res = ops.estep_pallas_sweeps(cfg_, eb, ids, cnts,
+                                      block_v=block_v)
+        delta = cnts[:, :, None] * (res.pi - old_pi)
+        return scatter_sstats(ids, delta, cfg_.vocab_size), res
+
+    def fused_correction(cfg_, pi_dtype="float32"):
+        corr, _, res = ops.memo_correction_pallas(cfg_, eb, ids, cnts,
+                                                  old_pi, visited,
+                                                  pi_dtype=pi_dtype,
+                                                  block_v=block_v)
+        return corr, res
+
+    def fused_bf16_correction(cfg_):
+        # bf16 streams AND the bf16 memo wire (the chunked-store config)
+        return fused_correction(cfg_, pi_dtype="bfloat16")
+
+    corr_old, res_old = legacy_correction(cfg)
+    corr_new, _ = fused_correction(cfg)
+    max_err = float(jnp.abs(corr_old - corr_new).max())
+
+    record = {
+        "shape": {"B": b, "V": v, "K": k, "L": l, "block_v": block_v},
+        "correction_max_abs_err": max_err,
+        "paths": {},
+    }
+    for name, fn, cfg_, stream in (
+            ("sweeps", legacy_correction, cfg, 4),
+            ("fused", fused_correction, cfg, 4),
+            ("fused_bf16", fused_bf16_correction, cfg_bf16, 2)):
+        us = time_call(lambda: fn(cfg_), warmup=1, iters=3)
+        sites = pallas_call_sites(lambda: fn(cfg_))
+        iters = int(fn(cfg_)[1].iters)      # each config's own convergence
+        path_kind = "sweeps" if name == "sweeps" else "fused"
+        modeled = modeled_estep_hbm_bytes(
+            path_kind, b, v, k, l, iters, stream_bytes=stream,
+            block_v=block_v)
+        record["paths"][name] = {
+            "interpret_us": us,
+            "tokens_per_s_interpret": tokens / (us / 1e6),
+            "sweeps": iters,
+            "kernel_sites": sites,
+            "modeled_hbm_bytes": modeled,
+        }
+    base = record["paths"]["sweeps"]["modeled_hbm_bytes"]
+    for name in ("fused", "fused_bf16"):
+        record["paths"][name]["hbm_ratio_vs_sweeps"] = (
+            base / record["paths"][name]["modeled_hbm_bytes"])
+    record["meets_2x_hbm_bar"] = (
+        record["paths"]["fused"]["hbm_ratio_vs_sweeps"] >= 2.0)
+    record["fused_single_launch_ok"] = (
+        record["paths"]["fused"]["kernel_sites"]["under_loop"] == 0
+        and record["paths"]["fused"]["kernel_sites"]["blk_intermediates"] == 0)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def estep_rows():
+    rec = estep_report()
+    out = []
+    for name, p in rec["paths"].items():
+        ratio = p.get("hbm_ratio_vs_sweeps", 1.0)
+        out.append((f"kernel/estep_{name}/B128_V4096", p["interpret_us"],
+                    f"sweeps={p['sweeps']} hbm_x={ratio:.2f} "
+                    f"launches={p['kernel_sites']['total']} "
+                    f"under_loop={p['kernel_sites']['under_loop']}"))
     return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--estep-json", default="BENCH_estep.json",
+                    help="where to write the fused-vs-sweeps record")
+    args = ap.parse_args()
+    rec = estep_report(args.estep_json)
+    f, fb = rec["paths"]["fused"], rec["paths"]["fused_bf16"]
+    print(f"BENCH_estep -> {args.estep_json}")
+    print(f"  sweeps path : {rec['paths']['sweeps']['sweeps']} sweeps, "
+          f"{rec['paths']['sweeps']['modeled_hbm_bytes'] / 1e6:.1f} MB modeled")
+    print(f"  fused       : {f['sweeps']} sweeps, "
+          f"{f['modeled_hbm_bytes'] / 1e6:.1f} MB "
+          f"({f['hbm_ratio_vs_sweeps']:.2f}x fewer), "
+          f"launches={f['kernel_sites']['total']} "
+          f"under_loop={f['kernel_sites']['under_loop']} "
+          f"blk_jnp={f['kernel_sites']['blk_intermediates']}")
+    print(f"  fused bf16  : {fb['hbm_ratio_vs_sweeps']:.2f}x fewer bytes")
+    print(f"  correction max |Δ| = {rec['correction_max_abs_err']:.2e}")
+    assert rec["meets_2x_hbm_bar"], "fused path lost the 2x HBM bar"
+    assert rec["fused_single_launch_ok"], "fused path regressed to per-sweep"

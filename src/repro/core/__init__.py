@@ -3,11 +3,16 @@
 MVI / SVI baselines plus the paper's IVI, S-IVI (single host) and D-IVI
 (distributed, in ``repro.dist``) engines for LDA.
 """
-from repro.core.types import Corpus, LDAConfig, GlobalState, Memo
-from repro.core.engines import (EngineState, LDAEngine, init_engine_state,
-                                ivi_step, mvi_epoch, sivi_step, svi_step)
-from repro.core.estep import EStepResult, estep, estep_dense, estep_gather
-from repro.core.bound import elbo_collapsed, elbo_memoized
+from repro.core.types import (Corpus, LDAConfig, GlobalState, Memo,
+                              init_global_state, init_memo)
+from repro.core.engines import (EngineState, LDAEngine, incremental_update,
+                                init_engine_state, ivi_step, memo_correction,
+                                mvi_scan, sivi_step, svi_step)
+from repro.core.estep import (BowBatch, EStepBackend, EStepResult, estep,
+                              estep_dense, estep_gather, get_backend)
+from repro.core.memo import (ChunkedMemoStore, DenseMemoStore, GammaMemoStore,
+                             MemoStore, make_memo_store, memo_footprint_bytes)
+from repro.core.bound import elbo_collapsed, elbo_memoized, elbo_memoized_store
 from repro.core.predictive import log_predictive, split_heldout
 from repro.core.cvb0 import CVB0Engine, cvb0_step, init_cvb0
 from repro.core.metrics import effective_topics, npmi_coherence, top_words

@@ -29,17 +29,48 @@ def _topics_term(cfg: LDAConfig, lam: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
+def _memoized_doc_terms(cfg: LDAConfig, token_ids: jax.Array,
+                        counts: jax.Array, gamma: jax.Array, pi: jax.Array,
+                        elog_beta: jax.Array) -> jax.Array:
+    """Per-document ELBO terms at memoized π: words + θ-Dirichlet pieces."""
+    elog_theta = dirichlet_expectation(gamma)              # (B, K)
+    eb = elog_beta[token_ids]                              # (B, L, K)
+    # Σ_d Σ_l cnt Σ_k π (E[lnθ] + E[lnφ] − ln π)
+    inner = pi * (elog_theta[:, None, :] + eb - jnp.log(pi + _EPS))
+    words = jnp.sum(counts[:, :, None] * inner)
+    return words + dirichlet_elbo_term(gamma, cfg.alpha0, elog_theta, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
 def elbo_memoized(cfg: LDAConfig, corpus: Corpus, gamma: jax.Array,
                   pi: jax.Array, lam: jax.Array) -> jax.Array:
     """Exact ELBO at (γ, π, λ); π token-aligned (D, L, K), zero at padding."""
-    elog_theta = dirichlet_expectation(gamma)              # (D, K)
-    elog_beta = dirichlet_expectation(lam, axis=0)         # (V, K)
-    eb = elog_beta[corpus.token_ids]                       # (D, L, K)
-    # Σ_d Σ_l cnt Σ_k π (E[lnθ] + E[lnφ] − ln π)
-    inner = pi * (elog_theta[:, None, :] + eb - jnp.log(pi + _EPS))
-    words = jnp.sum(corpus.counts[:, :, None] * inner)
-    theta_term = dirichlet_elbo_term(gamma, cfg.alpha0, elog_theta, axis=-1)
-    return words + theta_term + _topics_term(cfg, lam)
+    doc_terms = _memoized_doc_terms(cfg, corpus.token_ids, corpus.counts,
+                                    gamma, pi, dirichlet_expectation(lam,
+                                                                     axis=0))
+    return doc_terms + _topics_term(cfg, lam)
+
+
+def elbo_memoized_store(cfg: LDAConfig, corpus: Corpus, store,
+                        lam: jax.Array, *, batch_docs: int = 512) -> jax.Array:
+    """The memoized ELBO read through a ``MemoStore``, chunk by chunk.
+
+    Never materialises the (D, L, K) memo: each store chunk is gathered,
+    its γ reconstructed from the memo (γ = α₀ + Σ_l cnt·π, Alg. 1 line 6),
+    and its word/θ terms accumulated. With the dense store this equals
+    ``elbo_memoized`` up to fp summation order; with the bf16-chunked or
+    γ-only stores the π that enters IS the store's (compressed) memo, so
+    the bound reported is the bound of the state the engine actually holds.
+    """
+    elog_beta = dirichlet_expectation(lam, axis=0)
+    total = jnp.zeros(())
+    for idx, pi, _vis in store.iter_chunks(batch_docs):
+        ids = corpus.token_ids[jnp.asarray(idx)]
+        cnts = corpus.counts[jnp.asarray(idx)]
+        gamma = cfg.alpha0 + jnp.einsum("blk,bl->bk", pi, cnts)
+        total = total + _memoized_doc_terms(cfg, ids, cnts, gamma, pi,
+                                            elog_beta)
+    return total + _topics_term(cfg, lam)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -1,8 +1,10 @@
 """Single-host inference engines for LDA: MVI, SVI, IVI, S-IVI.
 
-All four share the batched E-step (`repro.core.estep`); they differ only in
-how the global topic-word parameter λ is updated — exactly the contrast the
-paper draws:
+All four consume the E-step through the ``EStepBackend`` contract
+(`repro.core.estep`) and the incremental engines access their π memos
+through the pluggable ``MemoStore`` (`repro.core.memo`); they differ only
+in how the global topic-word parameter λ is updated — exactly the contrast
+the paper draws:
 
 * **MVI**  (batch, Blei et al. 2003): λ = β₀ + Σ_d s_d after a full pass.
 * **SVI**  (Hoffman et al. 2013, eq. 3): λ ← (1−ρ_t)λ + ρ_t(β₀ + (D/|B|)·s_B).
@@ -24,65 +26,49 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bound import elbo_collapsed, elbo_memoized_store
 from repro.core import estep as estep_mod
-from repro.core.bound import elbo_collapsed, elbo_memoized
-from repro.core.estep import estep, scatter_sstats
+from repro.core.estep import BowBatch, estep, get_backend
 from repro.core.math import exp_dirichlet_expectation
+from repro.core.memo import MemoStore, make_memo_store
 from repro.core.predictive import log_predictive, split_heldout
-from repro.core.types import Corpus, LDAConfig, Memo
+from repro.core.types import (Corpus, GlobalState, LDAConfig, Memo,
+                              init_global_state)
 
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class EngineState:
-    """Variational state for every single-host engine (unused fields zero)."""
-
-    lam: jax.Array         # (V, K) topic-word Dirichlet parameter
-    m_vk: jax.Array        # (V, K) incremental accumulator ⟨m_vk⟩
-    init_mass: jax.Array   # (V, K) un-attributed random-init mass
-    init_frac: jax.Array   # () share of init_mass still live in λ
-    t: jax.Array           # () int32 update counter (drives ρ_t)
-
-
-def init_engine_state(cfg: LDAConfig, key: jax.Array) -> EngineState:
-    lam = jax.random.gamma(key, 100.0,
-                           (cfg.vocab_size, cfg.num_topics)) * 0.01
-    return EngineState(
-        lam=lam,
-        m_vk=jnp.zeros_like(lam),
-        init_mass=lam - cfg.beta0,
-        init_frac=jnp.ones(()),
-        t=jnp.zeros((), jnp.int32),
-    )
+# The canonical global-state constructor set lives in ``repro.core.types``;
+# these aliases keep the historical engine-level names working everywhere
+# (single-host and ``repro.dist`` both build state through them).
+EngineState = GlobalState
+init_engine_state = init_global_state
 
 
 # ---------------------------------------------------------------------------
 # MVI — batch coordinate ascent
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 5))
-def mvi_epoch(cfg: LDAConfig, state: EngineState, ids_b: jax.Array,
-              cnts_b: jax.Array, doc_idx_b: jax.Array,
-              gamma_buf: jax.Array
-              ) -> tuple[EngineState, jax.Array, jax.Array]:
-    """One full batch pass. ids_b/cnts_b/doc_idx_b: (num_batches, B, ...).
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(5, 6))
+def mvi_scan(cfg: LDAConfig, eb: jax.Array, ids_b: jax.Array,
+             cnts_b: jax.Array, doc_idx_b: jax.Array, gamma_buf: jax.Array,
+             sstats: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scan the E-step over stacked batches, accumulating Σ_d s_d.
 
-    γ persists across epochs in ``gamma_buf`` (D, K): each document's E-step
-    resumes from α₀ + Σ_l cnt·π of its previous visit — proper batch
-    coordinate ascent in the sense of Neal & Hinton (1998), and the *same*
-    warm-start reconstruction the incremental engines use. Without this,
-    a ``estep_max_iters``-truncated E-step restarts from scratch every
-    epoch while IVI resumes from its memo, and the two full-batch
-    trajectories drift apart for reasons that have nothing to do with the
-    incremental bookkeeping (see test_fullbatch_ivi_equals_mvi).
+    ids_b/cnts_b/doc_idx_b: (num_batches, B, ...). γ persists across epochs
+    in ``gamma_buf`` (D+1, K): each document's E-step resumes from
+    α₀ + Σ_l cnt·π of its previous visit — proper batch coordinate ascent
+    in the sense of Neal & Hinton (1998), and the *same* warm-start
+    reconstruction the incremental engines use. Without this, a
+    ``estep_max_iters``-truncated E-step restarts from scratch every epoch
+    while IVI resumes from its memo, and the two full-batch trajectories
+    drift apart for reasons that have nothing to do with the incremental
+    bookkeeping (see test_fullbatch_ivi_equals_mvi). Row D of ``gamma_buf``
+    is the sentinel scratch slot the tail batch's padding writes to.
     """
-    eb = exp_dirichlet_expectation(state.lam, axis=0)
 
     def body(carry, batch):
         acc, gbuf = carry
@@ -90,14 +76,11 @@ def mvi_epoch(cfg: LDAConfig, state: EngineState, ids_b: jax.Array,
         res = estep(cfg, eb, ids, cnts, gbuf[idx])
         gbuf = gbuf.at[idx].set(
             cfg.alpha0 + jnp.einsum("blk,bl->bk", res.pi, cnts))
-        return (acc + res.sstats, gbuf), res.gamma
+        return (acc + res.sstats, gbuf), None
 
-    (sstats, gamma_buf), gammas = jax.lax.scan(
-        body, (jnp.zeros_like(state.lam), gamma_buf),
-        (ids_b, cnts_b, doc_idx_b))
-    lam = cfg.beta0 + sstats
-    new = dataclasses.replace(state, lam=lam, t=state.t + 1)
-    return new, gamma_buf, gammas.reshape(-1, cfg.num_topics)
+    (sstats, gamma_buf), _ = jax.lax.scan(
+        body, (sstats, gamma_buf), (ids_b, cnts_b, doc_idx_b))
+    return sstats, gamma_buf
 
 
 # ---------------------------------------------------------------------------
@@ -122,28 +105,20 @@ def svi_step(cfg: LDAConfig, state: EngineState, ids: jax.Array,
 
 def memo_correction(cfg: LDAConfig, eb: jax.Array, ids: jax.Array,
                     cnts: jax.Array, old_pi: jax.Array,
-                    visited_rows: jax.Array):
+                    visited_rows: jax.Array, pi_dtype: str = "float32"):
     """E-step + subtract-old/add-new core shared by IVI, S-IVI and D-IVI.
 
-    The distributed engine (``repro.dist``) calls this same function for its
-    workers, which is what keeps the single-host and distributed paths
-    numerically interchangeable (test_divi_single_worker_round_equals_sivi_step).
+    Dispatches to ``cfg.estep_backend``'s ``solve_correction`` — the jnp
+    backends scatter the token-aligned delta, the Pallas backend fuses the
+    whole thing into its kernels. The distributed engine (``repro.dist``)
+    calls this same function for its workers, which is what keeps the
+    single-host and distributed paths numerically interchangeable
+    (test_divi_single_worker_round_equals_sivi_step).
 
     Returns (correction (V, K), first-visit word count, EStepResult).
     """
-    # Warm-start γ from the memo for already-visited documents: coordinate
-    # ascent from the memoized point can only improve the bound, which is
-    # what makes IVI's monotonicity exact (fresh inits could hop to a worse
-    # local optimum of the per-document subproblem).
-    gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, cnts)
-    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
-    gamma0 = jnp.where(visited_rows[:, None], gamma_memo, fresh)
-    res = estep(cfg, eb, ids, cnts, gamma0)
-
-    delta = cnts[:, :, None] * (res.pi - old_pi)
-    correction = scatter_sstats(ids, delta, cfg.vocab_size)  # (V, K)
-    words_first = jnp.sum(jnp.where(~visited_rows, cnts.sum(-1), 0.0))
-    return correction, words_first, res
+    return get_backend(cfg.estep_backend).solve_correction(
+        cfg, eb, BowBatch(ids, cnts), old_pi, visited_rows, pi_dtype)
 
 
 def retire_init_frac(init_frac: jax.Array, words_first: jax.Array,
@@ -161,8 +136,7 @@ def sivi_global_update(cfg: LDAConfig, state, corr: jax.Array,
                        frac: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Eq. 5 global step: λ ← (1−ρ_t)λ + ρ_t(β₀ + ⟨m_vk⟩⁺ + frac·init_mass).
 
-    Duck-typed over EngineState / the distributed DIVIState (same fields);
-    elementwise in V, so it applies unchanged to the model-sharded rows of
+    Elementwise in V, so it applies unchanged to the model-sharded rows of
     ``repro.dist`` — keeping the single-host and distributed master updates
     one code path. Returns (λ, ⟨m_vk⟩⁺); the caller bumps ``t``.
     """
@@ -173,20 +147,59 @@ def sivi_global_update(cfg: LDAConfig, state, corr: jax.Array,
     return lam, m_vk
 
 
-def _incremental_correction(cfg: LDAConfig, state: EngineState, memo: Memo,
-                            ids: jax.Array, cnts: jax.Array,
-                            doc_idx: jax.Array, num_words_total: jax.Array):
-    """Shared E-step + subtract-old/add-new bookkeeping.
-
-    Returns (correction (V,K), new memo, new init_frac, gamma).
-    """
+def _incremental_core(cfg: LDAConfig, averaged: bool, state: EngineState,
+                      ids: jax.Array, cnts: jax.Array, old_pi: jax.Array,
+                      visited: jax.Array, num_words_total: jax.Array,
+                      pi_dtype: str):
+    """THE eq. 4 / eq. 5 update — every incremental entry point wraps it."""
     eb = exp_dirichlet_expectation(state.lam, axis=0)
-    correction, words_first, res = memo_correction(
-        cfg, eb, ids, cnts, memo.pi[doc_idx], memo.visited[doc_idx])
-    new_frac = retire_init_frac(state.init_frac, words_first, num_words_total)
+    corr, words_first, res = memo_correction(cfg, eb, ids, cnts, old_pi,
+                                             visited, pi_dtype)
+    frac = retire_init_frac(state.init_frac, words_first, num_words_total)
+    if averaged:
+        lam, m_vk = sivi_global_update(cfg, state, corr, frac)
+    else:
+        m_vk = state.m_vk + corr
+        lam = cfg.beta0 + m_vk + frac * state.init_mass
+    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
+                                t=state.t + 1)
+    return state, res, eb
+
+
+@partial(jax.jit, static_argnames=("cfg", "averaged", "pi_dtype"),
+         donate_argnums=(2, 5))
+def incremental_update(cfg: LDAConfig, averaged: bool, state: EngineState,
+                       ids: jax.Array, cnts: jax.Array, old_pi: jax.Array,
+                       visited: jax.Array, num_words_total: jax.Array,
+                       pi_dtype: str = "float32"):
+    """One IVI (``averaged=False``, eq. 4) or S-IVI (eq. 5) global update.
+
+    Pure in the memo: takes the gathered (π_old, visited) rows from a
+    ``MemoStore`` and returns the new π for the host to write back —
+    the store itself never crosses the jit boundary, which is what lets
+    the bf16-chunked and γ-only stores live in host RAM. ``pi_dtype`` is
+    the store's wire dtype: π is rounded through it before the add-new
+    scatter so ⟨m_vk⟩ stays bit-consistent with the store's contents.
+
+    Returns (state, π_new (B, L, K), Eφ) — Eφ so γ-only stores can
+    snapshot the λ-epoch the E-step ran against.
+    """
+    state, res, eb = _incremental_core(cfg, averaged, state, ids, cnts,
+                                       old_pi, visited, num_words_total,
+                                       pi_dtype)
+    return state, res.pi, eb
+
+
+def _raw_memo_step(cfg: LDAConfig, averaged: bool, state: EngineState,
+                   memo: Memo, ids: jax.Array, cnts: jax.Array,
+                   doc_idx: jax.Array, num_words_total: jax.Array):
+    """Raw-``Memo`` convenience wrapper over the same core."""
+    state, res, _ = _incremental_core(
+        cfg, averaged, state, ids, cnts, memo.pi[doc_idx],
+        memo.visited[doc_idx], num_words_total, "float32")
     memo = Memo(pi=memo.pi.at[doc_idx].set(res.pi),
                 visited=memo.visited.at[doc_idx].set(True))
-    return correction, memo, new_frac, res.gamma
+    return state, memo
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
@@ -194,13 +207,8 @@ def ivi_step(cfg: LDAConfig, state: EngineState, memo: Memo, ids: jax.Array,
              cnts: jax.Array, doc_idx: jax.Array,
              num_words_total: jax.Array) -> tuple[EngineState, Memo]:
     """Algorithm 1: partial E-step, then exact incremental M-step (eq. 4)."""
-    corr, memo, frac, _ = _incremental_correction(
-        cfg, state, memo, ids, cnts, doc_idx, num_words_total)
-    m_vk = state.m_vk + corr
-    lam = cfg.beta0 + m_vk + frac * state.init_mass
-    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
-                                t=state.t + 1)
-    return state, memo
+    return _raw_memo_step(cfg, False, state, memo, ids, cnts, doc_idx,
+                          num_words_total)
 
 
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1, 2))
@@ -208,12 +216,8 @@ def sivi_step(cfg: LDAConfig, state: EngineState, memo: Memo, ids: jax.Array,
               cnts: jax.Array, doc_idx: jax.Array,
               num_words_total: jax.Array) -> tuple[EngineState, Memo]:
     """Eq. 5: the incremental estimate inside a Robbins–Monro average."""
-    corr, memo, frac, _ = _incremental_correction(
-        cfg, state, memo, ids, cnts, doc_idx, num_words_total)
-    lam, m_vk = sivi_global_update(cfg, state, corr, frac)
-    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
-                                t=state.t + 1)
-    return state, memo
+    return _raw_memo_step(cfg, True, state, memo, ids, cnts, doc_idx,
+                          num_words_total)
 
 
 # ---------------------------------------------------------------------------
@@ -229,27 +233,54 @@ class History:
 
 
 class LDAEngine:
-    """Host driver: shuffling, mini-batching, evaluation, timing."""
+    """Host driver: shuffling, mini-batching, evaluation, timing.
+
+    ``memo_store`` selects the π-memo representation for the incremental
+    engines: ``dense`` (device fp32 oracle), ``chunked`` (bf16 host
+    chunks) or ``gamma`` (γ-only reconstruction — S-IVI only, the eq. 4
+    exactness needs the true π). ``bucket_by_length=True`` batches each
+    epoch inside length buckets (`repro.data.bow.bucket_corpus`), so
+    E-step FLOPs and memo traffic scale with each bucket's own padding
+    width instead of the corpus-wide maximum.
+    """
 
     def __init__(self, cfg: LDAConfig, corpus: Corpus, *, algo: str,
                  batch_size: int = 64, seed: int = 0,
-                 test_corpus: Optional[Corpus] = None):
+                 test_corpus: Optional[Corpus] = None,
+                 memo_store: str = "dense", chunk_docs: int = 8192,
+                 bucket_by_length: bool = False):
         assert algo in ("mvi", "svi", "ivi", "sivi")
         self.cfg, self.corpus, self.algo = cfg, corpus, algo
         self.batch_size = batch_size
         self.rng = np.random.default_rng(seed)
         self.state = init_engine_state(cfg, jax.random.key(seed))
-        self.memo = None
+        self.memo: Optional[MemoStore] = None
         self._gamma_buf = None
+        self._buckets = None
         if algo in ("ivi", "sivi"):
-            self.memo = Memo(
-                pi=jnp.zeros((corpus.num_docs, corpus.max_unique,
-                              cfg.num_topics), jnp.float32),
-                visited=jnp.zeros((corpus.num_docs,), bool))
+            if memo_store == "gamma" and algo == "ivi":
+                raise ValueError(
+                    "the γ-only store reconstructs π approximately — it "
+                    "breaks IVI's exact eq. 4 accumulator; use it with "
+                    "sivi (or divi), or pick dense/chunked for ivi")
+            self.memo = make_memo_store(memo_store, cfg, corpus.num_docs,
+                                        corpus.max_unique, corpus=corpus,
+                                        chunk_docs=chunk_docs)
         elif algo == "mvi":
-            # per-document warm starts carried across epochs (see mvi_epoch)
-            self._gamma_buf = jnp.full((corpus.num_docs, cfg.num_topics),
+            # per-document warm starts carried across epochs (see mvi_scan);
+            # row D is the sentinel slot for the tail batch's padding
+            self._gamma_buf = jnp.full((corpus.num_docs + 1, cfg.num_topics),
                                        cfg.alpha0 + 1.0, jnp.float32)
+            zrow_i = jnp.zeros((1, corpus.max_unique), jnp.int32)
+            zrow_c = jnp.zeros((1, corpus.max_unique), jnp.float32)
+            self._mvi_ids = jnp.concatenate([corpus.token_ids, zrow_i])
+            self._mvi_cnts = jnp.concatenate([corpus.counts, zrow_c])
+        if bucket_by_length:
+            if algo == "mvi":
+                raise ValueError("bucket_by_length applies to the "
+                                 "mini-batch engines (svi/ivi/sivi)")
+            from repro.data.bow import bucket_corpus
+            self._buckets = bucket_corpus(corpus)
         self.num_words_total = jnp.asarray(float(np.asarray(corpus.counts).sum()))
         self.docs_seen = 0
         self.history = History()
@@ -260,45 +291,83 @@ class LDAEngine:
             self._obs = self._held = None
 
     # -- batching ----------------------------------------------------------
-    def _epoch_order(self) -> np.ndarray:
+    def _epoch_order(self) -> List[np.ndarray]:
+        """A full-cover epoch: every document exactly once.
+
+        The ``D % batch_size`` tail documents form a final (smaller) batch
+        instead of being dropped — dropping them meant IVI never visited
+        them, ``init_frac`` never retired to 0, and the post-pass exactness
+        λ = β₀ + ⟨m_vk⟩ (eq. 4) never held.
+        """
         d = self.corpus.num_docs
         order = self.rng.permutation(d)
-        n = (d // self.batch_size) * self.batch_size
-        if n == 0:  # corpus smaller than one batch: sample with replacement
-            return self.rng.choice(d, size=(1, self.batch_size))
-        return order[:n].reshape(-1, self.batch_size)
+        b = self.batch_size
+        if d <= b:
+            return [order]
+        n = (d // b) * b
+        batches = list(order[:n].reshape(-1, b))
+        if d % b:
+            batches.append(order[n:])
+        return batches
+
+    def _bucketed_epoch_order(self) -> List[tuple[np.ndarray, int]]:
+        """Per-bucket batches (rows, width), bucket visit order shuffled."""
+        out: List[tuple[np.ndarray, int]] = []
+        for rows_all, width in zip(self._buckets.doc_idx,
+                                   self._buckets.widths):
+            order = rows_all[self.rng.permutation(len(rows_all))]
+            for lo in range(0, len(order), self.batch_size):
+                out.append((order[lo:lo + self.batch_size], width))
+        self.rng.shuffle(out)
+        return out
 
     # -- steps -------------------------------------------------------------
     def run_epoch(self) -> None:
-        batches = self._epoch_order()
         if self.algo == "mvi":
-            ids = self.corpus.token_ids[batches]     # (nb, B, L)
-            cnts = self.corpus.counts[batches]
-            self.state, self._gamma_buf, _ = mvi_epoch(
-                self.cfg, self.state, ids, cnts, jnp.asarray(batches),
-                self._gamma_buf)
-            self.docs_seen += batches.size
+            self._run_mvi_epoch()
             return
-        for rows in batches:
+        if self._buckets is not None:
+            for rows, width in self._bucketed_epoch_order():
+                self.run_minibatch(rows, width=width)
+            return
+        for rows in self._epoch_order():
             self.run_minibatch(rows)
 
-    def run_minibatch(self, rows: Optional[np.ndarray] = None) -> None:
+    def _run_mvi_epoch(self) -> None:
+        d = self.corpus.num_docs
+        b = min(self.batch_size, d)
+        batches = self._epoch_order()
+        idx = np.full((len(batches), b), d, np.int64)     # sentinel = row D
+        for r, rows in enumerate(batches):
+            idx[r, : len(rows)] = rows
+        idx = jnp.asarray(idx)
+        eb = exp_dirichlet_expectation(self.state.lam, axis=0)
+        sstats, self._gamma_buf = mvi_scan(
+            self.cfg, eb, self._mvi_ids[idx], self._mvi_cnts[idx], idx,
+            self._gamma_buf, jnp.zeros_like(self.state.lam))
+        self.state = dataclasses.replace(
+            self.state, lam=self.cfg.beta0 + sstats, t=self.state.t + 1)
+        self.docs_seen += d
+
+    def run_minibatch(self, rows: Optional[np.ndarray] = None,
+                      width: Optional[int] = None) -> None:
         if rows is None:
             rows = self.rng.choice(self.corpus.num_docs, size=self.batch_size,
                                    replace=False)
         idx = jnp.asarray(rows)
         ids, cnts = self.corpus.token_ids[idx], self.corpus.counts[idx]
+        if width is not None and width < self.corpus.max_unique:
+            ids, cnts = ids[:, :width], cnts[:, :width]
         if self.algo == "svi":
             self.state = svi_step(self.cfg, self.state, ids, cnts,
                                   jnp.asarray(float(self.corpus.num_docs)))
-        elif self.algo == "ivi":
-            self.state, self.memo = ivi_step(
-                self.cfg, self.state, self.memo, ids, cnts, idx,
-                self.num_words_total)
-        elif self.algo == "sivi":
-            self.state, self.memo = sivi_step(
-                self.cfg, self.state, self.memo, ids, cnts, idx,
-                self.num_words_total)
+        elif self.algo in ("ivi", "sivi"):
+            old_pi, visited = self.memo.gather(rows, width=width)
+            self.state, new_pi, eb = incremental_update(
+                self.cfg, self.algo == "sivi", self.state, ids, cnts,
+                old_pi, visited, self.num_words_total,
+                self.memo.pi_wire_dtype)
+            self.memo = self.memo.update(rows, new_pi, exp_elog_beta=eb)
         else:
             raise ValueError(self.algo)
         self.docs_seen += len(rows)
@@ -319,17 +388,19 @@ class LDAEngine:
 
         For the incremental engines this is the *memoized* bound — the exact
         objective at (γ(π_memo), π_memo, λ), the quantity IVI monotonically
-        increases (γ is α₀ + Σ_l cnt·π, Alg. 1 line 6, so it is derived from
-        the memo and stays consistent with it). For MVI/SVI we report the
-        collapsed bound at freshly fitted γ.
+        increases — read through the ``MemoStore`` chunk by chunk (γ is
+        α₀ + Σ_l cnt·π, Alg. 1 line 6, so it is derived from the memo and
+        stays consistent with it). For MVI/SVI we report the collapsed
+        bound at freshly fitted γ.
         """
         cfg = self.cfg
         if self.memo is not None:
-            gamma = cfg.alpha0 + jnp.einsum(
-                "dlk,dl->dk", self.memo.pi, self.corpus.counts)
-            return float(elbo_memoized(cfg, self.corpus, gamma,
-                                       self.memo.pi, self.state.lam))
+            return float(elbo_memoized_store(cfg, self.corpus, self.memo,
+                                             self.state.lam))
         eb = exp_dirichlet_expectation(self.state.lam, axis=0)
+        # deliberately the gather backend regardless of cfg.estep_backend:
+        # this is a full-corpus E-step, and the dense/pallas formulations
+        # would densify all D documents into a (D, V) matrix at once
         res = estep_mod.estep_gather(cfg, eb, self.corpus.token_ids,
                                      self.corpus.counts)
         return float(elbo_collapsed(cfg, self.corpus, res.gamma,

@@ -1,22 +1,36 @@
-"""Batched variational E-step for LDA.
+"""Batched variational E-step for LDA, behind one backend contract.
 
-Two interchangeable formulations:
+Every engine (MVI / SVI / IVI / S-IVI / D-IVI) consumes the E-step through
+``EStepBackend`` — the single protocol all formulations implement:
+
+* ``solve(cfg, exp_elog_beta, batch, gamma0) -> EStepResult`` — run the
+  per-document fixed point (Alg. 1 lines 4–7) on a padded BOW mini-batch.
+* ``solve_correction(cfg, exp_elog_beta, batch, old_pi, visited)`` — the
+  IVI hot path: E-step **plus** the subtract-old/add-new memo correction
+  Σ_d cnt·(π_new − π_old) scattered into (V, K), with γ warm-started from
+  the memo for visited documents.
+
+Three backends:
 
 * ``gather`` — token-aligned: gathers rows of exp(E[ln φ]) at the batch's
   token ids, shape (B, L, K). Memory-proportional to batch token count;
   the default on CPU and for the engines' correctness paths.
 * ``dense`` — densifies the mini-batch into a count matrix C (B, V) so one
-  fixed-point sweep is two MXU matmuls. This is the formulation the Pallas
-  kernel (`repro.kernels.lda_estep`) implements; ``dense`` here is its
-  pure-jnp twin and oracle.
+  fixed-point sweep is two MXU matmuls: the pure-jnp oracle of the kernels.
+* ``pallas`` — the TPU kernels (`repro.kernels.ops`): the whole γ fixed
+  point is ONE fused ``pallas_call`` (γ/Eθ resident in VMEM scratch, Eφ
+  streamed once per sweep via the V grid, in-kernel convergence flag), and
+  ``solve_correction`` emits token-aligned π and the (V, K) correction
+  from a second fused kernel with no (B, L, K) jnp intermediates.
 
-Both return the converged document-topic parameter γ and the memoized
-responsibilities π in token layout (B, L, K) — the quantity IVI stores.
+All backends return the converged document-topic parameter γ and the
+memoized responsibilities π in token layout (B, L, K) — the quantity IVI
+stores.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +39,13 @@ from repro.core.math import exp_dirichlet_expectation
 from repro.core.types import LDAConfig
 
 _EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
+
+
+class BowBatch(NamedTuple):
+    """A padded unique-token bag-of-words mini-batch (both (B, L))."""
+
+    token_ids: jax.Array
+    counts: jax.Array
 
 
 class EStepResult(NamedTuple):
@@ -59,6 +80,26 @@ def scatter_sstats(token_ids: jax.Array, weighted_pi: jax.Array,
     flat_ids = token_ids.reshape(-1)
     flat_vals = weighted_pi.reshape(-1, k)
     return jnp.zeros((vocab_size, k), weighted_pi.dtype).at[flat_ids].add(flat_vals)
+
+
+def quantize_pi(pi: jax.Array, pi_dtype: str) -> jax.Array:
+    """Round π through the memo store's wire dtype (fp32 result)."""
+    if pi_dtype == "float32":
+        return pi
+    return pi.astype(jnp.dtype(pi_dtype)).astype(jnp.float32)
+
+
+def warm_start_gamma(cfg: LDAConfig, counts: jax.Array, old_pi: jax.Array,
+                     visited: jax.Array) -> jax.Array:
+    """Memo-derived γ₀ (Alg. 1 line 6) for visited docs, fresh otherwise.
+
+    Coordinate ascent from the memoized point can only improve the bound,
+    which is what makes IVI's monotonicity exact (fresh inits could hop to
+    a worse local optimum of the per-document subproblem).
+    """
+    gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, counts)
+    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
+    return jnp.where(visited[:, None], gamma_memo, fresh)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -134,14 +175,103 @@ def estep_dense(cfg: LDAConfig, exp_elog_beta: jax.Array,
     return EStepResult(gamma=gamma, pi=pi, sstats=sstats, iters=iters)
 
 
+# ---------------------------------------------------------------------------
+# The backend contract
+# ---------------------------------------------------------------------------
+
+class EStepBackend:
+    """One E-step contract for all engines.
+
+    Subclasses implement ``solve``; ``solve_correction`` has a default
+    jnp implementation in terms of ``solve`` (token-aligned subtract-old/
+    add-new) that the Pallas backend overrides with fused kernels.
+    """
+
+    name: str = "abstract"
+
+    def solve(self, cfg: LDAConfig, exp_elog_beta: jax.Array,
+              batch: BowBatch,
+              gamma0: Optional[jax.Array] = None) -> EStepResult:
+        raise NotImplementedError
+
+    def solve_correction(
+            self, cfg: LDAConfig, exp_elog_beta: jax.Array, batch: BowBatch,
+            old_pi: jax.Array, visited: jax.Array,
+            pi_dtype: str = "float32",
+    ) -> Tuple[jax.Array, jax.Array, EStepResult]:
+        """E-step + memo correction: the hot path of IVI / S-IVI / D-IVI.
+
+        ``pi_dtype`` is the memo store's wire dtype: π is rounded to it
+        BEFORE the add-new side of the correction, so what ⟨m_vk⟩ adds is
+        bit-identical to what the store holds (and will later subtract) —
+        the accumulator-vs-memo identity stays an invariant instead of a
+        per-visit rounding drift with low-precision stores.
+
+        Returns (correction (V, K), first-visit word count, EStepResult);
+        the result's π is the rounded value the caller must store.
+        """
+        ids, cnts = batch
+        gamma0 = warm_start_gamma(cfg, cnts, old_pi, visited)
+        res = self.solve(cfg, exp_elog_beta, batch, gamma0)
+        pi = quantize_pi(res.pi, pi_dtype)
+        res = res._replace(pi=pi)
+        delta = cnts[:, :, None] * (pi - old_pi)
+        correction = scatter_sstats(ids, delta, cfg.vocab_size)
+        words_first = jnp.sum(jnp.where(~visited, cnts.sum(-1), 0.0))
+        return correction, words_first, res
+
+
+class GatherBackend(EStepBackend):
+    name = "gather"
+
+    def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
+        return estep_gather(cfg, exp_elog_beta, batch.token_ids,
+                            batch.counts, gamma0)
+
+
+class DenseBackend(EStepBackend):
+    name = "dense"
+
+    def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
+        return estep_dense(cfg, exp_elog_beta, batch.token_ids,
+                           batch.counts, gamma0)
+
+
+class PallasBackend(EStepBackend):
+    """Fused-kernel backend (`repro.kernels.ops`): one pallas_call per
+    fixed point, memo correction with no (B, L, K) jnp intermediates."""
+
+    name = "pallas"
+
+    def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
+        from repro.kernels import ops as kops
+        return kops.estep_pallas(cfg, exp_elog_beta, batch.token_ids,
+                                 batch.counts, gamma0)
+
+    def solve_correction(self, cfg, exp_elog_beta, batch, old_pi, visited,
+                         pi_dtype="float32"):
+        from repro.kernels import ops as kops
+        return kops.memo_correction_pallas(cfg, exp_elog_beta,
+                                           batch.token_ids, batch.counts,
+                                           old_pi, visited,
+                                           pi_dtype=pi_dtype)
+
+
+_BACKENDS: Dict[str, EStepBackend] = {
+    b.name: b for b in (GatherBackend(), DenseBackend(), PallasBackend())
+}
+
+
+def get_backend(name: str) -> EStepBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown estep backend: {name!r} (have {sorted(_BACKENDS)})")
+
+
 def estep(cfg: LDAConfig, exp_elog_beta: jax.Array, token_ids: jax.Array,
           counts: jax.Array, gamma0: Optional[jax.Array] = None) -> EStepResult:
-    """Dispatch on ``cfg.estep_backend``."""
-    if cfg.estep_backend == "gather":
-        return estep_gather(cfg, exp_elog_beta, token_ids, counts, gamma0)
-    if cfg.estep_backend == "dense":
-        return estep_dense(cfg, exp_elog_beta, token_ids, counts, gamma0)
-    if cfg.estep_backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.estep_pallas(cfg, exp_elog_beta, token_ids, counts, gamma0)
-    raise ValueError(f"unknown estep backend: {cfg.estep_backend}")
+    """Functional shim: dispatch on ``cfg.estep_backend``."""
+    return get_backend(cfg.estep_backend).solve(
+        cfg, exp_elog_beta, BowBatch(token_ids, counts), gamma0)

@@ -1,0 +1,344 @@
+"""Pluggable per-document memo stores — the IVI memory wall, managed.
+
+IVI's defining cost (paper Alg. 1 / eq. 4) is the per-document memo of
+token-aligned responsibilities π. Held dense on device in fp32 it is
+``D·L·K·4`` bytes — ~51 GB at the Arxiv scale of Table 1 (D=782k, L=128,
+K=128) before counting the corpus itself, which is the wall between the
+reproduction and the ROADMAP's production-scale target. This module makes
+the memo a *pluggable store* behind one contract:
+
+    gather(doc_idx)            -> (π_old (B, L, K) fp32, visited (B,))
+    update(doc_idx, π_new, …)  -> store
+
+with three implementations:
+
+* ``DenseMemoStore`` — the oracle: device-resident fp32 ``(D, L, K)``
+  (exactly the raw ``types.Memo`` pair). Exact; used by the correctness
+  tests and, with a leading worker axis, by the D-IVI worker shards
+  (its pure ``gather``/``updated`` trace under vmap/shard_map).
+* ``ChunkedMemoStore`` — bf16 storage in host-RAM chunks, fp32 on the
+  wire: halves the memo to ``D·L·K·2`` (~25.6 GB at Arxiv scale, under
+  the 40 GB single-host budget) and keeps device HBM free of the memo
+  entirely; each gather/update round-trips only the touched chunks
+  (SCVB0-style compressed statistics, Foulds et al. 2013).
+* ``GammaMemoStore`` — γ-only: stores γ (D, K) fp32 plus a per-chunk bf16
+  snapshot of Eφ from the chunk's last update, and *recomputes* π_old on
+  gather as Eθ(γ)·Eφ_snap/φnorm. ~0.5 GB at Arxiv scale. The
+  reconstruction is exact only while every document of a chunk was last
+  visited under the chunk's snapshot — an approximation intended for the
+  S-IVI / D-IVI paths, where the correction enters a Robbins–Monro
+  average rather than the exact eq. 4 accumulator.
+
+``gather``/``update`` take an optional ``width`` (≤ L): with the
+length-bucketed corpus layout (`repro.data.bow.bucket_corpus`) batches
+carry per-bucket padding, so the E-step and the memo traffic shrink to the
+bucket width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:                                      # numpy bf16 dtype (ships with jax)
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:                       # pragma: no cover - jax ships it
+    _BF16 = np.dtype(np.float32)
+
+from repro.core.math import exp_dirichlet_expectation
+from repro.core.types import Corpus, LDAConfig, init_memo
+
+_EPS = 1e-30
+
+
+class MemoStore:
+    """One memo contract for every engine (see module docstring)."""
+
+    kind: str = "abstract"
+    # wire dtype of the stored π: engines round π through it BEFORE the
+    # add-new side of the correction so ⟨m_vk⟩ adds exactly what the store
+    # will later subtract (estep.quantize_pi) — the accumulator/memo
+    # identity is then an invariant even for low-precision stores
+    pi_wire_dtype: str = "float32"
+    num_docs: int
+    max_unique: int
+    num_topics: int
+
+    def gather(self, doc_idx, width: Optional[int] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Return (π_old (B, width, K) fp32, visited (B,) bool)."""
+        raise NotImplementedError
+
+    def update(self, doc_idx, pi: jax.Array, *,
+               exp_elog_beta: Optional[jax.Array] = None) -> "MemoStore":
+        """Write a batch's new π (B, width, K) and mark it visited.
+
+        Returns the store to use from now on (host stores mutate and
+        return self; the device store returns a new functional value).
+        ``exp_elog_beta`` is the Eφ the E-step ran against — only the
+        γ-only store consumes it (chunk snapshot).
+        """
+        raise NotImplementedError
+
+    def footprint_bytes(self) -> int:
+        raise NotImplementedError
+
+    def iter_chunks(self, batch_docs: int = 512
+                    ) -> Iterator[Tuple[np.ndarray, jax.Array, jax.Array]]:
+        """Yield (doc_idx, π, visited) over the corpus — the read-through
+        path for the memoized ELBO (`repro.core.bound.elbo_memoized_store`)."""
+        for lo in range(0, self.num_docs, batch_docs):
+            idx = np.arange(lo, min(lo + batch_docs, self.num_docs))
+            pi, vis = self.gather(idx)
+            yield idx, pi, vis
+
+    def _pad_width(self, pi: jax.Array) -> jax.Array:
+        w = pi.shape[1]
+        if w == self.max_unique:
+            return pi
+        return jnp.pad(pi, ((0, 0), (0, self.max_unique - w), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# dense device store (oracle)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _dense_scatter(pi, visited, idx, new_pi):
+    return pi.at[idx].set(new_pi), visited.at[idx].set(True)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DenseMemoStore(MemoStore):
+    """Device-resident fp32 memo — the exact oracle.
+
+    A registered pytree: the D-IVI worker shards carry this store (with a
+    leading worker axis) straight through vmap / shard_map, using the pure
+    ``gather`` / ``updated`` pair. Host engines use ``update``, which
+    donates the buffers so the scatter is in-place.
+    """
+
+    pi: jax.Array                  # (D, L, K) fp32
+    visited: jax.Array             # (D,) bool
+
+    kind = "dense"
+
+    @property
+    def num_docs(self) -> int:
+        return self.pi.shape[0]
+
+    @property
+    def max_unique(self) -> int:
+        return self.pi.shape[1]
+
+    @property
+    def num_topics(self) -> int:
+        return self.pi.shape[2]
+
+    # pure / traceable --------------------------------------------------
+    def gather(self, doc_idx, width: Optional[int] = None):
+        pi = self.pi[doc_idx]
+        if width is not None and width != self.max_unique:
+            pi = pi[:, :width]
+        return pi, self.visited[doc_idx]
+
+    def updated(self, doc_idx, pi: jax.Array,
+                visited_mask: Optional[jax.Array] = None) -> "DenseMemoStore":
+        """Functional update (in-jit use; dist workers pass a live mask)."""
+        new_vis = (jnp.ones(doc_idx.shape, bool) if visited_mask is None
+                   else self.visited[doc_idx] | visited_mask)
+        return DenseMemoStore(
+            pi=self.pi.at[doc_idx].set(self._pad_width(pi)),
+            visited=self.visited.at[doc_idx].set(new_vis))
+
+    # host-side ---------------------------------------------------------
+    def update(self, doc_idx, pi, *, exp_elog_beta=None) -> "DenseMemoStore":
+        new_pi, new_vis = _dense_scatter(self.pi, self.visited,
+                                         jnp.asarray(doc_idx),
+                                         self._pad_width(pi))
+        return DenseMemoStore(pi=new_pi, visited=new_vis)
+
+    def footprint_bytes(self) -> int:
+        return self.pi.size * 4 + self.visited.size
+
+
+# ---------------------------------------------------------------------------
+# bf16 chunked host store
+# ---------------------------------------------------------------------------
+
+class ChunkedMemoStore(MemoStore):
+    """bf16 memo in host-RAM chunks; fp32 only on the device wire.
+
+    Each chunk is an independent ``(chunk_docs, L, K)`` bf16 array, so
+    allocation is incremental, updates touch (convert / device_put) only
+    the chunks a batch intersects, and a host with ≥ D·L·K·2 bytes of RAM
+    holds the Arxiv-scale memo without any device HBM.
+    """
+
+    kind = "chunked"
+    pi_wire_dtype = "bfloat16"
+
+    def __init__(self, cfg: LDAConfig, num_docs: int, max_unique: int, *,
+                 chunk_docs: int = 8192):
+        self.num_docs = num_docs
+        self.max_unique = max_unique
+        self.num_topics = cfg.num_topics
+        self.chunk_docs = chunk_docs
+        n_chunks = -(-num_docs // chunk_docs)
+        self._chunks = [
+            np.zeros((min(chunk_docs, num_docs - c * chunk_docs),
+                      max_unique, cfg.num_topics), _BF16)
+            for c in range(n_chunks)
+        ]
+        self._visited = np.zeros((num_docs,), bool)
+
+    def _by_chunk(self, idx: np.ndarray):
+        cid = idx // self.chunk_docs
+        for c in np.unique(cid):
+            sel = np.nonzero(cid == c)[0]
+            yield int(c), sel, idx[sel] - int(c) * self.chunk_docs
+
+    def gather(self, doc_idx, width: Optional[int] = None):
+        idx = np.asarray(doc_idx)
+        w = self.max_unique if width is None else width
+        out = np.zeros((len(idx), w, self.num_topics), np.float32)
+        for c, sel, local in self._by_chunk(idx):
+            out[sel] = self._chunks[c][local, :w].astype(np.float32)
+        return jnp.asarray(out), jnp.asarray(self._visited[idx])
+
+    def update(self, doc_idx, pi, *, exp_elog_beta=None) -> "ChunkedMemoStore":
+        idx = np.asarray(doc_idx)
+        w = pi.shape[1]
+        vals = np.asarray(pi)                  # device→host, per batch
+        for c, sel, local in self._by_chunk(idx):
+            self._chunks[c][local, :w] = vals[sel].astype(_BF16)
+            if w < self.max_unique:
+                self._chunks[c][local, w:] = 0
+        self._visited[idx] = True
+        return self
+
+    def footprint_bytes(self) -> int:
+        return sum(ch.nbytes for ch in self._chunks) + self._visited.nbytes
+
+
+# ---------------------------------------------------------------------------
+# γ-only store with per-chunk λ-epoch snapshots
+# ---------------------------------------------------------------------------
+
+class GammaMemoStore(MemoStore):
+    """Store γ, recompute π — for the averaged (S-IVI / D-IVI) paths.
+
+    On update the store keeps γ_memo = α₀ + Σ_l cnt·π (Alg. 1 line 6) per
+    document plus ONE bf16 snapshot of Eφ per chunk (the "λ-epoch" of the
+    chunk's most recent update). On gather it reconstructs
+
+        π̃ = Eθ(γ_memo) ⊙ Eφ_snap[ids] / φnorm
+
+    which equals the memoized π exactly when every document of the chunk
+    was last visited under the snapshot's λ, and is otherwise a bounded
+    approximation — acceptable where the correction is folded into the
+    Robbins–Monro average (eq. 5), NOT for the exact eq. 4 accumulator.
+    """
+
+    kind = "gamma"
+
+    def __init__(self, cfg: LDAConfig, corpus: Corpus, *,
+                 chunk_docs: int = 8192):
+        self.cfg = cfg
+        self.num_docs = corpus.num_docs
+        self.max_unique = corpus.max_unique
+        self.num_topics = cfg.num_topics
+        self.chunk_docs = chunk_docs
+        self._ids = np.asarray(corpus.token_ids)
+        self._cnts = np.asarray(corpus.counts)
+        self._gamma = np.full((self.num_docs, cfg.num_topics),
+                              cfg.alpha0, np.float32)
+        self._snap: Dict[int, np.ndarray] = {}     # chunk → (V, K) bf16
+        self._visited = np.zeros((self.num_docs,), bool)
+
+    def _by_chunk(self, idx: np.ndarray):
+        cid = idx // self.chunk_docs
+        for c in np.unique(cid):
+            sel = np.nonzero(cid == c)[0]
+            yield int(c), sel
+
+    def gather(self, doc_idx, width: Optional[int] = None):
+        idx = np.asarray(doc_idx)
+        w = self.max_unique if width is None else width
+        out = jnp.zeros((len(idx), w, self.num_topics), jnp.float32)
+        vis = self._visited[idx]
+        for c, sel in self._by_chunk(idx):
+            if c not in self._snap:
+                continue
+            rows = idx[sel]
+            eb = jnp.asarray(self._snap[c].astype(np.float32))
+            et = exp_dirichlet_expectation(jnp.asarray(self._gamma[rows]))
+            ebg = eb[jnp.asarray(self._ids[rows, :w])]          # (b, w, K)
+            p = jnp.einsum("bk,blk->bl", et, ebg) + _EPS
+            pi = et[:, None, :] * ebg / p[:, :, None]
+            pi = jnp.where(jnp.asarray(self._cnts[rows, :w])[:, :, None] > 0,
+                           pi, 0.0)
+            pi = jnp.where(jnp.asarray(vis[sel])[:, None, None], pi, 0.0)
+            out = out.at[jnp.asarray(sel)].set(pi)
+        return out, jnp.asarray(vis)
+
+    def update(self, doc_idx, pi, *, exp_elog_beta=None) -> "GammaMemoStore":
+        if exp_elog_beta is None:
+            raise ValueError("GammaMemoStore.update needs exp_elog_beta "
+                             "(the Eφ the E-step ran against)")
+        idx = np.asarray(doc_idx)
+        w = pi.shape[1]
+        gamma = self.cfg.alpha0 + jnp.einsum(
+            "blk,bl->bk", pi, jnp.asarray(self._cnts[idx, :w]))
+        self._gamma[idx] = np.asarray(gamma)
+        snap = np.asarray(exp_elog_beta).astype(_BF16)
+        for c, _sel in self._by_chunk(idx):
+            self._snap[c] = snap
+        self._visited[idx] = True
+        return self
+
+    def footprint_bytes(self) -> int:
+        return (self._gamma.nbytes + self._visited.nbytes
+                + sum(s.nbytes for s in self._snap.values()))
+
+
+# ---------------------------------------------------------------------------
+# construction + footprint math
+# ---------------------------------------------------------------------------
+
+def make_memo_store(kind: str, cfg: LDAConfig, num_docs: int,
+                    max_unique: int, *, corpus: Optional[Corpus] = None,
+                    chunk_docs: int = 8192) -> MemoStore:
+    if kind == "dense":
+        raw = init_memo(cfg, num_docs, max_unique)
+        return DenseMemoStore(pi=raw.pi, visited=raw.visited)
+    if kind == "chunked":
+        return ChunkedMemoStore(cfg, num_docs, max_unique,
+                                chunk_docs=chunk_docs)
+    if kind == "gamma":
+        if corpus is None:
+            raise ValueError("gamma store needs the corpus (π reconstruction)")
+        return GammaMemoStore(cfg, corpus, chunk_docs=chunk_docs)
+    raise ValueError(f"unknown memo store kind: {kind!r} "
+                     "(have dense | chunked | gamma)")
+
+
+def memo_footprint_bytes(kind: str, num_docs: int, max_unique: int,
+                         num_topics: int, vocab_size: int = 0,
+                         chunk_docs: int = 8192) -> int:
+    """Footprint math without allocating — used by the dry-run report."""
+    if kind == "dense":
+        return num_docs * max_unique * num_topics * 4 + num_docs
+    if kind == "chunked":
+        return num_docs * max_unique * num_topics * 2 + num_docs
+    if kind == "gamma":
+        n_chunks = -(-num_docs // chunk_docs)
+        return (num_docs * num_topics * 4 + num_docs
+                + n_chunks * vocab_size * num_topics * 2)
+    raise ValueError(f"unknown memo store kind: {kind!r}")

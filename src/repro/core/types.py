@@ -56,6 +56,9 @@ class LDAConfig:
     estep_max_iters: int = 100   # cap on the local fixed point
     estep_tol: float = 1e-4      # mean-abs-change convergence threshold
     estep_backend: str = "gather"  # "gather" | "dense" | "pallas"
+    # dtype the fused Pallas kernel streams C / Eφ in ("float32"|"bfloat16");
+    # bf16 halves the dominant HBM terms of the fixed point (docs/estep.md)
+    estep_stream_dtype: str = "float32"
 
     def rho(self, t: jax.Array) -> jax.Array:
         """Robbins–Monro step size ρ_t = (t + τ)^(−κ)."""
@@ -65,16 +68,25 @@ class LDAConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class GlobalState:
-    """Global variational state shared by every engine.
+    """Global variational state — THE canonical state for every engine.
 
     ``lam`` is the (V, K) topic-word Dirichlet parameter β in the paper;
-    ``m_vk`` is the global sufficient-statistic accumulator ⟨m_vk⟩ (only
-    maintained by the incremental engines; zeros otherwise); ``t`` counts
-    global updates (drives ρ_t for the stochastic engines).
+    ``m_vk`` the global sufficient-statistic accumulator ⟨m_vk⟩ (zeros for
+    the non-incremental engines); ``t`` counts global updates (drives ρ_t).
+    ``init_mass``/``init_frac`` carry the random-initialisation mass of
+    Alg. 1 line 1 explicitly: each document's pro-rata share is retired on
+    its first visit, so after one full pass λ = β₀ + ⟨m_vk⟩ holds exactly
+    (eq. 4; cf. Neal & Hinton 1998 on incremental-EM start-up).
+
+    Single-host engines use this class directly (``engines.EngineState`` is
+    an alias) and so does the distributed master (``dist.DIVIState``) — the
+    (V, K) leaves there may hold only this device's model-axis rows.
     """
 
     lam: jax.Array           # (V, K)
     m_vk: jax.Array          # (V, K)
+    init_mass: jax.Array     # (V, K) un-attributed random-init mass
+    init_frac: jax.Array     # () share of init_mass still live in λ
     t: jax.Array             # () int32
 
     @property
@@ -95,30 +107,36 @@ class Memo:
     Rows of padding carry zeros. The per-document sufficient-statistic
     contribution is ``segment_sum(counts[...,None] * pi, token_ids)``.
     ``visited`` marks documents whose memo is live (contributes to ⟨m_vk⟩).
+
+    This is the raw *device-dense* layout; engines access memos through the
+    pluggable ``repro.core.memo.MemoStore`` interface, whose oracle
+    implementation wraps exactly this pair of arrays.
     """
 
     pi: jax.Array            # (D, L, K)
     visited: jax.Array       # (D,) bool
 
 
-def init_global_state(cfg: LDAConfig, key: jax.Array,
-                      incremental: bool = False) -> GlobalState:
+def init_global_state(cfg: LDAConfig, key: jax.Array) -> GlobalState:
     """Random λ initialisation as in the paper (Algorithm 1, line 1).
 
     Matches the common Gamma(100, 0.01) init of onlineldavb so early
-    expectations are well scaled.
+    expectations are well scaled. The single canonical constructor — the
+    single-host engines and the distributed master both call it.
     """
     lam = jax.random.gamma(key, 100.0,
                            (cfg.vocab_size, cfg.num_topics)) * 0.01
-    m = jnp.zeros_like(lam)
-    if incremental:
-        # incremental engines treat λ = β0 + ⟨m_vk⟩; initialise the
-        # accumulator so λ reproduces the random init exactly.
-        m = lam - cfg.beta0
-    return GlobalState(lam=lam, m_vk=m, t=jnp.zeros((), jnp.int32))
+    return GlobalState(
+        lam=lam,
+        m_vk=jnp.zeros_like(lam),
+        init_mass=lam - cfg.beta0,
+        init_frac=jnp.ones(()),
+        t=jnp.zeros((), jnp.int32),
+    )
 
 
 def init_memo(cfg: LDAConfig, num_docs: int, max_unique: int) -> Memo:
+    """The single canonical raw-memo constructor (zeros, nothing visited)."""
     return Memo(
         pi=jnp.zeros((num_docs, max_unique, cfg.num_topics), jnp.float32),
         visited=jnp.zeros((num_docs,), bool),

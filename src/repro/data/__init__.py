@@ -1,3 +1,5 @@
 from repro.data.synthetic import SyntheticSpec, make_corpus, PAPER_CORPORA
-from repro.data.bow import corpus_from_docs, pad_corpus
+from repro.data.bow import (LengthBuckets, bucket_corpus,
+                            bucket_padding_stats, corpus_from_docs,
+                            pad_corpus)
 from repro.data.uci import load_uci, save_uci

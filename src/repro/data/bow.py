@@ -1,6 +1,8 @@
-"""Bag-of-words utilities: ragged documents → padded unique-token layout."""
+"""Bag-of-words utilities: ragged documents → padded unique-token layout,
+plus the length-bucketed view that shrinks per-batch padding."""
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -32,6 +34,62 @@ def corpus_from_docs(docs: Sequence[np.ndarray], vocab_size: int,
         out_cnt[r, : len(ids)] = cnts
     assert out_ids.max(initial=0) < vocab_size
     return Corpus(jnp.asarray(out_ids), jnp.asarray(out_cnt))
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthBuckets:
+    """Length-bucketed corpus view: document indices grouped by the padded
+    width that covers their unique-token count.
+
+    The corpus arrays stay in the canonical (D, L) layout; a bucket only
+    records *which rows* belong to it and *how many leading columns* of
+    those rows are live, so a batch drawn from bucket *b* can be sliced to
+    ``(B, widths[b])`` — E-step FLOPs and memo gather/update traffic then
+    scale with the bucket's own padding, not the corpus-wide maximum L.
+    """
+
+    doc_idx: List[np.ndarray]     # per bucket: original corpus row indices
+    widths: List[int]             # per bucket: live column count (≤ L)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.widths)
+
+
+def bucket_corpus(corpus: Corpus,
+                  boundaries: Sequence[int] = (8, 16, 32, 64, 128, 256, 512),
+                  ) -> LengthBuckets:
+    """Group documents into width buckets by unique-token count.
+
+    Buckets with no documents are dropped; the final bucket width is the
+    corpus max L, so every document lands somewhere. Zero-length (fully
+    padded) documents join the narrowest bucket.
+    """
+    cnts = np.asarray(corpus.counts)
+    n_unique = (cnts > 0).sum(axis=1)
+    l = corpus.max_unique
+    widths = sorted({min(b, l) for b in boundaries if b < l} | {l})
+    doc_idx, kept = [], []
+    lo = 0
+    for w in widths:
+        rows = np.nonzero((n_unique > lo) & (n_unique <= w))[0]
+        if lo == 0:
+            rows = np.union1d(rows, np.nonzero(n_unique == 0)[0])
+        if len(rows):
+            doc_idx.append(rows.astype(np.int64))
+            kept.append(int(w))
+        lo = w
+    return LengthBuckets(doc_idx=doc_idx, widths=kept)
+
+
+def bucket_padding_stats(corpus: Corpus, buckets: LengthBuckets) -> dict:
+    """Padding-waste accounting: slots touched per epoch, flat vs bucketed."""
+    d, l = corpus.num_docs, corpus.max_unique
+    flat = d * l
+    bucketed = sum(len(rows) * w
+                   for rows, w in zip(buckets.doc_idx, buckets.widths))
+    return {"flat_slots": flat, "bucketed_slots": bucketed,
+            "slot_ratio": bucketed / max(flat, 1)}
 
 
 def pad_corpus(corpus: Corpus, num_docs: int) -> Corpus:

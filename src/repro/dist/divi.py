@@ -36,6 +36,7 @@ except ImportError:
 from jax.sharding import PartitionSpec as P
 
 from repro.core.math import exp_dirichlet_expectation
+from repro.core.memo import DenseMemoStore
 from repro.core.types import LDAConfig
 from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
                                  divi_round, master_update,
@@ -72,10 +73,11 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
     mrow = P(model, None)
     state_specs = DIVIState(lam=mrow, m_vk=mrow, init_mass=mrow,
                             init_frac=P(), t=P())
-    shard_specs = WorkerShard(token_ids=P(data_axes, None, None),
-                              counts=P(data_axes, None, None),
-                              pi=P(data_axes, None, None, None),
-                              visited=P(data_axes, None))
+    shard_specs = WorkerShard(
+        token_ids=P(data_axes, None, None),
+        counts=P(data_axes, None, None),
+        memo=DenseMemoStore(pi=P(data_axes, None, None, None),
+                            visited=P(data_axes, None)))
     in_specs = (state_specs, shard_specs, P(data_axes, None, None),
                 P(data_axes, None), P())
     out_specs = (state_specs, shard_specs)
@@ -90,11 +92,11 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
         row0 = (jax.lax.axis_index(model) * v_local) if model else 0
 
         def substep(carry, xs):
-            st, pi, vis = carry
+            st, memo = carry
             idx_s, delay_s = xs                      # (W_loc, B), (W_loc,)
-            corr_w, words_w, pi, vis = jax.vmap(
+            corr_w, words_w, memo = jax.vmap(
                 partial(worker_correction, cfg, eb))(
-                    shard.token_ids, shard.counts, pi, vis, idx_s, delay_s)
+                    shard.token_ids, shard.counts, memo, idx_s, delay_s)
             # "send the correction to the master": the round's one message.
             corr = corr_w.sum(0)
             words = words_w.sum()
@@ -104,13 +106,13 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
             corr = jax.lax.dynamic_slice_in_dim(corr, row0, v_local, axis=0) \
                 if model else corr
             st = master_update(cfg, st, corr, words, num_words_total)
-            return (st, pi, vis), None
+            return (st, memo), None
 
-        (state, pi, vis), _ = jax.lax.scan(
-            substep, (state, shard.pi, shard.visited),
+        (state, memo), _ = jax.lax.scan(
+            substep, (state, shard.memo),
             (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
         return state, WorkerShard(token_ids=shard.token_ids,
-                                  counts=shard.counts, pi=pi, visited=vis)
+                                  counts=shard.counts, memo=memo)
 
     fn = shard_map(round_body, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)

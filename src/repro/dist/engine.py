@@ -18,6 +18,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.engines import init_engine_state
+from repro.core.memo import DenseMemoStore
 from repro.core.types import Corpus, LDAConfig
 from repro.dist.divi import make_divi_round
 from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
@@ -45,8 +46,11 @@ def shard_corpus(corpus: Corpus, num_workers: int,
     shard = WorkerShard(
         token_ids=ids.reshape(num_workers, dw, l),
         counts=cnts.reshape(num_workers, dw, l),
-        pi=jnp.zeros((num_workers, dw, l, num_topics), jnp.float32),
-        visited=jnp.zeros((num_workers, dw), bool),
+        # per-worker MemoStore shards: the dense device store with a
+        # leading worker axis (vmap/shard_map peel it off)
+        memo=DenseMemoStore(
+            pi=jnp.zeros((num_workers, dw, l, num_topics), jnp.float32),
+            visited=jnp.zeros((num_workers, dw), bool)),
     )
     return shard, dw
 
@@ -74,11 +78,9 @@ class DIVIEngine:
                 f"{self.docs_per_worker} documents each of the "
                 f"{dcfg.num_workers} workers holds; shrink the batch or the "
                 f"worker count")
-        # identical λ₀ to the single-host engines at the same seed
-        es = init_engine_state(cfg, jax.random.key(seed))
-        self.state = DIVIState(lam=es.lam, m_vk=es.m_vk,
-                               init_mass=es.init_mass,
-                               init_frac=es.init_frac, t=es.t)
+        # identical λ₀ to the single-host engines at the same seed —
+        # DIVIState IS the canonical GlobalState, one constructor for both
+        self.state = init_engine_state(cfg, jax.random.key(seed))
         # retire init mass against the sharded corpus' word total so the
         # retirement completes exactly after every shard is visited
         self.num_words_total = jnp.asarray(
@@ -105,8 +107,9 @@ class DIVIEngine:
                 token_ids=jax.device_put(self.shard.token_ids,
                                          dsh(None, None)),
                 counts=jax.device_put(self.shard.counts, dsh(None, None)),
-                pi=jax.device_put(self.shard.pi, dsh(None, None, None)),
-                visited=jax.device_put(self.shard.visited, dsh(None)))
+                memo=DenseMemoStore(
+                    pi=jax.device_put(self.shard.pi, dsh(None, None, None)),
+                    visited=jax.device_put(self.shard.visited, dsh(None))))
         self.docs_seen = 0
 
     # -- rounds ------------------------------------------------------------

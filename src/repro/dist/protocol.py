@@ -16,6 +16,12 @@ fold them in *in any order and at any lag* and ⟨m_vk⟩ stays a faithful
 protocol correct where gradient-based schemes need care. The master folds
 each reduced correction into the S-IVI Robbins–Monro update (eq. 5).
 
+Workers go through the same two interfaces as the single-host engines:
+the E-step via ``repro.core.estep`` backends (`memo_correction`) and the
+π-memo via a ``MemoStore`` shard — each worker owns a ``DenseMemoStore``
+whose pure ``gather``/``updated`` trace under vmap (simulation) and
+shard_map (production) alike.
+
 Round structure used here (identical in the vmap simulation and the
 shard_map production path, see ``repro.dist.divi``):
 
@@ -46,7 +52,8 @@ import jax.numpy as jnp
 from repro.core.engines import (memo_correction, retire_init_frac,
                                 sivi_global_update)
 from repro.core.math import exp_dirichlet_expectation
-from repro.core.types import LDAConfig
+from repro.core.memo import DenseMemoStore
+from repro.core.types import GlobalState, LDAConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,60 +66,63 @@ class DIVIConfig:
     staleness: int = 1        # sub-rounds per global round (parameter lag)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class DIVIState:
-    """Master variational state — mirrors ``EngineState`` field-for-field.
-
-    In the shard_map path the (V, K) leaves hold this device's model-axis
-    rows; the scalar leaves are replicated.
-    """
-
-    lam: jax.Array         # (V, K) topic-word Dirichlet parameter
-    m_vk: jax.Array        # (V, K) incremental accumulator ⟨m_vk⟩
-    init_mass: jax.Array   # (V, K) un-attributed random-init mass
-    init_frac: jax.Array   # () share of init_mass still live in λ
-    t: jax.Array           # () int32 master update counter (drives ρ_t)
+# The master state IS the canonical engine state — one constructor set for
+# single-host and distributed (``types.init_global_state``). In the
+# shard_map path the (V, K) leaves hold this device's model-axis rows; the
+# scalar leaves are replicated.
+DIVIState = GlobalState
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class WorkerShard:
-    """Per-worker corpus shards and π-memos, leading axis = worker."""
+    """Per-worker corpus shards and memo stores, leading axis = worker.
 
-    token_ids: jax.Array   # (W, D_w, L) int32 padded unique-token ids
-    counts: jax.Array      # (W, D_w, L) float32 counts, 0 on padding
-    pi: jax.Array          # (W, D_w, L, K) memoized responsibilities
-    visited: jax.Array     # (W, D_w) bool — memo rows that are live
+    ``memo`` is a ``DenseMemoStore`` whose leaves carry a leading (W,)
+    worker axis — vmap/shard_map peel it off, so inside a worker the store
+    methods see the plain per-worker (D_w, L, K) layout.
+    """
+
+    token_ids: jax.Array        # (W, D_w, L) int32 padded unique-token ids
+    counts: jax.Array           # (W, D_w, L) float32 counts, 0 on padding
+    memo: DenseMemoStore        # pi (W, D_w, L, K), visited (W, D_w)
+
+    @property
+    def pi(self) -> jax.Array:
+        return self.memo.pi
+
+    @property
+    def visited(self) -> jax.Array:
+        return self.memo.visited
 
 
 def worker_correction(cfg: LDAConfig, eb: jax.Array, token_ids: jax.Array,
-                      counts: jax.Array, pi: jax.Array, visited: jax.Array,
+                      counts: jax.Array, memo: DenseMemoStore,
                       idx: jax.Array, delayed: jax.Array):
     """One worker, one mini-batch, against stale topics ``eb``.
 
     Args:
       eb: (V, K) exp(E[ln φ]) computed from the *round-start* λ.
-      token_ids/counts/pi/visited: this worker's full shard (no W axis).
+      token_ids/counts/memo: this worker's full shard (no W axis).
       idx: (B,) local document indices into the shard — duplicate-free
         (a document appearing twice would double-apply its memo delta;
         ``DIVIEngine`` enforces batch_size ≤ docs-per-worker for this).
       delayed: () bool — this worker dropped the sub-round: it contributes
         nothing and its memo stays untouched (paper's sleep model).
 
-    Returns (correction (V, K), first-visit word count, new pi, new visited).
+    Returns (correction (V, K), first-visit word count, new memo store).
     """
     ids, cnts = token_ids[idx], counts[idx]
-    old_pi = pi[idx]                                         # (B, L, K)
+    old_pi, visited_rows = memo.gather(idx)
     corr, words, res = memo_correction(cfg, eb, ids, cnts, old_pi,
-                                       visited[idx])
+                                       visited_rows)
 
     live = ~delayed
     corr = jnp.where(live, corr, 0.0)
     words = jnp.where(live, words, 0.0)
-    pi = pi.at[idx].set(jnp.where(live, res.pi, old_pi))
-    visited = visited.at[idx].set(visited[idx] | live)
-    return corr, words, pi, visited
+    memo = memo.updated(idx, jnp.where(live, res.pi, old_pi),
+                        visited_mask=jnp.broadcast_to(live, idx.shape))
+    return corr, words, memo
 
 
 def master_update(cfg: LDAConfig, state: DIVIState, corr: jax.Array,
@@ -146,17 +156,17 @@ def divi_round(cfg: LDAConfig, dcfg: DIVIConfig, state: DIVIState,
     eb = exp_dirichlet_expectation(state.lam, axis=0)
 
     def substep(carry, xs):
-        st, pi, vis = carry
+        st, memo = carry
         idx_s, delay_s = xs                                  # (W, B), (W,)
-        corr_w, words_w, pi, vis = jax.vmap(
+        corr_w, words_w, memo = jax.vmap(
             partial(worker_correction, cfg, eb))(
-                shard.token_ids, shard.counts, pi, vis, idx_s, delay_s)
+                shard.token_ids, shard.counts, memo, idx_s, delay_s)
         st = master_update(cfg, st, corr_w.sum(0), words_w.sum(),
                            num_words_total)
-        return (st, pi, vis), None
+        return (st, memo), None
 
-    (state, pi, vis), _ = jax.lax.scan(
-        substep, (state, shard.pi, shard.visited),
+    (state, memo), _ = jax.lax.scan(
+        substep, (state, shard.memo),
         (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
     return state, WorkerShard(token_ids=shard.token_ids, counts=shard.counts,
-                              pi=pi, visited=vis)
+                              memo=memo)

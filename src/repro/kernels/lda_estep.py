@@ -1,21 +1,41 @@
 """Pallas TPU kernels for the LDA E-step hotspot.
 
-Two kernels, both tiling the vocabulary dimension so that the topic matrix
-Eφ (V, K) streams HBM→VMEM once and the (B, V) intermediates (phinorm P and
-ratio R) live only in VMEM tile-by-tile:
+Four kernels. The two *fused* kernels are the production path
+(`ops.estep_pallas` / `ops.memo_correction_pallas`); the two per-sweep
+kernels are kept as the legacy formulation (`ops.estep_pallas_sweeps`) and
+as the benchmark baseline.
 
+Fused path
+----------
+* ``estep_fixed_point`` — the ENTIRE γ fixed point in one ``pallas_call``:
+  grid ``(B-tiles, max_iters, V-tiles)`` with γ, Eθ and the sweep
+  accumulator resident in VMEM scratch across grid steps. Each sweep
+  streams Eφ (and the dense counts C) HBM→VMEM once via the V grid axis;
+  a per-B-tile convergence flag in SMEM (mean |Δγ| ≤ tol) predicates the
+  remaining sweeps to no-ops, and the sweep counter is emitted per tile.
+  Nothing γ-shaped ever round-trips to HBM between sweeps — the old path
+  paid one pallas_call per sweep plus a jnp Eθ recomputation per sweep.
+* ``memo_delta`` — token-aligned π AND the subtract-old/add-new scatter in
+  one kernel: for each (B-tile, V-tile) it forms π = Eθ⊙Eφ_tok/φnorm in
+  VMEM, then scatters cnt·π_new and cnt·π_old into (V, K) with a one-hot
+  MXU matmul (ids == V-tile rows), so the IVI correction needs **no
+  (B, L, K) jnp intermediates** — the only (B, L, K) array XLA sees is the
+  Eφ token gather feeding the kernel.
+
+Legacy per-sweep path
+---------------------
 * ``estep_sweep``  — γ' = α₀ + Eθ ⊙ (R·Eφ),  R = C ⊘ (Eθ·Eφᵀ + ε)
 * ``sstats``       — S  = Eφ ⊙ (Rᵀ·Eθ)
 
-Tiling (DESIGN.md §7): B-tile × V-tile × K — K is padded to a multiple of
-128 by the wrapper (`ops.py`), V-tiles default to 512 and B-tiles to 128,
-so the per-step VMEM working set is
+Tiling (DESIGN.md §7 and docs/estep.md): B-tile × V-tile × K — K is padded
+to a multiple of 128 by the wrapper (`ops.py`), V-tiles default to 512 and
+B-tiles to 128, so the fused fixed point's VMEM working set is
 
-    C (128·512) + Eφ (512·128) + Eθ/out (128·128)  ≈ 0.6 MB  « 16 MB VMEM
+    C (128·512) + Eφ (512·128) + γ/Eθ/acc (3·128·128)  ≈ 0.8 MB  « 16 MB
 
 and every matmul hits the MXU with ≥128 on both the lane and the
-contraction dimension. The reduction over V-tiles uses the classic
-revisited-output-block accumulator pattern (the V grid axis is innermost).
+contraction dimension. ``stream_dtype=bfloat16`` streams C and Eφ in bf16
+(fp32 accumulation), halving the dominant HBM terms of the fixed point.
 """
 from __future__ import annotations
 
@@ -24,12 +44,275 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
 
 
+def _default_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
 # ---------------------------------------------------------------------------
-# γ-sweep kernel
+# in-kernel Dirichlet expectation
+# ---------------------------------------------------------------------------
+
+def _digamma(x):
+    """ψ(x) for x > 0, kernel-safe (no lax.digamma lowering dependence).
+
+    Recurrence ψ(x) = ψ(x+1) − 1/x applied 8 times pushes the argument
+    above 8, where the asymptotic series ln x − 1/2x − Σ B₂ₙ/(2n·x²ⁿ) is
+    accurate to ~1e-7 relative — far inside the E-step tolerance.
+    """
+    shift = jnp.zeros_like(x)
+    for _ in range(8):
+        shift += 1.0 / x
+        x = x + 1.0
+    inv = 1.0 / x
+    inv2 = inv * inv
+    series = jnp.log(x) - 0.5 * inv - inv2 * (
+        1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 / 252.0))
+    return series - shift
+
+
+def _exp_elog_theta(g, k_real: int):
+    """exp(E[ln θ]) over the first ``k_real`` topics; padded topics → 0.
+
+    Padded γ columns carry exactly α₀ and a zero Eφ column (see
+    ``ops.pad_inputs``); masking them out of the normaliser keeps the real
+    topics' expectation identical to the unpadded computation.
+    """
+    mask = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1) < k_real
+    gm = jnp.where(mask, g, 0.0)
+    s = gm.sum(-1, keepdims=True)
+    et = jnp.exp(_digamma(jnp.maximum(g, 1e-10)) - _digamma(s))
+    return jnp.where(mask, et, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused fixed-point kernel
+# ---------------------------------------------------------------------------
+
+def _fixed_point_kernel(alpha0: float, tol: float, k_real: int,
+                        b_real: int, block_b: int, num_t: int, num_v: int,
+                        c_ref, eb_ref, g0_ref,
+                        gamma_ref, et_ref, iters_ref,
+                        gamma_s, et_s, acc_s, flags):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((t == 0) & (j == 0))
+    def _start():
+        gamma_s[...] = g0_ref[...]
+        flags[0] = 0                                   # converged flag
+        flags[1] = 0                                   # sweeps run
+
+    live = flags[0] == 0
+
+    @pl.when(live & (j == 0))
+    def _sweep_start():
+        et_s[...] = _exp_elog_theta(gamma_s[...], k_real)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    @pl.when(live)
+    def _accumulate():
+        et = et_s[...]                                 # (bB, K)
+        eb = eb_ref[...].astype(jnp.float32)           # (bV, K)
+        p = jax.lax.dot_general(et, eb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) + _EPS
+        r = c_ref[...].astype(jnp.float32) / p         # (bB, bV)
+        acc_s[...] += jax.lax.dot(r, eb,
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(live & (j == num_v - 1))
+    def _sweep_end():
+        g_old = gamma_s[...]
+        mask = jax.lax.broadcasted_iota(jnp.int32, g_old.shape, 1) < k_real
+        g_new = jnp.where(mask, alpha0 + et_s[...] * acc_s[...], alpha0)
+        # mean |Δγ| over the tile's REAL rows/topics only — padding holds
+        # γ = α₀ exactly (zero diff) but must not dilute the convergence
+        # threshold, or the kernel stops earlier than the jnp backends
+        rows_real = jnp.clip(b_real - i * block_b, 1, block_b)
+        delta = jnp.abs(g_new - g_old).sum() / (rows_real * k_real)
+        gamma_s[...] = g_new
+        flags[1] += 1
+        flags[0] = jnp.where(delta <= tol, 1, 0).astype(jnp.int32)
+
+    @pl.when((t == num_t - 1) & (j == num_v - 1))
+    def _finish():
+        g = gamma_s[...]
+        gamma_ref[...] = g
+        et_ref[...] = _exp_elog_theta(g, k_real)
+        iters_ref[0, 0] = flags[1]
+
+
+def estep_fixed_point(c: jax.Array, eb: jax.Array, gamma0: jax.Array,
+                      alpha0: float, tol: float, max_iters: int,
+                      k_real: int, b_real: int | None = None, *,
+                      block_b: int = 128, block_v: int = 512,
+                      interpret: bool | None = None):
+    """The whole γ fixed point as ONE pallas_call.
+
+    Shapes: c (B, V), eb (V, K), gamma0 (B, K) → (γ (B, K), Eθ (B, K),
+    per-B-tile sweep counts (nb, 1) int32). All dims pre-padded to the
+    block grid; ``k_real``/``b_real`` mask the padded topic columns and
+    batch rows out of the convergence mean. C/Eφ may be bf16 (fp32
+    accumulation).
+    """
+    b, v = c.shape
+    k = gamma0.shape[1]
+    b_real = b if b_real is None else b_real
+    block_b, block_v = min(block_b, b), min(block_v, v)
+    assert b % block_b == 0 and v % block_v == 0, (b, v, block_b, block_v)
+    interpret = _default_interpret(interpret)
+    nb, nv = b // block_b, v // block_v
+    grid = (nb, max(int(max_iters), 1), nv)
+    gamma, et, iters = pl.pallas_call(
+        functools.partial(_fixed_point_kernel, alpha0, tol, k_real,
+                          b_real, block_b, grid[1], nv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, t, j: (i, j)),
+            pl.BlockSpec((block_v, k), lambda i, t, j: (j, 0)),
+            pl.BlockSpec((block_b, k), lambda i, t, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i, t, j: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, t, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, k), jnp.float32),
+            pltpu.VMEM((block_b, k), jnp.float32),
+            pltpu.VMEM((block_b, k), jnp.float32),
+            pltpu.SMEM((2,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(c, eb, gamma0)
+    return gamma, et, iters
+
+
+# ---------------------------------------------------------------------------
+# fused token-π + memo-correction kernel
+# ---------------------------------------------------------------------------
+
+def _memo_delta_kernel(block_v: int, has_old: bool, quantize: bool, *refs):
+    if has_old:
+        (ids_ref, cnts_ref, ebtok_ref, oldpi_ref, et_ref,
+         pi_ref, snew_ref, sold_ref) = refs
+    else:
+        ids_ref, cnts_ref, ebtok_ref, et_ref, pi_ref, snew_ref = refs
+        oldpi_ref = sold_ref = None
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    cnts = cnts_ref[...]                               # (bB, L)
+
+    @pl.when(j == 0)
+    def _pi():
+        et = et_ref[...]                               # (bB, K)
+        ebt = ebtok_ref[...]                           # (bB, L, K)
+        p = (et[:, None, :] * ebt).sum(-1) + _EPS      # (bB, L)
+        pi = et[:, None, :] * ebt / p[:, :, None]
+        pi = jnp.where(cnts[:, :, None] > 0, pi, 0.0)
+        if quantize:
+            # round through the memo store's wire dtype BEFORE scattering,
+            # so ⟨m_vk⟩ adds exactly what the store will later subtract
+            pi = pi.astype(jnp.bfloat16).astype(jnp.float32)
+        pi_ref[...] = pi
+
+    bb, ll, kk = pi_ref.shape
+    ids_flat = ids_ref[...].reshape(1, bb * ll)
+    rows = j * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (block_v, bb * ll), 0)
+    onehot = (rows == ids_flat).astype(jnp.float32)    # (bV, bB·L)
+
+    w_new = (cnts[:, :, None] * pi_ref[...]).reshape(bb * ll, kk)
+    contrib_new = jax.lax.dot(onehot, w_new,
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init_new():
+        snew_ref[...] = jnp.zeros_like(snew_ref)
+
+    snew_ref[...] += contrib_new
+
+    if has_old:
+        w_old = (cnts[:, :, None] * oldpi_ref[...]).reshape(bb * ll, kk)
+        contrib_old = jax.lax.dot(onehot, w_old,
+                                  preferred_element_type=jnp.float32)
+
+        @pl.when(i == 0)
+        def _init_old():
+            sold_ref[...] = jnp.zeros_like(sold_ref)
+
+        sold_ref[...] += contrib_old
+
+
+def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
+               etheta: jax.Array, vocab_size: int,
+               old_pi: jax.Array | None = None, *,
+               quantize: bool = False, block_b: int = 16, block_v: int = 128,
+               interpret: bool | None = None):
+    """Token-aligned π plus one-hot-scattered new/old masses in one kernel.
+
+    Shapes: token_ids/counts (B, L), eb_tok (B, L, K) = Eφ[token_ids],
+    etheta (B, K). Returns (π (B, L, K), S_new (V, K)[, S_old (V, K)]):
+    S_new = Σ cnt·π_new and S_old = Σ cnt·π_old scattered at the token
+    ids, so the IVI correction is ``S_new − S_old`` and the batch
+    sufficient statistics are ``S_new`` — with every (B, L, K)
+    intermediate living only in VMEM tiles.
+
+    B must divide by ``block_b`` (pad upstream); V is padded here (ids are
+    always < V so the padded rows are zero and stripped).
+    """
+    b, l = token_ids.shape
+    k = etheta.shape[1]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    interpret = _default_interpret(interpret)
+    vp = ((vocab_size + block_v - 1) // block_v) * block_v
+    nb, nv = b // block_b, vp // block_v
+    has_old = old_pi is not None
+
+    row_spec = pl.BlockSpec((block_b, l), lambda i, j: (i, 0))
+    cube_spec = pl.BlockSpec((block_b, l, k), lambda i, j: (i, 0, 0))
+    vk_spec = pl.BlockSpec((block_v, k), lambda i, j: (j, 0))
+    in_specs = [row_spec, row_spec, cube_spec]
+    inputs = [token_ids, counts, eb_tok]
+    if has_old:
+        in_specs.append(cube_spec)
+        inputs.append(old_pi)
+    in_specs.append(pl.BlockSpec((block_b, k), lambda i, j: (i, 0)))
+    inputs.append(etheta)
+    out_specs = [cube_spec, vk_spec]
+    out_shape = [jax.ShapeDtypeStruct((b, l, k), jnp.float32),
+                 jax.ShapeDtypeStruct((vp, k), jnp.float32)]
+    if has_old:
+        out_specs.append(vk_spec)
+        out_shape.append(jax.ShapeDtypeStruct((vp, k), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_memo_delta_kernel, block_v, has_old, quantize),
+        grid=(nb, nv),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    pi, snew = outs[0], outs[1][:vocab_size]
+    if has_old:
+        return pi, snew, outs[2][:vocab_size]
+    return pi, snew
+
+
+# ---------------------------------------------------------------------------
+# legacy γ-sweep kernel (one pallas_call per sweep)
 # ---------------------------------------------------------------------------
 
 def _sweep_kernel(alpha0: float, num_v_tiles: int,
@@ -65,8 +348,7 @@ def estep_sweep(c: jax.Array, etheta: jax.Array, eb: jax.Array,
     k = etheta.shape[1]
     block_b, block_v = min(block_b, b), min(block_v, v)
     assert b % block_b == 0 and v % block_v == 0, (b, v, block_b, block_v)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = _default_interpret(interpret)
     grid = (b // block_b, v // block_v)
     return pl.pallas_call(
         functools.partial(_sweep_kernel, alpha0, grid[1]),
@@ -115,8 +397,7 @@ def sstats(c: jax.Array, etheta: jax.Array, eb: jax.Array, *,
     k = etheta.shape[1]
     block_b, block_v = min(block_b, b), min(block_v, v)
     assert b % block_b == 0 and v % block_v == 0, (b, v, block_b, block_v)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = _default_interpret(interpret)
     grid = (v // block_v, b // block_b)                    # B-axis innermost
     return pl.pallas_call(
         functools.partial(_sstats_kernel, grid[1]),

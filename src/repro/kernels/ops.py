@@ -1,19 +1,33 @@
 """Jitted wrappers around the LDA Pallas kernels.
 
-``estep_pallas`` is a drop-in replacement for ``repro.core.estep.estep_dense``
-(select with ``LDAConfig(estep_backend="pallas")``): it pads (B, V, K) to the
-kernel block grid, runs the fixed point with the fused sweep kernel, and
-produces the same ``EStepResult`` (γ, token-aligned π, sufficient stats).
+``estep_pallas`` is the fused drop-in replacement for
+``repro.core.estep.estep_dense`` (select with
+``LDAConfig(estep_backend="pallas")``): it pads (B, V, K) to the kernel
+block grid, runs the WHOLE γ fixed point in one ``pallas_call``
+(`lda_estep.estep_fixed_point`), and recovers token-aligned π and the
+sufficient statistics with the fused ``memo_delta`` kernel — two kernel
+launches per E-step, none of them inside a ``while`` loop, and no
+(B, L, K) jnp intermediates beyond the Eφ token gather that feeds the
+kernel.
+
+``memo_correction_pallas`` is the IVI hot path behind
+``core.estep.PallasBackend.solve_correction``: the same two launches also
+emit the subtract-old/add-new correction ``S_new − S_old`` directly.
+
+``estep_pallas_sweeps`` keeps the pre-fusion formulation (one
+``pallas_call`` per sweep inside ``lax.while_loop`` + a separate sstats
+kernel + jnp π recovery) as the benchmark baseline — see
+``benchmarks/kernel_bench.py`` and BENCH_estep.json.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.estep import EStepResult, densify
+from repro.core.estep import EStepResult, densify, warm_start_gamma
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.types import LDAConfig
 from repro.kernels import lda_estep
@@ -49,19 +63,135 @@ def pad_inputs(c: jax.Array, eb: jax.Array, block_b: int, block_v: int,
     return c, eb, (b, v, k)
 
 
-@partial(jax.jit, static_argnames=("cfg", "block_b", "block_v"))
+def _stream_cast(cfg: LDAConfig, x: jax.Array) -> jax.Array:
+    """Cast a streamed kernel input to ``cfg.estep_stream_dtype``.
+
+    bf16 halves the dominant HBM terms (C and Eφ) of the fixed point;
+    accumulation stays fp32 in-kernel. Counts are exact in bf16 up to 256
+    occurrences of a token in one document.
+    """
+    if cfg.estep_stream_dtype == "float32":
+        return x
+    if cfg.estep_stream_dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    raise ValueError(f"unknown estep_stream_dtype: {cfg.estep_stream_dtype}")
+
+
+def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+# Eφ blocks at or under this size are made V-resident: one V tile, so the
+# Pallas pipeline fetches Eφ once per call and C once per B-tile instead of
+# re-streaming both every sweep (the block index never changes across the
+# sweep axis). Chosen well under the 16 MB VMEM with the fp32 working set.
+_V_RESIDENT_BYTES = 6 * 1024 * 1024
+
+
+def _run_fixed_point(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                     token_ids: jax.Array, counts: jax.Array,
+                     gamma0: Optional[jax.Array], block_b: int, block_v: int):
+    """densify → pad → fused fixed-point kernel. Returns real-shape γ/Eθ."""
+    bsz = token_ids.shape[0]
+    v = exp_elog_beta.shape[0]
+    kp = _round_up(exp_elog_beta.shape[1], 128)
+    stream_bytes = 2 if cfg.estep_stream_dtype == "bfloat16" else 4
+    if v * kp * stream_bytes <= _V_RESIDENT_BYTES:
+        block_v = max(block_v, v)          # whole V in one resident tile
+    c = densify(token_ids, counts, v)
+    cpad, ebpad, (b, _, k) = pad_inputs(c, exp_elog_beta, block_b, block_v)
+    if gamma0 is None:
+        gamma0 = jnp.full((bsz, cfg.num_topics), cfg.alpha0 + 1.0, jnp.float32)
+    # pad γ topics/rows with α₀ (they stay exactly α₀: zero Eφ column and
+    # zero counts respectively, so their update is a no-op)
+    gpad = jnp.pad(gamma0, ((0, cpad.shape[0] - b), (0, ebpad.shape[1] - k)),
+                   constant_values=cfg.alpha0)
+    gamma, et, iters = lda_estep.estep_fixed_point(
+        _stream_cast(cfg, cpad), _stream_cast(cfg, ebpad), gpad,
+        cfg.alpha0, cfg.estep_tol, cfg.estep_max_iters, k_real=k,
+        b_real=bsz, block_b=block_b, block_v=block_v)
+    return gamma[:bsz, :k], et[:bsz, :k], iters.max()
+
+
+@partial(jax.jit, static_argnames=("cfg", "block_b", "block_v",
+                                   "delta_block_b", "delta_block_v"))
 def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                  token_ids: jax.Array, counts: jax.Array,
                  gamma0: Optional[jax.Array] = None, *,
-                 block_b: int = 128, block_v: int = 512) -> EStepResult:
-    """Full batched E-step using the Pallas kernels (dense formulation)."""
+                 block_b: int = 128, block_v: int = 512,
+                 delta_block_b: int = 16,
+                 delta_block_v: int = 128) -> EStepResult:
+    """Fused batched E-step: fixed-point kernel + memo_delta kernel."""
+    bsz = token_ids.shape[0]
+    gamma, et, iters = _run_fixed_point(cfg, exp_elog_beta, token_ids,
+                                        counts, gamma0, block_b, block_v)
+    eb_tok = exp_elog_beta[token_ids]                  # (B, L, K) kernel feed
+    bp = _round_up(bsz, delta_block_b)
+    pi, snew = lda_estep.memo_delta(
+        _pad_rows(token_ids, bp), _pad_rows(counts, bp),
+        _pad_rows(eb_tok, bp), _pad_rows(et, bp), exp_elog_beta.shape[0],
+        block_b=delta_block_b, block_v=delta_block_v)
+    return EStepResult(gamma=gamma, pi=pi[:bsz], sstats=snew, iters=iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "block_b", "block_v",
+                                   "delta_block_b", "delta_block_v"))
+def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                           token_ids: jax.Array, counts: jax.Array,
+                           old_pi: jax.Array, visited: jax.Array, *,
+                           pi_dtype: str = "float32",
+                           block_b: int = 128, block_v: int = 512,
+                           delta_block_b: int = 16, delta_block_v: int = 128
+                           ) -> Tuple[jax.Array, jax.Array, EStepResult]:
+    """Fused IVI hot path: E-step + subtract-old/add-new correction.
+
+    Returns (correction (V, K), first-visit word count, EStepResult) —
+    exactly the `EStepBackend.solve_correction` contract. The correction
+    is ``S_new − S_old`` from the one-hot scatters of the ``memo_delta``
+    kernel; the only (B, L, K) jnp array in the jaxpr is the Eφ token
+    gather feeding the kernel (old_pi is an *input*, not an intermediate).
+    """
+    if pi_dtype not in ("float32", "bfloat16"):
+        # the in-kernel quantize only implements the bf16 wire; refuse
+        # rather than silently skip the round-trip and drift ⟨m_vk⟩
+        raise ValueError(f"pallas memo correction supports pi_dtype "
+                         f"float32|bfloat16, got {pi_dtype!r}")
+    bsz = token_ids.shape[0]
+    gamma0 = warm_start_gamma(cfg, counts, old_pi, visited)
+    gamma, et, iters = _run_fixed_point(cfg, exp_elog_beta, token_ids,
+                                        counts, gamma0, block_b, block_v)
+    eb_tok = exp_elog_beta[token_ids]                  # (B, L, K) kernel feed
+    bp = _round_up(bsz, delta_block_b)
+    pi, snew, sold = lda_estep.memo_delta(
+        _pad_rows(token_ids, bp), _pad_rows(counts, bp),
+        _pad_rows(eb_tok, bp), _pad_rows(et, bp), exp_elog_beta.shape[0],
+        old_pi=_pad_rows(old_pi, bp), quantize=(pi_dtype == "bfloat16"),
+        block_b=delta_block_b, block_v=delta_block_v)
+    correction = snew - sold
+    words_first = jnp.sum(jnp.where(~visited, counts.sum(-1), 0.0))
+    res = EStepResult(gamma=gamma, pi=pi[:bsz], sstats=snew, iters=iters)
+    return correction, words_first, res
+
+
+# ---------------------------------------------------------------------------
+# legacy per-sweep path (benchmark baseline)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "block_b", "block_v"))
+def estep_pallas_sweeps(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                        token_ids: jax.Array, counts: jax.Array,
+                        gamma0: Optional[jax.Array] = None, *,
+                        block_b: int = 128, block_v: int = 512) -> EStepResult:
+    """Pre-fusion E-step: one ``pallas_call`` per sweep inside a
+    ``lax.while_loop``, jnp Eθ recomputation between sweeps, separate
+    sstats kernel, jnp token-π recovery. Kept as the BENCH_estep baseline."""
     bsz = token_ids.shape[0]
     v = exp_elog_beta.shape[0]
     c = densify(token_ids, counts, v)
     cpad, ebpad, (b, _, k) = pad_inputs(c, exp_elog_beta, block_b, block_v)
     if gamma0 is None:
         gamma0 = jnp.full((bsz, cfg.num_topics), cfg.alpha0 + 1.0, jnp.float32)
-    # pad γ topics with α₀ (they stay exactly α₀: padded Eφ column is zero)
     gpad = jnp.pad(gamma0, ((0, cpad.shape[0] - b), (0, ebpad.shape[1] - k)),
                    constant_values=cfg.alpha0)
 

@@ -27,6 +27,8 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+import jax
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
@@ -200,6 +202,66 @@ def _multipliers(mod: HLOModule) -> Dict[str, float]:
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute", "all-gather-start", "all-reduce-start",
                 "collective-permute-start")
+
+_LOOP_PRIMS = ("while", "scan")
+
+
+# jnp-side *compute* on a (B, L, K)-rank array — data staging (gather /
+# pad / broadcast / reshape / transpose) feeding a kernel is excluded: XLA
+# fuses it into the operand read, and the issue is arithmetic round-trips.
+_ARITH_PRIMS = frozenset({
+    "add", "sub", "mul", "div", "pow", "integer_pow", "exp", "log", "neg",
+    "max", "min", "select_n", "rsqrt", "sqrt", "tanh", "logistic",
+    "reduce_sum", "reduce_max", "dot_general",
+})
+
+
+def pallas_call_sites(fn, *args, **kwargs) -> Dict[str, int]:
+    """Count Pallas kernel-launch sites in ``fn``'s jaxpr.
+
+    Returns ``{"total": n, "under_loop": m, "blk_intermediates": i}``:
+    ``under_loop`` counts sites nested inside a ``while``/``scan`` — a
+    kernel there launches once per trip (the pre-fusion E-step paid one
+    launch per fixed-point sweep; the fused path must report 0) — and
+    ``blk_intermediates`` counts rank-≥3 *arithmetic* results outside any
+    kernel (the (B, L, K) jnp intermediates the fused memo correction
+    eliminates; kernel-internal VMEM math is not walked).
+
+    Structure is counted at jaxpr level rather than in compiled HLO
+    because interpret-mode Pallas (CPU CI) inlines kernels into plain HLO
+    ops; on TPU each site lowers to exactly one Mosaic custom-call, so the
+    count equals the compiled launch-site count there.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs) if callable(fn) else fn
+    counts = {"total": 0, "under_loop": 0, "blk_intermediates": 0}
+
+    def sub_jaxprs(eqn):
+        for v in eqn.params.values():
+            if isinstance(v, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                yield v
+            elif isinstance(v, (tuple, list)):
+                for x in v:
+                    if isinstance(x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                        yield x
+
+    def walk(jx, in_loop):
+        if isinstance(jx, jax.core.ClosedJaxpr):
+            jx = jx.jaxpr
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name == "pallas_call":
+                counts["total"] += 1
+                if in_loop:
+                    counts["under_loop"] += 1
+                continue              # kernel-internal math lives in VMEM
+            if name in _ARITH_PRIMS and any(
+                    getattr(ov.aval, "ndim", 0) >= 3 for ov in eqn.outvars):
+                counts["blk_intermediates"] += 1
+            for sub in sub_jaxprs(eqn):
+                walk(sub, in_loop or name in _LOOP_PRIMS)
+
+    walk(jaxpr, False)
+    return counts
 
 
 def _dot_flops(ins: Instr, defs: Dict[str, str]) -> float:

@@ -57,7 +57,12 @@ def main_lda(args) -> None:
         return
 
     eng = LDAEngine(cfg, train, algo=args.algo, batch_size=args.batch,
-                    seed=args.seed, test_corpus=test)
+                    seed=args.seed, test_corpus=test,
+                    memo_store=args.memo_store, chunk_docs=args.chunk_docs,
+                    bucket_by_length=args.bucketed)
+    if eng.memo is not None:
+        print(f"memo_store={args.memo_store} "
+              f"footprint={eng.memo.footprint_bytes() / 1e6:.2f}MB")
     for e in range(args.epochs):
         eng.run_epoch()
         ev = eng.evaluate()
@@ -156,6 +161,14 @@ def main() -> None:
     lda.add_argument("--estep-iters", type=int, default=60)
     lda.add_argument("--backend", default="gather",
                      choices=["gather", "dense", "pallas"])
+    lda.add_argument("--memo-store", default="dense",
+                     choices=["dense", "chunked", "gamma"],
+                     help="π-memo representation for ivi/sivi "
+                          "(docs/estep.md)")
+    lda.add_argument("--chunk-docs", type=int, default=8192,
+                     help="documents per host-store chunk")
+    lda.add_argument("--bucketed", action="store_true",
+                     help="length-bucketed epoch batching (svi/ivi/sivi)")
     lda.add_argument("--eval-every", type=int, default=5)
     lda.add_argument("--bound", action="store_true")
     lda.add_argument("--seed", type=int, default=0)

@@ -83,7 +83,7 @@ def rows():
 def modeled_estep_hbm_bytes(path: str, b: int, v: int, k: int, l: int,
                             iters: int, *, stream_bytes: int = 4,
                             block_b: int = 128, block_v: int = 512,
-                            delta_block_b: int = 16) -> int:
+                            delta_block_b: int = 32) -> int:
     """Structural HBM traffic of one E-step + memo correction.
 
     Counts block fetches/stores the way the Pallas TPU pipeline issues
@@ -114,10 +114,17 @@ def modeled_estep_hbm_bytes(path: str, b: int, v: int, k: int, l: int,
             eb_elems = iters * nb * v * k
         fixed_point = (c_elems + eb_elems) * stream_bytes + 3 * bk
         # memo_delta kernel: ids+cnts+ebtok+old_pi in, π out, and the two
-        # (V, K) one-hot accumulators spilled once per revisiting B-tile
-        nbd = -(-b // delta_block_b)
+        # one-hot scatters as per-B-tile (nbd, V, K) partials — written
+        # once per block by the kernel, then read + reduced to (V, K) by
+        # XLA outside it (the TPU-safe revisit discipline, docs/estep.md).
+        # nbd counts the grid memo_delta actually runs: its VMEM guard
+        # halves the B-tile for long token axes (delta_effective_block_b)
+        bp = -(-b // delta_block_b) * delta_block_b   # padded B (ops wrapper)
+        bb_eff = lda_estep.delta_effective_block_b(bp, l, k,
+                                                   block_b=delta_block_b)
+        nbd = bp // bb_eff
         delta = (2 * b * l * 4 + 3 * b * l * k * 4
-                 + 2 * (2 * nbd - 1) * v * k * 4 + bk)
+                 + 2 * (2 * nbd + 1) * v * k * 4 + bk)
         return fixed_point + delta
     raise ValueError(path)
 

@@ -214,9 +214,14 @@ class EStepBackend:
         gamma0 = warm_start_gamma(cfg, cnts, old_pi, visited)
         res = self.solve(cfg, exp_elog_beta, batch, gamma0)
         pi = quantize_pi(res.pi, pi_dtype)
-        res = res._replace(pi=pi)
-        delta = cnts[:, :, None] * (pi - old_pi)
-        correction = scatter_sstats(ids, delta, cfg.vocab_size)
+        # rebuild sstats from the ROUNDED π so every backend returns the
+        # same result: the Pallas path scatters the quantized π into its
+        # S_new (which doubles as sstats), and the low-precision invariant
+        # above must hold for the sstats field too
+        snew = scatter_sstats(ids, cnts[:, :, None] * pi, cfg.vocab_size)
+        res = res._replace(pi=pi, sstats=snew)
+        sold = scatter_sstats(ids, cnts[:, :, None] * old_pi, cfg.vocab_size)
+        correction = snew - sold
         words_first = jnp.sum(jnp.where(~visited, cnts.sum(-1), 0.0))
         return correction, words_first, res
 

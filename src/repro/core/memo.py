@@ -23,7 +23,9 @@ with three implementations:
   (SCVB0-style compressed statistics, Foulds et al. 2013).
 * ``GammaMemoStore`` — γ-only: stores γ (D, K) fp32 plus a per-chunk bf16
   snapshot of Eφ from the chunk's last update, and *recomputes* π_old on
-  gather as Eθ(γ)·Eφ_snap/φnorm. ~0.5 GB at Arxiv scale. The
+  gather as Eθ(γ)·Eφ_snap/φnorm. ~3.9 GB at Arxiv scale (γ itself is
+  0.4 GB; the ⌈D/chunk⌉ ≈ 96 (V, K) bf16 snapshots dominate at 3.5 GB —
+  see ``memo_footprint_bytes``). The
   reconstruction is exact only while every document of a chunk was last
   visited under the chunk's snapshot — an approximation intended for the
   S-IVI / D-IVI paths, where the correction enters a Robbins–Monro
@@ -56,6 +58,17 @@ from repro.core.types import Corpus, LDAConfig, init_memo
 _EPS = 1e-30
 
 
+def _chunk_partition(idx: np.ndarray, chunk_docs: int
+                     ) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
+    """Partition doc indices by chunk: yields (chunk, sel, local) where
+    ``idx[sel]`` are the documents landing in ``chunk`` and ``local`` their
+    row offsets within it (callers that address whole chunks ignore it)."""
+    cid = idx // chunk_docs
+    for c in np.unique(cid):
+        sel = np.nonzero(cid == c)[0]
+        yield int(c), sel, idx[sel] - int(c) * chunk_docs
+
+
 class MemoStore:
     """One memo contract for every engine (see module docstring)."""
 
@@ -78,8 +91,19 @@ class MemoStore:
                exp_elog_beta: Optional[jax.Array] = None) -> "MemoStore":
         """Write a batch's new π (B, width, K) and mark it visited.
 
-        Returns the store to use from now on (host stores mutate and
-        return self; the device store returns a new functional value).
+        CONTRACT: the return value is the only handle valid after the
+        call — the pre-update store must be treated as CONSUMED, whichever
+        implementation is behind it. The host stores (chunked / γ-only)
+        mutate their numpy state in place and return ``self``, so any
+        reference kept from before the call aliases the updated state; the
+        dense device store returns a new functional value and *donates*
+        the old buffers to the scatter, so the old handle's arrays are
+        invalidated outright. Callers that need a before/after comparison
+        must copy out (``gather``) before updating — holding the old store
+        object gives aliased state on one path and a donated-away buffer
+        on the other. (``DenseMemoStore.updated`` is the pure, in-jit
+        variant with none of this: it leaves ``self`` intact.)
+
         ``exp_elog_beta`` is the Eφ the E-step ran against — only the
         γ-only store consumes it (chunk snapshot).
         """
@@ -198,17 +222,11 @@ class ChunkedMemoStore(MemoStore):
         ]
         self._visited = np.zeros((num_docs,), bool)
 
-    def _by_chunk(self, idx: np.ndarray):
-        cid = idx // self.chunk_docs
-        for c in np.unique(cid):
-            sel = np.nonzero(cid == c)[0]
-            yield int(c), sel, idx[sel] - int(c) * self.chunk_docs
-
     def gather(self, doc_idx, width: Optional[int] = None):
         idx = np.asarray(doc_idx)
         w = self.max_unique if width is None else width
         out = np.zeros((len(idx), w, self.num_topics), np.float32)
-        for c, sel, local in self._by_chunk(idx):
+        for c, sel, local in _chunk_partition(idx, self.chunk_docs):
             out[sel] = self._chunks[c][local, :w].astype(np.float32)
         return jnp.asarray(out), jnp.asarray(self._visited[idx])
 
@@ -216,7 +234,7 @@ class ChunkedMemoStore(MemoStore):
         idx = np.asarray(doc_idx)
         w = pi.shape[1]
         vals = np.asarray(pi)                  # device→host, per batch
-        for c, sel, local in self._by_chunk(idx):
+        for c, sel, local in _chunk_partition(idx, self.chunk_docs):
             self._chunks[c][local, :w] = vals[sel].astype(_BF16)
             if w < self.max_unique:
                 self._chunks[c][local, w:] = 0
@@ -262,18 +280,15 @@ class GammaMemoStore(MemoStore):
         self._snap: Dict[int, np.ndarray] = {}     # chunk → (V, K) bf16
         self._visited = np.zeros((self.num_docs,), bool)
 
-    def _by_chunk(self, idx: np.ndarray):
-        cid = idx // self.chunk_docs
-        for c in np.unique(cid):
-            sel = np.nonzero(cid == c)[0]
-            yield int(c), sel
-
     def gather(self, doc_idx, width: Optional[int] = None):
         idx = np.asarray(doc_idx)
         w = self.max_unique if width is None else width
-        out = jnp.zeros((len(idx), w, self.num_topics), jnp.float32)
+        # stage per-chunk reconstructions into ONE host buffer (as the
+        # chunked store does) — a functional out.at[sel].set(pi) would copy
+        # the whole (B, w, K) output once per touched chunk
+        out = np.zeros((len(idx), w, self.num_topics), np.float32)
         vis = self._visited[idx]
-        for c, sel in self._by_chunk(idx):
+        for c, sel, _local in _chunk_partition(idx, self.chunk_docs):
             if c not in self._snap:
                 continue
             rows = idx[sel]
@@ -285,8 +300,8 @@ class GammaMemoStore(MemoStore):
             pi = jnp.where(jnp.asarray(self._cnts[rows, :w])[:, :, None] > 0,
                            pi, 0.0)
             pi = jnp.where(jnp.asarray(vis[sel])[:, None, None], pi, 0.0)
-            out = out.at[jnp.asarray(sel)].set(pi)
-        return out, jnp.asarray(vis)
+            out[sel] = np.asarray(pi)
+        return jnp.asarray(out), jnp.asarray(vis)
 
     def update(self, doc_idx, pi, *, exp_elog_beta=None) -> "GammaMemoStore":
         if exp_elog_beta is None:
@@ -298,7 +313,7 @@ class GammaMemoStore(MemoStore):
             "blk,bl->bk", pi, jnp.asarray(self._cnts[idx, :w]))
         self._gamma[idx] = np.asarray(gamma)
         snap = np.asarray(exp_elog_beta).astype(_BF16)
-        for c, _sel in self._by_chunk(idx):
+        for c, _sel, _local in _chunk_partition(idx, self.chunk_docs):
             self._snap[c] = snap
         self._visited[idx] = True
         return self

@@ -17,10 +17,14 @@ Fused path
   paid one pallas_call per sweep plus a jnp Eθ recomputation per sweep.
 * ``memo_delta`` — token-aligned π AND the subtract-old/add-new scatter in
   one kernel: for each (B-tile, V-tile) it forms π = Eθ⊙Eφ_tok/φnorm in
-  VMEM, then scatters cnt·π_new and cnt·π_old into (V, K) with a one-hot
-  MXU matmul (ids == V-tile rows), so the IVI correction needs **no
-  (B, L, K) jnp intermediates** — the only (B, L, K) array XLA sees is the
-  Eφ token gather feeding the kernel.
+  VMEM, then scatters cnt·π_new and cnt·π_old with a one-hot MXU matmul
+  (ids == V-tile rows) into per-B-tile partial (nb, V, K) sums — every
+  output block is written exactly once (Pallas TPU only guarantees
+  revisited output blocks when the revisits are grid-consecutive, and the
+  π output already pins the B axis outermost) — which the wrapper reduces
+  over nb in jnp. The IVI correction therefore needs **no (B, L, K) jnp
+  intermediates**: the only (B, L, K) array XLA sees is the Eφ token
+  gather feeding the kernel.
 
 Legacy per-sweep path
 ---------------------
@@ -209,7 +213,6 @@ def _memo_delta_kernel(block_v: int, has_old: bool, quantize: bool, *refs):
     else:
         ids_ref, cnts_ref, ebtok_ref, et_ref, pi_ref, snew_ref = refs
         oldpi_ref = sold_ref = None
-    i = pl.program_id(0)
     j = pl.program_id(1)
     cnts = cnts_ref[...]                               # (bB, L)
 
@@ -232,32 +235,55 @@ def _memo_delta_kernel(block_v: int, has_old: bool, quantize: bool, *refs):
         jnp.int32, (block_v, bb * ll), 0)
     onehot = (rows == ids_flat).astype(jnp.float32)    # (bV, bB·L)
 
+    # Each (nb, V-tile) partial block is visited exactly once, so a plain
+    # write is safe on TPU — accumulating (V, K) blocks across B-tiles is
+    # not, because the B axis is the OUTER grid axis here (π pins it) and
+    # Pallas only defines revisited output blocks for consecutive revisits.
     w_new = (cnts[:, :, None] * pi_ref[...]).reshape(bb * ll, kk)
-    contrib_new = jax.lax.dot(onehot, w_new,
-                              preferred_element_type=jnp.float32)
-
-    @pl.when(i == 0)
-    def _init_new():
-        snew_ref[...] = jnp.zeros_like(snew_ref)
-
-    snew_ref[...] += contrib_new
+    snew_ref[...] = jax.lax.dot(onehot, w_new,
+                                preferred_element_type=jnp.float32)[None]
 
     if has_old:
         w_old = (cnts[:, :, None] * oldpi_ref[...]).reshape(bb * ll, kk)
-        contrib_old = jax.lax.dot(onehot, w_old,
-                                  preferred_element_type=jnp.float32)
+        sold_ref[...] = jax.lax.dot(onehot, w_old,
+                                    preferred_element_type=jnp.float32)[None]
 
-        @pl.when(i == 0)
-        def _init_old():
-            sold_ref[...] = jnp.zeros_like(sold_ref)
 
-        sold_ref[...] += contrib_old
+# VMEM budget for one memo_delta grid step (≈4 (block_b, L, K) fp32 cubes
+# plus the (block_v, block_b·L) one-hot), kept at half of the 16 MB VMEM to
+# leave room for the pipeline's double buffering. The wrapper halves
+# block_b until the step fits, so long token axes trade B-parallelism for
+# VMEM instead of overflowing it. The L axis itself is NOT tiled: even at
+# block_b = 1 the step needs ~4·L·K·4 bytes, i.e. L ≤ ~4k at K = 128.
+_DELTA_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def delta_effective_block_b(b: int, l: int, k: int, *, block_b: int = 32,
+                            block_v: int = 128, has_old: bool = True) -> int:
+    """The B-tile ``memo_delta`` actually runs after the VMEM guard.
+
+    Larger B-tiles mean fewer (nb, V, K) partial blocks to spill and
+    reduce, so the default starts at 32 and is halved until the per-step
+    working set fits ``_DELTA_VMEM_BUDGET`` (e.g. L=128, K=128 lands on
+    16; L=512 on 4). Exposed so the BENCH_estep HBM model can count the
+    same grid the kernel uses.
+    """
+    block_b = min(block_b, b)
+    ncubes = 4 if has_old else 3
+
+    def _step_bytes(bb):
+        return (ncubes * bb * l * k + block_v * bb * l) * 4
+
+    while block_b > 1 and _step_bytes(block_b) > _DELTA_VMEM_BUDGET:
+        nxt = block_b // 2
+        block_b = nxt if b % nxt == 0 else 1   # keep the grid exact
+    return block_b
 
 
 def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
                etheta: jax.Array, vocab_size: int,
                old_pi: jax.Array | None = None, *,
-               quantize: bool = False, block_b: int = 16, block_v: int = 128,
+               quantize: bool = False, block_b: int = 32, block_v: int = 128,
                interpret: bool | None = None):
     """Token-aligned π plus one-hot-scattered new/old masses in one kernel.
 
@@ -266,23 +292,29 @@ def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
     S_new = Σ cnt·π_new and S_old = Σ cnt·π_old scattered at the token
     ids, so the IVI correction is ``S_new − S_old`` and the batch
     sufficient statistics are ``S_new`` — with every (B, L, K)
-    intermediate living only in VMEM tiles.
+    intermediate living only in VMEM tiles. The kernel emits per-B-tile
+    (nb, V, K) partials (each grid step owns its output block outright —
+    the TPU-safe pattern; see ``_memo_delta_kernel``) which are reduced
+    over nb here before returning.
 
-    B must divide by ``block_b`` (pad upstream); V is padded here (ids are
-    always < V so the padded rows are zero and stripped).
+    B must divide by ``block_b`` (pad upstream; ``block_b`` is halved
+    automatically until the VMEM step budget holds, see
+    ``_DELTA_VMEM_BUDGET``); V is padded here (ids are always < V so the
+    padded rows are zero and stripped).
     """
     b, l = token_ids.shape
     k = etheta.shape[1]
-    block_b = min(block_b, b)
+    has_old = old_pi is not None
+    block_b = delta_effective_block_b(b, l, k, block_b=block_b,
+                                      block_v=block_v, has_old=has_old)
     assert b % block_b == 0, (b, block_b)
     interpret = _default_interpret(interpret)
     vp = ((vocab_size + block_v - 1) // block_v) * block_v
     nb, nv = b // block_b, vp // block_v
-    has_old = old_pi is not None
 
     row_spec = pl.BlockSpec((block_b, l), lambda i, j: (i, 0))
     cube_spec = pl.BlockSpec((block_b, l, k), lambda i, j: (i, 0, 0))
-    vk_spec = pl.BlockSpec((block_v, k), lambda i, j: (j, 0))
+    part_spec = pl.BlockSpec((1, block_v, k), lambda i, j: (i, j, 0))
     in_specs = [row_spec, row_spec, cube_spec]
     inputs = [token_ids, counts, eb_tok]
     if has_old:
@@ -290,12 +322,12 @@ def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
         inputs.append(old_pi)
     in_specs.append(pl.BlockSpec((block_b, k), lambda i, j: (i, 0)))
     inputs.append(etheta)
-    out_specs = [cube_spec, vk_spec]
+    out_specs = [cube_spec, part_spec]
     out_shape = [jax.ShapeDtypeStruct((b, l, k), jnp.float32),
-                 jax.ShapeDtypeStruct((vp, k), jnp.float32)]
+                 jax.ShapeDtypeStruct((nb, vp, k), jnp.float32)]
     if has_old:
-        out_specs.append(vk_spec)
-        out_shape.append(jax.ShapeDtypeStruct((vp, k), jnp.float32))
+        out_specs.append(part_spec)
+        out_shape.append(jax.ShapeDtypeStruct((nb, vp, k), jnp.float32))
 
     outs = pl.pallas_call(
         functools.partial(_memo_delta_kernel, block_v, has_old, quantize),
@@ -305,9 +337,9 @@ def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
         out_shape=out_shape,
         interpret=interpret,
     )(*inputs)
-    pi, snew = outs[0], outs[1][:vocab_size]
+    pi, snew = outs[0], outs[1].sum(0)[:vocab_size]
     if has_old:
-        return pi, snew, outs[2][:vocab_size]
+        return pi, snew, outs[2].sum(0)[:vocab_size]
     return pi, snew
 
 

@@ -97,8 +97,12 @@ def _run_fixed_point(cfg: LDAConfig, exp_elog_beta: jax.Array,
     v = exp_elog_beta.shape[0]
     kp = _round_up(exp_elog_beta.shape[1], 128)
     stream_bytes = 2 if cfg.estep_stream_dtype == "bfloat16" else 4
-    if v * kp * stream_bytes <= _V_RESIDENT_BYTES:
-        block_v = max(block_v, v)          # whole V in one resident tile
+    # the resident tile must stay lane-aligned: a raw (unrounded) V as the
+    # C lane / Eφ sublane dimension breaks the TPU (8, 128) tiling when V
+    # is not a multiple of 128 — pad_inputs pads V up to this block size
+    v_aligned = _round_up(v, 128)
+    if v_aligned * kp * stream_bytes <= _V_RESIDENT_BYTES:
+        block_v = max(block_v, v_aligned)  # whole V in one resident tile
     c = densify(token_ids, counts, v)
     cpad, ebpad, (b, _, k) = pad_inputs(c, exp_elog_beta, block_b, block_v)
     if gamma0 is None:
@@ -120,7 +124,7 @@ def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                  token_ids: jax.Array, counts: jax.Array,
                  gamma0: Optional[jax.Array] = None, *,
                  block_b: int = 128, block_v: int = 512,
-                 delta_block_b: int = 16,
+                 delta_block_b: int = 32,
                  delta_block_v: int = 128) -> EStepResult:
     """Fused batched E-step: fixed-point kernel + memo_delta kernel."""
     bsz = token_ids.shape[0]
@@ -142,7 +146,7 @@ def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                            old_pi: jax.Array, visited: jax.Array, *,
                            pi_dtype: str = "float32",
                            block_b: int = 128, block_v: int = 512,
-                           delta_block_b: int = 16, delta_block_v: int = 128
+                           delta_block_b: int = 32, delta_block_v: int = 128
                            ) -> Tuple[jax.Array, jax.Array, EStepResult]:
     """Fused IVI hot path: E-step + subtract-old/add-new correction.
 

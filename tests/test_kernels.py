@@ -84,6 +84,57 @@ def test_estep_pallas_full_path():
     np.testing.assert_allclose(r1.pi, r2.pi, rtol=1e-3, atol=1e-4)
 
 
+def _memo_delta_refs(ids, cnts, ebt, et, v):
+    p = (et[:, None, :] * ebt).sum(-1) + 1e-30
+    pi = jnp.where(cnts[:, :, None] > 0,
+                   et[:, None, :] * ebt / p[:, :, None], 0.0)
+    flat = ids.reshape(-1)
+    k = et.shape[1]
+    snew = jnp.zeros((v, k)).at[flat].add(
+        (cnts[:, :, None] * pi).reshape(-1, k))
+    return pi, snew
+
+
+@pytest.mark.parametrize("b,l,block_b", [
+    (64, 32, 16),    # nb = 4: the multi-partial reduction path
+    (32, 512, 32),   # VMEM guard halves block_b (32 → 4 at L=512, K=128)
+])
+def test_memo_delta_multi_tile_partials(b, l, block_b, rng):
+    """The (nb, V, K) partial scheme must match the jnp scatter with nb ≥ 2
+    B-tiles and when the VMEM guard shrinks the tile — shapes at which the
+    old cross-tile output accumulation (TPU-undefined) was actually
+    exercised; nb = 1 degenerates to a single block and cannot catch it."""
+    v, k = 700, 128
+    ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+    cnts = jnp.asarray(rng.poisson(1.0, (b, l)).astype(np.float32))
+    ebt = jnp.asarray(rng.gamma(1.0, 1.0, (b, l, k)).astype(np.float32))
+    et = jnp.asarray(rng.gamma(1.0, 1.0, (b, k)).astype(np.float32))
+    opi = jnp.asarray(rng.random((b, l, k)).astype(np.float32))
+    assert b // lda_estep.delta_effective_block_b(
+        b, l, k, block_b=block_b) >= 2          # the shapes must fan out
+    pi, snew, sold = lda_estep.memo_delta(ids, cnts, ebt, et, v,
+                                          old_pi=opi, block_b=block_b)
+    pref, sref = _memo_delta_refs(ids, cnts, ebt, et, v)
+    soldref = jnp.zeros((v, k)).at[ids.reshape(-1)].add(
+        (cnts[:, :, None] * opi).reshape(-1, k))
+    np.testing.assert_allclose(pi, pref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(snew, sref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sold, soldref, rtol=1e-4, atol=1e-4)
+
+
+def test_delta_effective_block_b_guard():
+    """The VMEM guard halves the B-tile for long token axes and always
+    returns a divisor of B."""
+    f = lda_estep.delta_effective_block_b
+    assert f(128, 64, 128) == 32           # fits at the default
+    assert f(128, 128, 128) == 16          # production L halves once
+    assert f(128, 512, 128) == 4
+    assert f(12, 40, 16) == 12             # small batch: capped at B
+    for b, l in [(96, 512), (32, 1024), (12, 512)]:
+        bb = f(b, l, 128)
+        assert b % bb == 0, (b, l, bb)
+
+
 def test_kernel_padding_exactness():
     """Padded vocab/topic/batch slots must not leak into real outputs."""
     rng = np.random.default_rng(1)

@@ -13,36 +13,30 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import LDAConfig, LDAEngine
-from repro.data import PAPER_CORPORA, make_corpus
+from benchmarks.common import make_lda
 
 
 def run(corpus_name: str = "small", epochs: int = 6, batch: int = 32,
         seed: int = 0) -> Dict[str, Dict[str, List[float]]]:
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=seed)
-    test = make_corpus(spec, split="test", seed=seed)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=60)
     curves: Dict[str, Dict[str, List[float]]] = {}
     for algo in ("mvi", "svi", "ivi", "sivi"):
-        eng = LDAEngine(cfg, train, algo=algo, batch_size=batch, seed=seed,
-                        test_corpus=test)
-        eng.evaluate()
-        n_units = epochs if algo == "mvi" else epochs * max(
-            train.num_docs // batch, 1)
-        for step in range(n_units):
-            if algo == "mvi":
-                eng.run_epoch()
-                eng.evaluate()
-            else:
-                eng.run_minibatch()
+        lda, train, _ = make_lda(corpus_name, algo=algo, batch=batch,
+                                 seed=seed)
+        lda.evaluate()
+        if algo == "mvi":
+            for _ in range(epochs):
+                lda.fit(epochs=1)
+                lda.evaluate()
+        else:
+            n_units = epochs * max(train.num_docs // batch, 1)
+            for step in range(n_units):
+                lda.partial_fit(steps=1)
                 if step % 4 == 0:
-                    eng.evaluate()
-        eng.evaluate()
-        curves[algo] = {"docs": list(map(float, eng.history.docs_seen)),
-                        "lpp": eng.history.lpp,
-                        "wall": eng.history.wall}
+                    lda.evaluate()
+        lda.evaluate()
+        curves[algo] = {"docs": list(map(float, lda.history.docs_seen)),
+                        "lpp": lda.history.lpp,
+                        "wall": lda.history.wall}
     return curves
 
 
@@ -82,14 +76,9 @@ def rows(corpus_name: str = "small", epochs: int = 4):
                 " ".join(f"{a}={final[a]:.4f}"
                          for a in ("mvi", "svi", "ivi", "sivi"))))
     # CVB0 baseline (paper §5's de-facto standard for moderate corpora)
-    from repro.core import CVB0Engine, LDAConfig, log_predictive, \
-        split_heldout
-    from repro.data import PAPER_CORPORA, make_corpus
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=0)
-    test = make_corpus(spec, split="test", seed=0)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=60)
+    from benchmarks.common import paper_setup
+    from repro.core import CVB0Engine, log_predictive, split_heldout
+    _, train, test, cfg = paper_setup(corpus_name, seed=0)
     obs, held = split_heldout(test, seed=0)
     cvb = CVB0Engine(cfg, train, batch_size=32, seed=0)
     for _ in range(epochs):

@@ -8,28 +8,21 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import LDAConfig, LDAEngine
-from repro.data import PAPER_CORPORA, make_corpus
+from benchmarks.common import make_lda
 
 
 def run(corpus_name: str = "small", sizes=(8, 32, 128), budget_docs=3000,
         seed: int = 0) -> Dict[int, List[float]]:
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=seed)
-    test = make_corpus(spec, split="test", seed=seed)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=60)
     curves = {}
     for bs in sizes:
-        eng = LDAEngine(cfg, train, algo="ivi", batch_size=bs, seed=seed,
-                        test_corpus=test)
-        while eng.docs_seen < budget_docs:
-            eng.run_minibatch()
-            if (eng.docs_seen // bs) % 4 == 0:
-                eng.evaluate()
-        eng.evaluate()
-        curves[bs] = {"docs": list(map(float, eng.history.docs_seen)),
-                      "lpp": eng.history.lpp}
+        lda, _, _ = make_lda(corpus_name, algo="ivi", batch=bs, seed=seed)
+        while lda.docs_seen < budget_docs:
+            lda.partial_fit(steps=1)
+            if (lda.docs_seen // bs) % 4 == 0:
+                lda.evaluate()
+        lda.evaluate()
+        curves[bs] = {"docs": list(map(float, lda.history.docs_seen)),
+                      "lpp": lda.history.lpp}
     return curves
 
 

@@ -10,32 +10,24 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import LDAConfig, log_predictive, split_heldout
-from repro.data import PAPER_CORPORA, make_corpus
-from repro.dist import DIVIConfig, DIVIEngine
+from benchmarks.common import make_lda
+from repro.dist import DIVIConfig
 
 
 def run(corpus_name: str = "small", rounds: int = 24, seed: int = 0) -> Dict:
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=seed)
-    test = make_corpus(spec, split="test", seed=seed)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=40)
-    obs, held = split_heldout(test, seed=seed)
     # (delay_prob, staleness) ladders emulate the paper's μ ∈ {2×, 5×, 10×}
     settings = {"none": (0.0, 1), "mu2x": (0.25, 1), "mu5x": (0.25, 3),
                 "mu10x": (0.5, 5)}
     out = {}
     for name, (dp, st) in settings.items():
-        eng = DIVIEngine(cfg, DIVIConfig(num_workers=4, batch_size=16,
-                                         delay_prob=dp, staleness=st),
-                         train, seed=seed)
-        lpps = [float(log_predictive(cfg, eng.lam, obs, held))]
-        for _ in range(rounds):
-            eng.run_round()
-        lpps.append(float(log_predictive(cfg, eng.lam, obs, held)))
-        out[name] = {"first": lpps[0], "last": lpps[-1],
-                     "docs_seen": eng.docs_seen}
+        lda, _, test = make_lda(
+            corpus_name, algo="divi", seed=seed, estep_iters=40,
+            distributed=DIVIConfig(num_workers=4, batch_size=16,
+                                   delay_prob=dp, staleness=st))
+        first = lda.score(test)
+        lda.fit(rounds=rounds)
+        out[name] = {"first": first, "last": lda.score(test),
+                     "docs_seen": lda.docs_seen}
     return out
 
 

@@ -16,11 +16,7 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-import numpy as np
-
-from repro.core import LDAConfig, log_predictive, split_heldout
-from repro.data import PAPER_CORPORA, make_corpus
-from repro.dist import DIVIConfig, DIVIEngine
+from repro.dist import DIVIConfig
 
 # modelled interconnect for the simulated cluster (32-core host in the
 # paper; we keep their relative orders of magnitude)
@@ -30,25 +26,21 @@ COMM_LAT = 2e-3        # per-round latency (s)
 
 def run(corpus_name: str = "small", procs=(1, 2, 4, 8), batches=(16, 64),
         rounds_per_p: int = 64, seed: int = 0) -> Dict:
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=seed)
-    test = make_corpus(spec, split="test", seed=seed)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=40)
-    obs, held = split_heldout(test, seed=seed)
+    from benchmarks.common import paper_setup
+    from repro.lda import LDA
+    _, train, test, cfg = paper_setup(corpus_name, estep_iters=40, seed=seed)
     results = {}
     for bs in batches:
         for p in procs:
             if train.num_docs // p < bs:
                 continue
-            eng = DIVIEngine(cfg, DIVIConfig(num_workers=p, batch_size=bs),
-                             train, seed=seed)
+            lda = LDA(cfg, algo="divi", seed=seed,
+                      distributed=DIVIConfig(num_workers=p, batch_size=bs))
             n_rounds = max(rounds_per_p // p, 4)
             t0 = time.perf_counter()
-            for _ in range(n_rounds):
-                eng.run_round()
+            lda.fit(train, rounds=n_rounds)
             wall = time.perf_counter() - t0
-            lpp = float(log_predictive(cfg, eng.lam, obs, held))
+            lpp = lda.score(test)
             # measured per-round compute on ONE worker's batch: the vmap
             # simulation executes all P workers serially on one core, so
             # the per-worker time is wall / (rounds · P)
@@ -73,23 +65,21 @@ def curves(corpus_name: str = "small", procs=(1, 4, 8), rounds: int = 24,
     Paper claim: more processors slow the per-document convergence *rate*
     (staler information per update) while each round covers P× documents.
     """
-    spec = PAPER_CORPORA[corpus_name]
-    train = make_corpus(spec, split="train", seed=seed)
-    test = make_corpus(spec, split="test", seed=seed)
-    cfg = LDAConfig(num_topics=min(100, spec.num_topics * 2),
-                    vocab_size=spec.vocab_size, estep_max_iters=40)
-    obs, held = split_heldout(test, seed=seed)
+    from benchmarks.common import paper_setup
+    from repro.lda import LDA
+    _, train, test, cfg = paper_setup(corpus_name, estep_iters=40, seed=seed)
     out = {}
     for p in procs:
         if train.num_docs // p < 16:
             continue
-        eng = DIVIEngine(cfg, DIVIConfig(num_workers=p, batch_size=16),
-                         train, seed=seed)
+        lda = LDA(cfg, algo="divi", seed=seed,
+                  distributed=DIVIConfig(num_workers=p, batch_size=16))
+        lda.partial_fit(train, steps=0)
         docs, lpps = [], []
         for _ in range(max(rounds // p, 3)):
-            eng.run_round()
-            docs.append(eng.docs_seen)
-            lpps.append(float(log_predictive(cfg, eng.lam, obs, held)))
+            lda.partial_fit(steps=1)
+            docs.append(lda.docs_seen)
+            lpps.append(lda.score(test))
         out[p] = {"docs": docs, "lpp": lpps}
     return out
 

@@ -1,48 +1,46 @@
 """End-to-end driver: asynchronous distributed IVI (D-IVI, paper §4).
 
 Simulates the paper's master/worker protocol exactly (vmap-bit-exact with
-the shard_map production path): P workers with stale parameters, dropped
-rounds, and the subtract-old/add-new corrections — then compares quality
-across P, reproducing the paper's central Table 2 claim: LPP is flat in P
-while throughput scales.
+the shard_map production path) through the ``repro.lda.LDA`` facade:
+P workers with stale parameters, dropped rounds, and the subtract-old/
+add-new corrections — then compares quality across P, reproducing the
+paper's central Table 2 claim: LPP is flat in P while throughput scales.
 
 Run:  PYTHONPATH=src python examples/distributed_lda.py
 """
 import time
 
-from repro.core import LDAConfig, log_predictive, split_heldout
 from repro.data import PAPER_CORPORA, make_corpus
-from repro.dist import DIVIConfig, DIVIEngine
+from repro.dist import DIVIConfig
+from repro.lda import LDA
 
 
 def main() -> None:
     spec = PAPER_CORPORA["small"]
     train = make_corpus(spec, split="train", seed=0)
     test = make_corpus(spec, split="test", seed=0)
-    cfg = LDAConfig(num_topics=50, vocab_size=spec.vocab_size,
-                    estep_max_iters=40)
-    obs, held = split_heldout(test, seed=0)
 
     total_rounds = 32
     print(f"{'P':>3} {'rounds':>7} {'docs':>7} {'LPP':>9} {'wall s':>8}")
     for p in (1, 2, 4, 8):
-        eng = DIVIEngine(cfg, DIVIConfig(num_workers=p, batch_size=16),
-                         train, seed=0)
+        lda = LDA(num_topics=50, vocab_size=spec.vocab_size,
+                  estep_max_iters=40, algo="divi",
+                  distributed=DIVIConfig(num_workers=p, batch_size=16),
+                  seed=0)
+        rounds = max(total_rounds // p, 2)
         t0 = time.perf_counter()
-        for _ in range(max(total_rounds // p, 2)):
-            eng.run_round()
+        lda.fit(train, rounds=rounds)
         wall = time.perf_counter() - t0
-        lpp = float(log_predictive(cfg, eng.lam, obs, held))
-        print(f"{p:>3} {max(total_rounds // p, 2):>7} {eng.docs_seen:>7} "
-              f"{lpp:>9.4f} {wall:>8.2f}")
+        print(f"{p:>3} {rounds:>7} {lda.docs_seen:>7} "
+              f"{lda.score(test):>9.4f} {wall:>8.2f}")
 
     print("\nWith 50% dropped rounds (paper Fig. 5):")
-    eng = DIVIEngine(cfg, DIVIConfig(num_workers=4, batch_size=16,
-                                     delay_prob=0.5), train, seed=0)
-    for _ in range(16):
-        eng.run_round()
-    print("LPP:", float(log_predictive(cfg, eng.lam, obs, held)),
-          "(still converges)")
+    lda = LDA(num_topics=50, vocab_size=spec.vocab_size, estep_max_iters=40,
+              algo="divi",
+              distributed=DIVIConfig(num_workers=4, batch_size=16,
+                                     delay_prob=0.5), seed=0)
+    lda.fit(train, rounds=16)
+    print("LPP:", lda.score(test), "(still converges)")
 
 
 if __name__ == "__main__":

@@ -1,46 +1,57 @@
 """Quickstart: incremental variational inference for LDA in ~40 lines.
 
-Trains IVI on a synthetic paper-shaped corpus, shows the monotone bound and
-held-out predictive likelihood, and contrasts with SVI.
+Trains IVI through the ``repro.lda.LDA`` facade on a synthetic
+paper-shaped corpus, shows the monotone bound and held-out predictive
+likelihood, contrasts with SVI, and round-trips a checkpoint.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--corpus tiny|small]
 """
-from repro.core import LDAConfig, LDAEngine
+import argparse
+
 from repro.data import PAPER_CORPORA, make_corpus
+from repro.lda import LDA
 
 
 def main() -> None:
-    spec = PAPER_CORPORA["small"]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", default="small", choices=sorted(PAPER_CORPORA),
+                    help="tiny is the CI smoke size")
+    args = ap.parse_args()
+    spec = PAPER_CORPORA[args.corpus]
     train = make_corpus(spec, split="train", seed=0)
     test = make_corpus(spec, split="test", seed=0)
-    cfg = LDAConfig(num_topics=50, vocab_size=spec.vocab_size)
+    topics = min(50, spec.vocab_size // 4)
 
     print("== IVI (the paper's algorithm: no learning rate) ==")
-    ivi = LDAEngine(cfg, train, algo="ivi", batch_size=32, seed=0,
-                    test_corpus=test)
-    ivi.run_epoch()          # first pass retires the random-init mass
+    ivi = LDA(num_topics=topics, vocab_size=spec.vocab_size, algo="ivi",
+              batch_size=32, seed=0)
+    ivi.fit(train, test_corpus=test)   # first pass retires random-init mass
     print(f"after 1 epoch: lpp={ivi.evaluate()['lpp']:.4f}")
-    prev = ivi.full_bound()
-    for i in range(10):
-        ivi.run_minibatch()
-        cur = ivi.full_bound()
+    prev = ivi.bound()
+    for _ in range(10):
+        ivi.partial_fit(steps=1)
+        cur = ivi.bound()
         assert cur >= prev - 1e-2, "IVI must increase the bound monotonically"
         prev = cur
     print(f"10 incremental updates, bound increased monotonically "
           f"to {prev:.1f}")
-    for _ in range(3):
-        ivi.run_epoch()
+    ivi.fit(epochs=3)
     print(f"final: lpp={ivi.evaluate()['lpp']:.4f}")
 
     print("\n== SVI baseline (needs a learning rate; no monotonicity) ==")
-    svi = LDAEngine(cfg, train, algo="svi", batch_size=32, seed=0,
-                    test_corpus=test)
-    for _ in range(4):
-        svi.run_epoch()
+    svi = LDA(num_topics=topics, vocab_size=spec.vocab_size, algo="svi",
+              batch_size=32, seed=0)
+    svi.fit(train, epochs=4, test_corpus=test)
     print(f"final: lpp={svi.evaluate()['lpp']:.4f}")
     print(f"\nIVI {ivi.history.lpp[-1]:.4f} vs SVI {svi.history.lpp[-1]:.4f} "
           f"(paper Fig. 1; see EXPERIMENTS.md §Paper-validation for the "
           f"synthetic-corpus caveat)")
+
+    print("\n== save → load → serve ==")
+    ivi.save("/tmp/lda_quickstart_ckpt")
+    theta = LDA.load("/tmp/lda_quickstart_ckpt").transform(test)
+    print(f"topic posterior for {theta.shape[0]} unseen docs, "
+          f"K={theta.shape[1]} (resume with LDA.load(...).resume(train))")
 
 
 if __name__ == "__main__":

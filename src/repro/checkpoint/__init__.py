@@ -1,1 +1,3 @@
 from repro.checkpoint.io import save_checkpoint, restore_checkpoint
+from repro.checkpoint.manifest import (MANIFEST_VERSION, is_manifest_checkpoint,
+                                       load_manifest, save_manifest)

@@ -321,17 +321,28 @@ class LDAEngine:
         self.rng.shuffle(out)
         return out
 
+    def epoch_batches(self) -> List[tuple[np.ndarray, Optional[int]]]:
+        """Draw one epoch's mini-batches: (rows, width|None) pairs.
+
+        This is the exact sequence (and the exact rng consumption)
+        ``run_epoch`` processes — exposed so external drivers (the
+        ``repro.lda`` Trainer) can step batch-by-batch, persist the
+        not-yet-visited remainder mid-epoch, and still be bit-equal to an
+        uninterrupted ``run_epoch`` loop.
+        """
+        if self.algo == "mvi":
+            raise ValueError("mvi is full-batch: use run_epoch")
+        if self._buckets is not None:
+            return self._bucketed_epoch_order()
+        return [(rows, None) for rows in self._epoch_order()]
+
     # -- steps -------------------------------------------------------------
     def run_epoch(self) -> None:
         if self.algo == "mvi":
             self._run_mvi_epoch()
             return
-        if self._buckets is not None:
-            for rows, width in self._bucketed_epoch_order():
-                self.run_minibatch(rows, width=width)
-            return
-        for rows in self._epoch_order():
-            self.run_minibatch(rows)
+        for rows, width in self.epoch_batches():
+            self.run_minibatch(rows, width=width)
 
     def _run_mvi_epoch(self) -> None:
         d = self.corpus.num_docs
@@ -374,12 +385,24 @@ class LDAEngine:
 
     # -- evaluation --------------------------------------------------------
     def evaluate(self) -> Dict[str, float]:
+        """Periodic evaluation snapshot.
+
+        With a test corpus: held-out LPP (the paper's §6 metric). Without
+        one: the corpus bound (for the incremental engines the *memoized*
+        ELBO — the monotone objective — read through the store). Each
+        metric is appended to its own ``History`` column only when actually
+        computed; ``lpp`` used to be padded with ``nan`` rows whenever no
+        test corpus was set, which poisoned any downstream min/mean.
+        """
         out: Dict[str, float] = {}
         if self._obs is not None:
             out["lpp"] = float(log_predictive(self.cfg, self.state.lam,
                                               self._obs, self._held))
+            self.history.lpp.append(out["lpp"])
+        else:
+            out["elbo"] = self.full_bound()
+            self.history.elbo.append(out["elbo"])
         self.history.docs_seen.append(self.docs_seen)
-        self.history.lpp.append(out.get("lpp", float("nan")))
         self.history.wall.append(time.perf_counter() - self._t0)
         return out
 

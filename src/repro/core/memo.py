@@ -112,6 +112,22 @@ class MemoStore:
     def footprint_bytes(self) -> int:
         raise NotImplementedError
 
+    # -- durable state (repro.checkpoint.manifest) ----------------------
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """The store's full durable state as flat {key: host array}.
+
+        Arrays are returned in the store's OWN storage dtype (bf16 chunks
+        stay bf16) so a manifest checkpoint round-trips the memo
+        bit-identically — the wire-dtype invariant ⟨m_vk⟩ == Σ scatter(π)
+        survives save/restore only if no re-rounding happens here.
+        """
+        raise NotImplementedError
+
+    def load_state_dict(self, state: Dict[str, np.ndarray]) -> "MemoStore":
+        """Restore from ``state_dict`` output. Returns the live handle
+        (same consumed-handle contract as ``update``)."""
+        raise NotImplementedError
+
     def iter_chunks(self, batch_docs: int = 512
                     ) -> Iterator[Tuple[np.ndarray, jax.Array, jax.Array]]:
         """Yield (doc_idx, π, visited) over the corpus — the read-through
@@ -191,6 +207,19 @@ class DenseMemoStore(MemoStore):
     def footprint_bytes(self) -> int:
         return self.pi.size * 4 + self.visited.size
 
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        return {"pi": np.asarray(self.pi),
+                "visited": np.asarray(self.visited)}
+
+    def load_state_dict(self, state) -> "DenseMemoStore":
+        pi = np.asarray(state["pi"])
+        if pi.shape != self.pi.shape:
+            raise ValueError(f"memo: checkpoint shape {pi.shape} != store "
+                             f"{self.pi.shape} — the checkpoint belongs to "
+                             "a different corpus/config")
+        return DenseMemoStore(pi=jnp.asarray(pi, jnp.float32),
+                              visited=jnp.asarray(state["visited"], bool))
+
 
 # ---------------------------------------------------------------------------
 # bf16 chunked host store
@@ -243,6 +272,22 @@ class ChunkedMemoStore(MemoStore):
 
     def footprint_bytes(self) -> int:
         return sum(ch.nbytes for ch in self._chunks) + self._visited.nbytes
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {"visited": self._visited}
+        for c, chunk in enumerate(self._chunks):
+            out[f"chunk_{c:05d}"] = chunk       # bf16 as stored, no rounding
+        return out
+
+    def load_state_dict(self, state) -> "ChunkedMemoStore":
+        for c in range(len(self._chunks)):
+            chunk = np.asarray(state[f"chunk_{c:05d}"])
+            if chunk.shape != self._chunks[c].shape:
+                raise ValueError(f"memo chunk {c}: checkpoint shape "
+                                 f"{chunk.shape} != store {self._chunks[c].shape}")
+            self._chunks[c] = chunk.astype(_BF16, copy=False)
+        self._visited[:] = np.asarray(state["visited"], bool)
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +366,21 @@ class GammaMemoStore(MemoStore):
     def footprint_bytes(self) -> int:
         return (self._gamma.nbytes + self._visited.nbytes
                 + sum(s.nbytes for s in self._snap.values()))
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {"gamma": self._gamma,
+                                      "visited": self._visited}
+        for c, snap in self._snap.items():
+            out[f"snap_{c:05d}"] = snap         # the λ-epoch bf16 snapshots
+        return out
+
+    def load_state_dict(self, state) -> "GammaMemoStore":
+        self._gamma[:] = np.asarray(state["gamma"], np.float32)
+        self._visited[:] = np.asarray(state["visited"], bool)
+        self._snap = {int(k[len("snap_"):]): np.asarray(v).astype(_BF16,
+                                                                  copy=False)
+                      for k, v in state.items() if k.startswith("snap_")}
+        return self
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Dry-run of the paper's own workload at the Arxiv corpus scale of
 Table 1 (V=141,927; K=100 padded to 128; 782k documents).
 
-Two modes:
+Three modes:
 
 * ``divi`` — one D-IVI global round on the production mesh: λ / ⟨m_vk⟩
   model-sharded on V (DESIGN.md §5); per-worker corpus shards and memo
@@ -17,8 +17,11 @@ Two modes:
   full Arxiv memo under the 40 GB single-host budget. Also reports the
   kernel-launch structure (one fused ``pallas_call`` per fixed point, none
   under a loop — docs/estep.md).
+* ``serve`` — the ``LDA.transform`` serving step (`repro.lda.infer`)
+  lowered per bucket width at Arxiv V with the fused backend: the
+  per-width jit cache the `launch/serve_lda.py` request loop runs on.
 
-Usage: python -m repro.launch.dryrun_lda [--mode divi|ivi|all]
+Usage: python -m repro.launch.dryrun_lda [--mode divi|ivi|serve|all]
        [--mesh single|multi|both] [--batch 1024] [--staleness 1]
        [--out results/lda.jsonl]
 """
@@ -166,7 +169,8 @@ def run_ivi(batch: int, estep_iters: int = 50):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="all", choices=["divi", "ivi", "all"])
+    ap.add_argument("--mode", default="all",
+                    choices=["divi", "ivi", "serve", "all"])
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--batch", type=int, default=1024)
@@ -201,6 +205,17 @@ def main():
                   f"(<40GB: {res['memo_under_40gb']})")
         else:
             print(f"[FAIL] lda-ivi: {res['error'][:200]}")
+        results.append(res)
+    if args.mode in ("serve", "all"):
+        from repro.launch.serve_lda import run_serve_dryrun
+        res = run_serve_dryrun(batch=min(args.batch, 256))
+        if res["ok"]:
+            worst = max(m["temp_gb"] for m in res["memory"].values())
+            print(f"[OK ] lda-serve single-host  compile={res['compile_s']}s "
+                  f"widths={res['widths']} max_temp={worst:.2f}GB "
+                  f"jit_entries={res['jit_cache_entries']}")
+        else:
+            print(f"[FAIL] lda-serve: {res['error'][:200]}")
         results.append(res)
     if args.out:
         with open(args.out, "a") as f:

@@ -1,0 +1,172 @@
+"""LDA serving launcher: batched topic-posterior requests, latency report.
+
+Serves ``LDA.transform``-style traffic through `repro.lda.infer`: each
+request is a batch of unseen documents; the server groups them into length
+buckets, pads to one fixed batch size (one compiled executable per bucket
+width — the jit cache is enumerable, see the report) and runs the E-step
+through the configured backend (``pallas`` = the fused fixed-point kernel,
+the production path).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve_lda --corpus small \
+      --requests 64 --batch 32 --backend gather
+  PYTHONPATH=src python -m repro.launch.serve_lda --ckpt ckpts/run1 \
+      --backend pallas
+  # Arxiv-scale serving dry-run (lowering + memory, no weights needed):
+  PYTHONPATH=src python -m repro.launch.serve_lda --dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Arxiv (Table 1): V=141,927 padded /16, K=100 → 128 lanes.
+ARXIV = dict(vocab=141_952, topics=128)
+ARXIV_WIDTHS = (32, 64, 128)            # serving bucket widths at L=128
+
+
+def run_serve_dryrun(batch: int = 256, widths=ARXIV_WIDTHS,
+                     backend: str = "pallas") -> dict:
+    """Lower the per-bucket serving step at Arxiv scale, per width.
+
+    No weights are materialised (ShapeDtypeStructs only): this checks the
+    serving program compiles at the production shape and reports its
+    device-memory needs — the serving analogue of ``dryrun_lda --mode ivi``.
+    """
+    from repro.core.types import LDAConfig
+    from repro.lda.infer import _posterior_batch
+
+    v, k = ARXIV["vocab"], ARXIV["topics"]
+    cfg = LDAConfig(num_topics=k, vocab_size=v, estep_max_iters=50,
+                    estep_backend=backend, estep_stream_dtype="bfloat16")
+    out = {"arch": "lda-serve-arxiv", "mode": "serve", "backend": backend,
+           "shape": f"b{batch}", "widths": list(widths)}
+    t0 = time.time()
+    try:
+        sds = jax.ShapeDtypeStruct
+        per_width = {}
+        for w in widths:
+            lowered = _posterior_batch.lower(
+                cfg, sds((v, k), jnp.float32),
+                sds((batch, w), jnp.int32), sds((batch, w), jnp.float32))
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            per_width[w] = {
+                "temp_gb": mem.temp_size_in_bytes / 1e9,
+                "argument_gb": mem.argument_size_in_bytes / 1e9,
+            }
+        out["compile_s"] = round(time.time() - t0, 1)
+        out["memory"] = per_width
+        out["jit_cache_entries"] = len(widths)
+        out["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        out["ok"] = False
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-1500:]
+    return out
+
+
+def _percentiles(xs, ps=(50, 95, 99)):
+    xs = np.asarray(xs)
+    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default=None,
+                    help="LDA checkpoint (manifest dir or legacy .npz); "
+                         "omit to train a quick model on --corpus")
+    ap.add_argument("--corpus", default="small")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--topics", type=int, default=50)
+    ap.add_argument("--estep-iters", type=int, default=50)
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "gather", "dense", "pallas"],
+                    help="serving E-step backend (default: the config's)")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="request batch size (also the jit pad width)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--warm-epochs", type=int, default=1,
+                    help="quick-train epochs when no --ckpt is given")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="Arxiv-scale serving lowering, no weights")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.dryrun:
+        res = run_serve_dryrun(batch=args.batch,
+                               backend=args.backend or "pallas")
+        if res["ok"]:
+            worst = max(m["temp_gb"] for m in res["memory"].values())
+            print(f"[OK ] lda-serve arxiv  compile={res['compile_s']}s "
+                  f"widths={res['widths']} max_temp={worst:.2f}GB "
+                  f"jit_entries={res['jit_cache_entries']}")
+        else:
+            print(f"[FAIL] lda-serve: {res['error'][:200]}")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+        return
+
+    from repro.data import PAPER_CORPORA, make_corpus
+    from repro.lda import LDA
+
+    spec = PAPER_CORPORA[args.corpus]
+    test = make_corpus(spec, split="test", seed=args.seed, scale=args.scale)
+    if args.ckpt:
+        lda = LDA.load(args.ckpt)
+        print(f"topics from {args.ckpt}: V={lda.cfg.vocab_size} "
+              f"K={lda.cfg.num_topics}")
+    else:
+        train = make_corpus(spec, split="train", seed=args.seed,
+                            scale=args.scale)
+        lda = LDA(num_topics=args.topics, vocab_size=spec.vocab_size,
+                  estep_max_iters=args.estep_iters, algo="ivi",
+                  seed=args.seed)
+        lda.fit(train, epochs=args.warm_epochs)
+        print(f"quick-trained ivi on {args.corpus}: "
+              f"{args.warm_epochs} epoch(s), docs_seen={lda.docs_seen}")
+
+    inf = lda.inferencer(backend=args.backend, batch_size=args.batch)
+    rng = np.random.default_rng(args.seed)
+
+    # warmup: serve the whole test corpus once — every bucket width
+    # compiles here, so the timed loop measures steady-state latency
+    inf.posterior(test)
+
+    lat = []
+    t0 = time.perf_counter()
+    for _ in range(args.requests):
+        rows = rng.choice(test.num_docs, size=args.batch, replace=False)
+        t1 = time.perf_counter()
+        gamma = inf.posterior(test.take(jnp.asarray(rows)))
+        lat.append((time.perf_counter() - t1) * 1e3)
+        assert gamma.shape == (args.batch, lda.cfg.num_topics)
+    wall = time.perf_counter() - t0
+
+    pct = _percentiles(lat)
+    docs = args.requests * args.batch
+    print(f"served {args.requests} requests × {args.batch} docs "
+          f"backend={inf.cfg.estep_backend}: {docs / wall:.1f} docs/s")
+    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+          f"p99={pct['p99']:.1f} max={max(lat):.1f}")
+    print(f"jit cache: {len(inf.cache_info())} widths "
+          f"{sorted(inf.cache_info())}")
+    if args.out:
+        rec = {"mode": "serve", "backend": inf.cfg.estep_backend,
+               "batch": args.batch, "requests": args.requests,
+               "docs_per_s": docs / wall, "latency_ms": pct,
+               "jit_widths": sorted(inf.cache_info()), "ok": True}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,10 +24,21 @@ import numpy as np
 
 
 def main_lda(args) -> None:
-    from repro.checkpoint import save_checkpoint
-    from repro.core import LDAConfig, LDAEngine, log_predictive, split_heldout
+    """LDA training through the ``repro.lda.LDA`` facade.
+
+    The historical flags are thin aliases onto facade kwargs (``--algo
+    divi`` ≡ ``distributed=DIVIConfig(...)``, ``--memo-store`` ≡
+    ``memo_store=``, …); ``--ckpt`` now writes a versioned manifest
+    directory carrying the FULL incremental state (λ-state, memo, rng,
+    epoch remainder — `repro.lda.ckpt`), and ``--resume`` continues such a
+    run bit-equally. The old ``save_checkpoint(eng.state)`` flat-npz files
+    load too, but serve-only (DeprecationWarning: their memo was dropped
+    on save, so an IVI/S-IVI run cannot actually continue from them).
+    """
+    from repro.core import LDAConfig
     from repro.data import PAPER_CORPORA, make_corpus
-    from repro.dist import DIVIConfig, DIVIEngine
+    from repro.dist import DIVIConfig
+    from repro.lda import LDA
 
     spec = PAPER_CORPORA[args.corpus]
     train = make_corpus(spec, split="train", seed=args.seed,
@@ -39,39 +50,39 @@ def main_lda(args) -> None:
     print(f"corpus={args.corpus} docs={train.num_docs} "
           f"words={float(train.num_words):.0f} K={args.topics}")
 
-    if args.algo == "divi":
-        obs, held = split_heldout(test, seed=args.seed)
-        eng = DIVIEngine(cfg, DIVIConfig(num_workers=args.workers,
+    if args.resume:
+        lda = LDA.load(args.resume).resume(train, test_corpus=test)
+        print(f"resumed {args.resume}: algo={lda.algo} "
+              f"docs_seen={lda.docs_seen}")
+    elif args.algo == "divi":
+        lda = LDA(cfg, algo="divi",
+                  distributed=DIVIConfig(num_workers=args.workers,
                                          batch_size=args.batch,
                                          staleness=args.staleness,
                                          delay_prob=args.delay_prob),
-                         train, seed=args.seed)
-        for r in range(args.rounds):
-            eng.run_round()
-            if (r + 1) % args.eval_every == 0:
-                lpp = float(log_predictive(cfg, eng.lam, obs, held))
-                print(f"round={r + 1} docs={eng.docs_seen} lpp={lpp:.4f}")
-        if args.ckpt:
-            save_checkpoint(args.ckpt, eng.state)
-            print("saved", args.ckpt)
-        return
+                  seed=args.seed)
+    else:
+        lda = LDA(cfg, algo=args.algo, batch_size=args.batch,
+                  seed=args.seed, memo_store=args.memo_store,
+                  chunk_docs=args.chunk_docs,
+                  bucket_by_length=args.bucketed)
 
-    eng = LDAEngine(cfg, train, algo=args.algo, batch_size=args.batch,
-                    seed=args.seed, test_corpus=test,
-                    memo_store=args.memo_store, chunk_docs=args.chunk_docs,
-                    bucket_by_length=args.bucketed)
-    if eng.memo is not None:
-        print(f"memo_store={args.memo_store} "
-              f"footprint={eng.memo.footprint_bytes() / 1e6:.2f}MB")
-    for e in range(args.epochs):
-        eng.run_epoch()
-        ev = eng.evaluate()
-        print(f"epoch={e + 1} docs={eng.docs_seen} lpp={ev['lpp']:.4f}")
-    if args.bound:
-        print("final exact bound:", eng.full_bound())
+    # bind the corpus without stepping so the memo footprint is reportable
+    lda.partial_fit(train, steps=0, test_corpus=test)
+    memo = (lda.trainer.eng.memo if lda.trainer.kind == "single" else None)
+    if memo is not None:
+        print(f"memo_store={memo.kind} "
+              f"footprint={memo.footprint_bytes() / 1e6:.2f}MB")
+
+    if lda.distributed is not None:
+        lda.fit(rounds=args.rounds, eval_every=args.eval_every,
+                verbose=True)
+    else:
+        lda.fit(epochs=args.epochs, eval_every=1, verbose=True)
+        if args.bound:
+            print("final exact bound:", lda.bound())
     if args.ckpt:
-        save_checkpoint(args.ckpt, eng.state)
-        print("saved", args.ckpt)
+        print("saved", lda.save(args.ckpt))
 
 
 def main_lm(args) -> None:
@@ -172,7 +183,13 @@ def main() -> None:
     lda.add_argument("--eval-every", type=int, default=5)
     lda.add_argument("--bound", action="store_true")
     lda.add_argument("--seed", type=int, default=0)
-    lda.add_argument("--ckpt", default=None)
+    lda.add_argument("--ckpt", default=None,
+                     help="save a manifest checkpoint directory here "
+                          "(full incremental state; repro.lda.ckpt)")
+    lda.add_argument("--resume", default=None,
+                     help="resume from a --ckpt manifest (bit-equal "
+                          "continuation); algo/store flags then come from "
+                          "the checkpoint")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

@@ -1,0 +1,32 @@
+"""``repro.lda`` — the public estimator API for the paper's system.
+
+One facade (``LDA``) for train / resume / serve over every engine the
+reproduction implements (MVI / SVI / IVI / S-IVI single host, D-IVI
+distributed), with durable incremental-state checkpoints. See
+``docs/api.md`` for the reference and the migration table from the raw
+``LDAEngine`` / ``DIVIEngine`` constructors (which remain available and
+unchanged under ``repro.core`` / ``repro.dist``).
+
+``__all__`` is the public surface and is guarded by
+``tests/test_lda_api.py::test_public_api_surface`` — additions are fine,
+removals and renames are breaking.
+"""
+from repro.lda.api import LDA
+from repro.lda.ckpt import (SCHEMA_VERSION, load_lda_checkpoint,
+                            save_lda_checkpoint)
+from repro.lda.infer import TopicInferencer, topic_posterior
+from repro.lda.trainer import (DIVITrainer, SingleHostTrainer, Trainer,
+                               make_trainer)
+
+__all__ = [
+    "LDA",
+    "Trainer",
+    "SingleHostTrainer",
+    "DIVITrainer",
+    "make_trainer",
+    "TopicInferencer",
+    "topic_posterior",
+    "save_lda_checkpoint",
+    "load_lda_checkpoint",
+    "SCHEMA_VERSION",
+]

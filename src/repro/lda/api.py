@@ -1,0 +1,306 @@
+"""``LDA`` — one estimator facade for train / resume / serve.
+
+The paper's selling points (no learning rate, monotone bound, resumable
+incremental state, the distributed variant) are all in the engines, but
+reaching them used to mean hand-wiring ``LDAEngine`` / ``DIVIEngine``,
+``MemoStore`` kinds, E-step backends and length buckets. The facade puts
+every knob on one constructor and makes the three lifecycle verbs
+first-class:
+
+    lda = LDA(num_topics=100, vocab_size=10_000, algo="ivi",
+              backend="pallas", memo_store="chunked", bucket_by_length=True)
+    lda.fit(train, epochs=5, test_corpus=test, eval_every=1)    # train
+    lda.save("ckpt/run1")
+    ...
+    lda = LDA.load("ckpt/run1").resume(train)                   # resume
+    lda.partial_fit(steps=2)        # bit-equal to never having stopped
+    theta = lda.transform(unseen)                               # serve
+
+Training is delegated to a ``Trainer`` (`repro.lda.trainer`) — the one
+contract over both engine families — so a facade run is bit-equal to
+driving the engines directly with the same seed. Serving goes through
+``repro.lda.infer`` (bucketed batching, per-width jit cache, fused Pallas
+E-step). Checkpoints are versioned manifests (`repro.lda.ckpt`) carrying
+the FULL incremental state, not just λ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.engines import History
+from repro.core.metrics import top_words as _top_words
+from repro.core.predictive import log_predictive, split_heldout
+from repro.core.types import Corpus, GlobalState, LDAConfig
+from repro.dist.protocol import DIVIConfig
+from repro.lda.infer import TopicInferencer
+from repro.lda.trainer import Trainer, make_trainer
+
+_ALGOS = ("mvi", "svi", "ivi", "sivi", "divi")
+
+
+class LDA:
+    """Latent Dirichlet Allocation estimator (see module docstring).
+
+    Args:
+      cfg: an ``LDAConfig``; alternatively pass its fields as keyword
+        arguments (``num_topics=…, vocab_size=…``) and leave ``cfg`` unset.
+      algo: ``"mvi" | "svi" | "ivi" | "sivi"`` — the update rule — or
+        ``"divi"``, shorthand for S-IVI under the distributed protocol
+        (equivalent to ``algo="sivi", distributed=DIVIConfig(...)``).
+      distributed: a ``DIVIConfig`` to train with the asynchronous
+        master/worker protocol (paper §4); None = single host.
+      backend: E-step backend override (``gather | dense | pallas``);
+        equivalent to setting ``cfg.estep_backend``.
+      memo_store / chunk_docs: π-memo representation for the incremental
+        engines (``dense | chunked | gamma`` — `repro.core.memo`).
+      bucket_by_length: length-bucketed epoch batching (`repro.data.bow`).
+      mesh / data_axes: optional production mesh for the distributed path.
+    """
+
+    def __init__(self, cfg: Optional[LDAConfig] = None, *,
+                 algo: str = "ivi",
+                 distributed: Optional[DIVIConfig] = None,
+                 batch_size: int = 64, seed: int = 0,
+                 memo_store: str = "dense", chunk_docs: int = 8192,
+                 bucket_by_length: bool = False,
+                 backend: Optional[str] = None,
+                 mesh=None, data_axes=None, **cfg_kwargs):
+        if cfg is None:
+            cfg = LDAConfig(**cfg_kwargs)
+        elif cfg_kwargs:
+            raise TypeError("pass either a full LDAConfig or LDAConfig "
+                            f"fields as kwargs, not both: {sorted(cfg_kwargs)}")
+        if backend is not None and backend != cfg.estep_backend:
+            cfg = dataclasses.replace(cfg, estep_backend=backend)
+        if algo not in _ALGOS:
+            raise ValueError(f"unknown algo {algo!r} (have {_ALGOS})")
+        if algo == "divi" and distributed is None:
+            distributed = DIVIConfig()
+        if distributed is not None and algo not in ("sivi", "divi"):
+            raise ValueError(
+                f"distributed training runs the S-IVI update (eq. 5) — "
+                f"algo={algo!r} is incompatible; use algo='sivi' or 'divi'")
+        self.cfg = cfg
+        self.algo = algo
+        self.distributed = distributed
+        self.batch_size = batch_size
+        self.seed = seed
+        self.memo_store = memo_store
+        self.chunk_docs = chunk_docs
+        self.bucket_by_length = bucket_by_length
+        self._mesh, self._data_axes = mesh, data_axes
+        self.trainer: Optional[Trainer] = None
+        self._corpus: Optional[Corpus] = None
+        # set by LDA.load(): a state view for serve-without-resume, plus
+        # the full trainer payload resume() restores; legacy bare-λ loads
+        # set _serve_only (no payload to resume, training refused)
+        self._state_view: Optional[GlobalState] = None
+        self._pending_restore = None
+        self._serve_only = False
+
+    # ------------------------------------------------------------------
+    # lifecycle: fit / partial_fit / resume
+    # ------------------------------------------------------------------
+
+    def _bind(self, corpus: Optional[Corpus],
+              test_corpus: Optional[Corpus] = None) -> Trainer:
+        if self._pending_restore is not None:
+            # loaded-but-not-resumed: building a fresh trainer here would
+            # silently discard the checkpoint and train from scratch
+            raise ValueError(
+                "this estimator holds an unrestored checkpoint — call "
+                "resume(corpus) to continue the checkpointed run (fit/"
+                "partial_fit on it would silently retrain from scratch)")
+        if self._serve_only:
+            # legacy bare-λ load: serve-only — training would throw the
+            # loaded topics away and start from the seed
+            raise ValueError(
+                "this estimator was loaded from a legacy bare-λ checkpoint "
+                "and is serve-only (transform/score/top_words); training "
+                "it would discard the loaded topics — build a fresh "
+                "LDA(...) instead")
+        if self.trainer is not None:
+            if corpus is not None and corpus is not self._corpus:
+                raise ValueError(
+                    "this estimator is already bound to a corpus; build a "
+                    "new LDA(...) to train on different data")
+            if test_corpus is not None:
+                self.trainer.set_test_corpus(test_corpus, seed=self.seed)
+            return self.trainer
+        if corpus is None:
+            raise ValueError("first fit/partial_fit call must pass a corpus"
+                             + (" (or call resume(corpus) on a loaded "
+                                "checkpoint)" if self._pending_restore
+                                else ""))
+        self.trainer = make_trainer(
+            self.cfg, corpus, algo=self.algo, distributed=self.distributed,
+            batch_size=self.batch_size, seed=self.seed,
+            test_corpus=test_corpus, memo_store=self.memo_store,
+            chunk_docs=self.chunk_docs,
+            bucket_by_length=self.bucket_by_length, mesh=self._mesh,
+            data_axes=self._data_axes)
+        self._corpus = corpus
+        return self.trainer
+
+    def fit(self, corpus: Optional[Corpus] = None, *, epochs: int = 1,
+            rounds: Optional[int] = None,
+            test_corpus: Optional[Corpus] = None, eval_every: int = 0,
+            verbose: bool = False) -> "LDA":
+        """Train: ``epochs`` full passes (single host) / ``rounds`` global
+        rounds (distributed; defaults to ``epochs`` if unset). Repeated
+        calls continue training the same bound corpus."""
+        tr = self._bind(corpus, test_corpus)
+        if rounds is not None and self.distributed is None:
+            raise ValueError("rounds= applies to distributed training; "
+                             "single-host engines take epochs=")
+        n = (rounds if rounds is not None else epochs) \
+            if self.distributed is not None else epochs
+        for i in range(n):
+            tr.run_pass()
+            if eval_every and (i + 1) % eval_every == 0:
+                ev = tr.evaluate()
+                if verbose:
+                    unit = "round" if self.distributed is not None else "epoch"
+                    metrics = " ".join(f"{k}={v:.4f}"
+                                       for k, v in sorted(ev.items()))
+                    print(f"{unit}={i + 1} docs={tr.docs_seen} {metrics}")
+        return self
+
+    def partial_fit(self, corpus: Optional[Corpus] = None, *,
+                    steps: int = 1,
+                    test_corpus: Optional[Corpus] = None) -> "LDA":
+        """Run ``steps`` smallest resumable units (mini-batches / rounds)."""
+        tr = self._bind(corpus, test_corpus)
+        for _ in range(steps):
+            tr.run_step()
+        return self
+
+    def resume(self, corpus: Corpus, *,
+               test_corpus: Optional[Corpus] = None, mesh=None,
+               data_axes=None) -> "LDA":
+        """Rebind the corpus and restore the checkpointed trainer state.
+
+        The corpus is data, not state — it is not persisted in the
+        checkpoint and must be supplied again. Everything else (λ-state,
+        memo, rng stream, mid-epoch remainder) comes from the manifest:
+        continuing is bit-equal to a run that never stopped.
+        """
+        if self._pending_restore is None:
+            raise ValueError(
+                "nothing to resume: this estimator was not produced by "
+                "LDA.load(), or resume() already ran (legacy bare-λ "
+                "checkpoints restore λ only and cannot resume — retrain "
+                "or re-save through LDA.save)")
+        if mesh is not None:
+            self._mesh, self._data_axes = mesh, data_axes
+        meta, arrays = self._pending_restore
+        self._pending_restore = None         # consume BEFORE _bind's guard
+        try:
+            tr = self._bind(corpus, test_corpus)
+            tr.restore(meta, arrays)
+        except Exception:
+            self._pending_restore = (meta, arrays)
+            raise
+        self._state_view = None
+        return self
+
+    # ------------------------------------------------------------------
+    # serve: transform / posterior / score
+    # ------------------------------------------------------------------
+
+    def inferencer(self, *, backend: Optional[str] = None,
+                   batch_size: int = 256) -> TopicInferencer:
+        """A reusable serving handle over the current topics (λ is
+        preprocessed once; one jit entry per bucket width)."""
+        return TopicInferencer(self.cfg, self.lam, backend=backend,
+                               batch_size=batch_size)
+
+    def transform(self, corpus: Corpus, *, backend: Optional[str] = None,
+                  batch_size: int = 256) -> np.ndarray:
+        """θ̄ (D, K): normalised topic posterior of (unseen) documents."""
+        return self.inferencer(backend=backend,
+                               batch_size=batch_size).transform(corpus)
+
+    def posterior(self, corpus: Corpus, *, backend: Optional[str] = None,
+                  batch_size: int = 256) -> np.ndarray:
+        """γ (D, K): unnormalised Dirichlet posterior parameters."""
+        return self.inferencer(backend=backend,
+                               batch_size=batch_size).posterior(corpus)
+
+    def score(self, corpus: Corpus, *, seed: Optional[int] = None) -> float:
+        """Held-out per-word log predictive probability (paper §6 metric):
+        fit θ on half of each document's words, score the other half."""
+        obs, held = split_heldout(corpus, seed=self.seed if seed is None
+                                  else seed)
+        return float(log_predictive(self.cfg, self.lam, obs, held))
+
+    def perplexity(self, corpus: Corpus, *,
+                   seed: Optional[int] = None) -> float:
+        """exp(−lpp) on held-out halves. Lower is better."""
+        return float(np.exp(-self.score(corpus, seed=seed)))
+
+    def top_words(self, k: int = 10) -> np.ndarray:
+        """(K, k) token ids of each topic's most probable words."""
+        return _top_words(self.lam, k)
+
+    def bound(self) -> float:
+        """Exact corpus ELBO (incremental engines: the memoized bound —
+        the objective IVI increases monotonically)."""
+        return self._require_trainer().full_bound()
+
+    def evaluate(self) -> Dict[str, float]:
+        """One History row: held-out LPP if a test corpus is bound, the
+        corpus bound otherwise."""
+        return self._require_trainer().evaluate()
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write a versioned manifest checkpoint of the FULL state."""
+        from repro.lda.ckpt import save_lda_checkpoint
+        return save_lda_checkpoint(path, self)
+
+    @classmethod
+    def load(cls, path: str) -> "LDA":
+        """Load a checkpoint. Serving (``transform`` / ``top_words`` /
+        ``score``) works immediately; call ``resume(corpus)`` before
+        continuing training."""
+        from repro.lda.ckpt import load_lda_checkpoint
+        return load_lda_checkpoint(path)
+
+    # ------------------------------------------------------------------
+    # views
+    # ------------------------------------------------------------------
+
+    def _require_trainer(self) -> Trainer:
+        if self.trainer is None:
+            raise ValueError("not fitted: call fit()/partial_fit() first"
+                             + (" or resume(corpus)"
+                                if self._pending_restore else ""))
+        return self.trainer
+
+    @property
+    def state(self) -> GlobalState:
+        if self.trainer is not None:
+            return self.trainer.state
+        if self._state_view is not None:
+            return self._state_view
+        raise ValueError("not fitted and no checkpoint state loaded")
+
+    @property
+    def lam(self) -> jax.Array:
+        return self.state.lam
+
+    @property
+    def docs_seen(self) -> int:
+        return self._require_trainer().docs_seen
+
+    @property
+    def history(self) -> History:
+        return self._require_trainer().history

@@ -1,0 +1,134 @@
+"""Durable LDA checkpoints: the facade schema over `repro.checkpoint.manifest`.
+
+A saved ``LDA`` is one manifest directory:
+
+    meta.constructor   — everything needed to rebuild the facade: the
+                         LDAConfig fields, algo, DIVIConfig (or null),
+                         batch size, seed, memo-store kind, bucketing;
+    meta.trainer       — the Trainer's runtime meta: rng bit-generator
+                         state, docs_seen, histories, pending-epoch widths;
+    state.npz          — λ, ⟨m_vk⟩, init_mass, init_frac, t;
+    memo.npz           — the MemoStore's chunks in their WIRE dtype (bf16
+                         chunks stay bf16; γ-only stores include their
+                         λ-epoch snapshots), or the D-IVI worker shards;
+    pending.npz / mvi.npz — mid-epoch batch remainder / MVI warm-start γ.
+
+``load_lda_checkpoint`` also accepts the legacy flat ``.npz`` that
+``train.py`` used to write via ``save_checkpoint(eng.state)``. Those
+checkpoints silently dropped the memo, rng and epoch bookkeeping — an
+IVI/S-IVI run restored from one cannot actually continue (the eq. 4
+subtract-old side is gone). Loading one emits a ``DeprecationWarning`` and
+returns a serve-only estimator: ``transform``/``top_words``/``score`` work,
+``resume`` refuses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manifest import (is_manifest_checkpoint, load_manifest,
+                                       save_manifest)
+from repro.core.types import GlobalState, LDAConfig
+from repro.dist.protocol import DIVIConfig
+
+SCHEMA_FORMAT = "repro.lda"
+SCHEMA_VERSION = 1
+
+
+def save_lda_checkpoint(path: str, lda) -> str:
+    """Persist the facade + its Trainer's full durable state at ``path``."""
+    trainer = lda._require_trainer()
+    trainer_meta, arrays = trainer.capture()
+    meta = {
+        "format": SCHEMA_FORMAT,
+        "schema_version": SCHEMA_VERSION,
+        "constructor": {
+            "cfg": dataclasses.asdict(lda.cfg),
+            "algo": lda.algo,
+            "distributed": (dataclasses.asdict(lda.distributed)
+                            if lda.distributed is not None else None),
+            "batch_size": lda.batch_size,
+            "seed": lda.seed,
+            "memo_store": lda.memo_store,
+            "chunk_docs": lda.chunk_docs,
+            "bucket_by_length": lda.bucket_by_length,
+        },
+        "trainer": trainer_meta,
+    }
+    return save_manifest(path, meta, arrays)
+
+
+def _state_view(arrays: dict) -> GlobalState:
+    st = arrays["state"]
+    return GlobalState(
+        lam=jnp.asarray(st["lam"], jnp.float32),
+        m_vk=jnp.asarray(st["m_vk"], jnp.float32),
+        init_mass=jnp.asarray(st["init_mass"], jnp.float32),
+        init_frac=jnp.asarray(st["init_frac"], jnp.float32),
+        t=jnp.asarray(st["t"], jnp.int32))
+
+
+def load_lda_checkpoint(path: str):
+    """Load a manifest checkpoint (or a legacy bare-λ ``.npz``) → ``LDA``."""
+    from repro.lda.api import LDA
+
+    if not is_manifest_checkpoint(path):
+        return _load_legacy(path)
+    meta, arrays = load_manifest(path)
+    if meta.get("format") != SCHEMA_FORMAT:
+        raise ValueError(f"{path!r} is a manifest checkpoint but not an LDA "
+                         f"one (format={meta.get('format')!r})")
+    if meta.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(f"unsupported LDA checkpoint schema "
+                         f"{meta.get('schema_version')!r}")
+    ctor = meta["constructor"]
+    dist = (DIVIConfig(**ctor["distributed"])
+            if ctor["distributed"] is not None else None)
+    lda = LDA(LDAConfig(**ctor["cfg"]), algo=ctor["algo"], distributed=dist,
+              batch_size=ctor["batch_size"], seed=ctor["seed"],
+              memo_store=ctor["memo_store"], chunk_docs=ctor["chunk_docs"],
+              bucket_by_length=ctor["bucket_by_length"])
+    lda._state_view = _state_view(arrays)
+    lda._pending_restore = (meta["trainer"], arrays)
+    return lda
+
+
+def _load_legacy(path: str):
+    """Legacy flat-npz (``save_checkpoint(eng.state)``) → serve-only LDA."""
+    from repro.lda.api import LDA
+
+    npz = path if path.endswith(".npz") else path + ".npz"
+    if not os.path.isfile(npz):
+        raise FileNotFoundError(
+            f"{path!r} is neither a manifest checkpoint directory nor a "
+            "legacy .npz state file")
+    warnings.warn(
+        f"{path!r} is a legacy bare-λ checkpoint (train.py used to save "
+        "eng.state only). It carries none of the incremental state — no "
+        "memo, no rng, no epoch remainder — so training CANNOT resume from "
+        "it; the estimator is serve-only. Re-save through LDA.save() for a "
+        "resumable manifest checkpoint.", DeprecationWarning, stacklevel=3)
+    with np.load(npz) as data:
+        # io._flatten keys GlobalState leaves as ".lam", ".m_vk", ...
+        flat = {k.lstrip("."): np.asarray(v) for k, v in data.items()}
+    if "lam" not in flat:
+        raise ValueError(f"{npz!r} holds no 'lam' leaf — not an LDA state "
+                         f"checkpoint (keys: {sorted(flat)})")
+    lam = flat["lam"].astype(np.float32)
+    v, k = lam.shape
+    # flat legacy files may carry the other GlobalState leaves; default the
+    # missing ones to the post-first-pass fixed point (init mass retired)
+    st = {"lam": lam,
+          "m_vk": flat.get("m_vk", np.zeros_like(lam)),
+          "init_mass": flat.get("init_mass", np.zeros_like(lam)),
+          "init_frac": flat.get("init_frac", np.zeros(())),
+          "t": flat.get("t", np.zeros((), np.int32))}
+    lda = LDA(num_topics=k, vocab_size=v)
+    lda._state_view = _state_view({"state": st})
+    lda._pending_restore = None          # serve-only: resume() will refuse
+    lda._serve_only = True               # ...and so will fit/partial_fit
+    return lda

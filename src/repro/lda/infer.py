@@ -1,0 +1,140 @@
+"""Serving-side inference: topic posteriors for unseen documents.
+
+Training owns λ; serving only needs the per-document E-step against frozen
+topics (the same fixed point `predictive.log_predictive` runs before
+scoring). This module packages that E-step for request traffic:
+
+* documents are grouped into **length buckets** (the training ladder of
+  `repro.data.bow.bucket_corpus`, but keyed on the last LIVE column so
+  arbitrary request layouts slice losslessly — ``_serving_buckets``) and
+  each bucket sliced to its own width, so E-step FLOPs scale with a
+  request's actual length, not the corpus-wide maximum;
+* every bucket batch is padded to one fixed ``batch_size``, so the jit
+  cache holds exactly **one compiled executable per bucket width** — a
+  bounded, enumerable cache (``TopicInferencer.cache_info``) instead of
+  one recompile per request shape;
+* the E-step dispatches through ``cfg.estep_backend`` — with ``pallas``
+  this is the fused fixed-point kernel (`docs/estep.md`), the production
+  serving configuration.
+
+``TopicInferencer`` is the reusable handle (λ is preprocessed to
+exp(E[ln φ]) once); ``topic_posterior`` is the one-shot convenience the
+``LDA.transform`` facade method wraps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estep import estep
+from repro.core.math import exp_dirichlet_expectation, safe_normalize
+from repro.core.types import Corpus, LDAConfig
+
+# the same width ladder repro.data.bow.bucket_corpus uses for training
+_WIDTH_BOUNDARIES = (8, 16, 32, 64, 128, 256, 512)
+
+
+def _serving_buckets(counts: np.ndarray, boundaries=_WIDTH_BOUNDARIES):
+    """Group documents by the padded width that COVERS their live slots.
+
+    Unlike training-side ``bucket_corpus`` (which buckets by the number of
+    live slots, valid for the canonical leading-column layout), serving
+    traffic may carry zero-count slots interspersed with live ones — e.g.
+    the observed halves ``predictive.split_heldout`` produces. Bucketing
+    by the LAST live column keeps the ``[:width]`` slice lossless for any
+    layout; interior zero-count slots are harmless (the E-step masks them).
+    """
+    d, l = counts.shape
+    live = counts > 0
+    # width needed per doc = index of its last live column + 1 (0 if empty)
+    last = np.where(live.any(1), l - np.argmax(live[:, ::-1], axis=1), 0)
+    widths = sorted({min(b, l) for b in boundaries if b < l} | {l})
+    out = []
+    lo = 0
+    for w in widths:
+        rows = np.nonzero((last > lo) & (last <= w))[0]
+        if lo == 0:
+            rows = np.union1d(rows, np.nonzero(last == 0)[0])
+        if len(rows):
+            out.append((rows.astype(np.int64), int(w)))
+        lo = w
+    return out
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _posterior_batch(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                     token_ids: jax.Array, counts: jax.Array) -> jax.Array:
+    """γ for one padded (B, width) batch via the configured backend."""
+    return estep(cfg, exp_elog_beta, token_ids, counts).gamma
+
+
+class TopicInferencer:
+    """Frozen-topics E-step server (see module docstring).
+
+    Args:
+      cfg: training config; ``backend`` overrides ``cfg.estep_backend``
+        for serving (e.g. train with ``gather``, serve with ``pallas``).
+      lam: (V, K) topic-word parameter — from a live ``LDA`` facade, a
+        checkpoint, or any λ with the right shape.
+      batch_size: fixed request batch; shorter batches are padded with
+        empty documents (zero counts — they converge to the γ prior in
+        one sweep and are dropped before returning).
+    """
+
+    def __init__(self, cfg: LDAConfig, lam: jax.Array, *,
+                 backend: Optional[str] = None, batch_size: int = 256):
+        if backend is not None and backend != cfg.estep_backend:
+            cfg = dataclasses.replace(cfg, estep_backend=backend)
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.exp_elog_beta = exp_dirichlet_expectation(jnp.asarray(lam),
+                                                       axis=0)
+        self._compiled_widths: Dict[int, int] = {}    # width → batches run
+
+    # -- core -----------------------------------------------------------
+    def posterior(self, corpus: Corpus) -> np.ndarray:
+        """γ (D, K) for every document, bucketed + fixed-batch padded."""
+        d = corpus.num_docs
+        out = np.zeros((d, self.cfg.num_topics), np.float32)
+        ids_all = np.asarray(corpus.token_ids)
+        cnts_all = np.asarray(corpus.counts)
+        b = self.batch_size
+        for rows_all, width in _serving_buckets(cnts_all):
+            for lo in range(0, len(rows_all), b):
+                rows = rows_all[lo:lo + b]
+                ids = np.zeros((b, width), np.int32)
+                cnts = np.zeros((b, width), np.float32)
+                ids[: len(rows)] = ids_all[rows, :width]
+                cnts[: len(rows)] = cnts_all[rows, :width]
+                gamma = _posterior_batch(self.cfg, self.exp_elog_beta,
+                                         jnp.asarray(ids), jnp.asarray(cnts))
+                out[rows] = np.asarray(gamma[: len(rows)])
+                self._compiled_widths[width] = \
+                    self._compiled_widths.get(width, 0) + 1
+        return out
+
+    def transform(self, corpus: Corpus) -> np.ndarray:
+        """θ̄ (D, K): the normalised topic posterior (matches the θ̄ that
+        ``predictive.log_predictive`` scores held-out words with)."""
+        gamma = self.posterior(corpus)
+        return np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
+
+    # -- introspection ---------------------------------------------------
+    def cache_info(self) -> Dict[int, int]:
+        """{bucket width: batches served} — one jit entry per key."""
+        return dict(self._compiled_widths)
+
+
+def topic_posterior(cfg: LDAConfig, lam: jax.Array, corpus: Corpus, *,
+                    backend: Optional[str] = None, batch_size: int = 256
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """One-shot (γ, θ̄) for ``corpus`` under frozen topics ``lam``."""
+    inf = TopicInferencer(cfg, lam, backend=backend, batch_size=batch_size)
+    gamma = inf.posterior(corpus)
+    theta = np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
+    return gamma, theta

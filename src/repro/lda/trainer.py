@@ -1,0 +1,352 @@
+"""The Trainer protocol: one training contract over both engine families.
+
+``LDAEngine`` (single host: MVI/SVI/IVI/S-IVI) and ``DIVIEngine``
+(distributed D-IVI) expose different driving surfaces (epochs + minibatches
+vs rounds) and different durable state (π ``MemoStore`` + epoch remainder
+vs worker memo shards). The facade (`repro.lda.api.LDA`) never touches
+either engine directly — it drives a ``Trainer``:
+
+* ``run_pass()``  — one full unit of cover: an epoch / a global round;
+* ``run_step()``  — the smallest resumable unit: one mini-batch / round;
+* ``capture()`` / ``restore()`` — the trainer's FULL durable state as
+  (json-able meta, named array groups) for `repro.checkpoint.manifest`.
+
+``capture`` is the piece ``train.py``'s old ``save_checkpoint(eng.state)``
+got wrong: an incremental run's state is not just λ — it is (λ, t,
+init_frac, ⟨m_vk⟩), the π memo in its wire dtype, the host rng stream and
+the not-yet-visited remainder of the current epoch. All of it round-trips
+here, which is what makes save → load → resume bit-equal to an
+uninterrupted run (tests/test_lda_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engines import History, LDAEngine
+from repro.core.predictive import log_predictive, split_heldout
+from repro.core.types import Corpus, GlobalState, LDAConfig
+from repro.dist.engine import DIVIEngine
+from repro.dist.protocol import DIVIConfig
+
+_STATE_FIELDS = ("lam", "m_vk", "init_mass", "init_frac", "t")
+
+
+def _capture_state(state: GlobalState) -> Dict[str, np.ndarray]:
+    return {f: np.asarray(jax.device_get(getattr(state, f)))
+            for f in _STATE_FIELDS}
+
+
+def _restore_state(arrays: Dict[str, np.ndarray],
+                   like: GlobalState) -> GlobalState:
+    """Rebuild a GlobalState, re-placing each leaf on its current sharding
+    (the D-IVI mesh path keeps the (V, K) leaves model-sharded)."""
+    leaves = {}
+    for f in _STATE_FIELDS:
+        ref = getattr(like, f)
+        arr = jnp.asarray(arrays[f], ref.dtype)
+        if arr.shape != ref.shape:
+            raise ValueError(
+                f"state leaf {f!r}: checkpoint shape {arr.shape} != live "
+                f"{tuple(ref.shape)} — the checkpoint belongs to a "
+                "different corpus/config")
+        leaves[f] = jax.device_put(arr, ref.sharding)
+    return GlobalState(**leaves)
+
+
+class Trainer:
+    """Abstract training contract (see module docstring)."""
+
+    kind: str = "abstract"
+    algo: str
+    history: History
+
+    # -- views ----------------------------------------------------------
+    @property
+    def state(self) -> GlobalState:
+        raise NotImplementedError
+
+    @property
+    def lam(self) -> jax.Array:
+        return self.state.lam
+
+    @property
+    def docs_seen(self) -> int:
+        raise NotImplementedError
+
+    # -- stepping -------------------------------------------------------
+    def run_pass(self) -> None:
+        """One full unit of cover: an epoch (single host) / a round (D-IVI)."""
+        raise NotImplementedError
+
+    def run_step(self) -> None:
+        """The smallest resumable unit: one mini-batch / one round."""
+        raise NotImplementedError
+
+    def evaluate(self) -> Dict[str, float]:
+        raise NotImplementedError
+
+    def set_test_corpus(self, corpus: Corpus, *, seed: int = 0) -> None:
+        """(Re)bind the held-out evaluation split ``evaluate`` scores."""
+        raise NotImplementedError
+
+    def full_bound(self) -> float:
+        raise NotImplementedError
+
+    # -- durable state --------------------------------------------------
+    def capture(self) -> Tuple[Dict[str, Any],
+                               Dict[str, Dict[str, np.ndarray]]]:
+        """Snapshot ALL durable state: (json-able meta, array groups)."""
+        raise NotImplementedError
+
+    def restore(self, meta: Dict[str, Any],
+                arrays: Dict[str, Dict[str, np.ndarray]]) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# single host: MVI / SVI / IVI / S-IVI
+# ---------------------------------------------------------------------------
+
+class SingleHostTrainer(Trainer):
+    """``LDAEngine`` behind the Trainer contract, with a resumable epoch.
+
+    The trainer materialises each epoch's batch sequence up front (the
+    exact sequence — and the exact rng consumption — ``run_epoch`` uses,
+    via ``LDAEngine.epoch_batches``) and steps through it, so a checkpoint
+    taken mid-epoch persists the unvisited remainder and the resumed run
+    finishes the same epoch with the same batches.
+    """
+
+    kind = "single"
+
+    def __init__(self, cfg: LDAConfig, corpus: Corpus, *, algo: str,
+                 batch_size: int = 64, seed: int = 0,
+                 test_corpus: Optional[Corpus] = None,
+                 memo_store: str = "dense", chunk_docs: int = 8192,
+                 bucket_by_length: bool = False):
+        self.eng = LDAEngine(cfg, corpus, algo=algo, batch_size=batch_size,
+                             seed=seed, test_corpus=test_corpus,
+                             memo_store=memo_store, chunk_docs=chunk_docs,
+                             bucket_by_length=bucket_by_length)
+        self.algo = algo
+        self._pending: List[Tuple[np.ndarray, Optional[int]]] = []
+
+    # -- views ----------------------------------------------------------
+    @property
+    def state(self) -> GlobalState:
+        return self.eng.state
+
+    @property
+    def docs_seen(self) -> int:
+        return self.eng.docs_seen
+
+    @property
+    def history(self) -> History:
+        return self.eng.history
+
+    @property
+    def pending_batches(self) -> int:
+        """Batches of the current epoch not yet visited (0 ≡ epoch boundary)."""
+        return len(self._pending)
+
+    # -- stepping -------------------------------------------------------
+    def run_step(self) -> None:
+        if self.algo == "mvi":
+            raise ValueError("mvi is full-batch coordinate ascent — it has "
+                             "no mini-batch step; use run_pass()")
+        if not self._pending:
+            self._pending = list(self.eng.epoch_batches())
+        rows, width = self._pending.pop(0)
+        self.eng.run_minibatch(rows, width=width)
+
+    def run_pass(self) -> None:
+        if self.algo == "mvi":
+            self.eng.run_epoch()
+            return
+        if not self._pending:
+            self._pending = list(self.eng.epoch_batches())
+        while self._pending:
+            self.run_step()
+
+    def evaluate(self) -> Dict[str, float]:
+        return self.eng.evaluate()
+
+    def set_test_corpus(self, corpus: Corpus, *, seed: int = 0) -> None:
+        self.eng._obs, self.eng._held = split_heldout(corpus, seed=seed)
+
+    def full_bound(self) -> float:
+        return self.eng.full_bound()
+
+    # -- durable state --------------------------------------------------
+    def capture(self):
+        eng = self.eng
+        meta: Dict[str, Any] = {
+            "kind": self.kind,
+            "algo": self.algo,
+            "docs_seen": eng.docs_seen,
+            "rng": eng.rng.bit_generator.state,
+            "history": dataclasses.asdict(eng.history),
+            "wall_elapsed": time.perf_counter() - eng._t0,
+            "pending_widths": [None if w is None else int(w)
+                               for _, w in self._pending],
+        }
+        arrays: Dict[str, Dict[str, np.ndarray]] = {
+            "state": _capture_state(eng.state),
+            "pending": {f"batch_{i:05d}": np.asarray(rows, np.int64)
+                        for i, (rows, _) in enumerate(self._pending)},
+        }
+        if eng.memo is not None:
+            meta["memo_kind"] = eng.memo.kind
+            arrays["memo"] = eng.memo.state_dict()
+        if eng._gamma_buf is not None:
+            arrays["mvi"] = {"gamma_buf": np.asarray(eng._gamma_buf)}
+        return meta, arrays
+
+    def restore(self, meta, arrays) -> None:
+        if meta["algo"] != self.algo:
+            raise ValueError(f"checkpoint algo {meta['algo']!r} != "
+                             f"trainer algo {self.algo!r}")
+        eng = self.eng
+        eng.state = _restore_state(arrays["state"], eng.state)
+        if eng.memo is not None:
+            if meta.get("memo_kind") != eng.memo.kind:
+                raise ValueError(
+                    f"checkpoint memo store {meta.get('memo_kind')!r} != "
+                    f"configured {eng.memo.kind!r} — the memo is part of "
+                    "the algorithm state and cannot be converted on load")
+            eng.memo = eng.memo.load_state_dict(arrays["memo"])
+        if eng._gamma_buf is not None:
+            eng._gamma_buf = jnp.asarray(arrays["mvi"]["gamma_buf"])
+        eng.rng.bit_generator.state = meta["rng"]
+        eng.docs_seen = int(meta["docs_seen"])
+        eng.history = History(**meta["history"])
+        eng._t0 = time.perf_counter() - float(meta["wall_elapsed"])
+        widths = meta["pending_widths"]
+        self._pending = [
+            (arrays["pending"][f"batch_{i:05d}"],
+             None if w is None else int(w))
+            for i, w in enumerate(widths)]
+
+
+# ---------------------------------------------------------------------------
+# distributed: D-IVI
+# ---------------------------------------------------------------------------
+
+class DIVITrainer(Trainer):
+    """``DIVIEngine`` behind the Trainer contract.
+
+    One pass == one global round (``staleness`` sub-rounds of P concurrent
+    worker batches). The durable state adds the per-worker memo shards to
+    the global (λ, ⟨m_vk⟩, …) leaves; on the mesh path ``restore`` re-places
+    every leaf with the sharding the live engine already carries.
+    """
+
+    kind = "divi"
+
+    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
+                 seed: int = 0, test_corpus: Optional[Corpus] = None,
+                 mesh=None, data_axes=None):
+        self.cfg, self.dcfg = cfg, dcfg
+        self.algo = "sivi"          # D-IVI is the eq. 5 protocol distributed
+        self.eng = DIVIEngine(cfg, dcfg, corpus, seed=seed, mesh=mesh,
+                              data_axes=data_axes)
+        self.history = History()
+        self._t0 = time.perf_counter()
+        if test_corpus is not None:
+            self._obs, self._held = split_heldout(test_corpus, seed=seed)
+        else:
+            self._obs = self._held = None
+
+    # -- views ----------------------------------------------------------
+    @property
+    def state(self) -> GlobalState:
+        return self.eng.state
+
+    @property
+    def docs_seen(self) -> int:
+        return self.eng.docs_seen
+
+    # -- stepping -------------------------------------------------------
+    def run_step(self) -> None:
+        self.eng.run_round()
+
+    run_pass = run_step
+
+    def evaluate(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        if self._obs is not None:
+            out["lpp"] = float(log_predictive(self.cfg, self.eng.lam,
+                                              self._obs, self._held))
+            self.history.lpp.append(out["lpp"])
+        self.history.docs_seen.append(self.docs_seen)
+        self.history.wall.append(time.perf_counter() - self._t0)
+        return out
+
+    def set_test_corpus(self, corpus: Corpus, *, seed: int = 0) -> None:
+        self._obs, self._held = split_heldout(corpus, seed=seed)
+
+    def full_bound(self) -> float:
+        raise NotImplementedError(
+            "the corpus bound is not wired for the sharded memo; evaluate "
+            "held-out LPP instead (Trainer.evaluate with a test corpus)")
+
+    # -- durable state --------------------------------------------------
+    def capture(self):
+        eng = self.eng
+        meta: Dict[str, Any] = {
+            "kind": self.kind,
+            "algo": "divi",
+            "docs_seen": eng.docs_seen,
+            "rng": eng.rng.bit_generator.state,
+            "history": dataclasses.asdict(self.history),
+            "wall_elapsed": time.perf_counter() - self._t0,
+        }
+        arrays = {
+            "state": _capture_state(eng.state),
+            "memo": {"pi": np.asarray(jax.device_get(eng.shard.memo.pi)),
+                     "visited": np.asarray(jax.device_get(
+                         eng.shard.memo.visited))},
+        }
+        return meta, arrays
+
+    def restore(self, meta, arrays) -> None:
+        if meta["algo"] != "divi":
+            raise ValueError(f"checkpoint algo {meta['algo']!r} is not a "
+                             "D-IVI checkpoint")
+        eng = self.eng
+        eng.state = _restore_state(arrays["state"], eng.state)
+        memo = eng.shard.memo
+        from repro.core.memo import DenseMemoStore
+        eng.shard = dataclasses.replace(eng.shard, memo=DenseMemoStore(
+            pi=jax.device_put(jnp.asarray(arrays["memo"]["pi"]),
+                              memo.pi.sharding),
+            visited=jax.device_put(jnp.asarray(arrays["memo"]["visited"]),
+                                   memo.visited.sharding)))
+        eng.rng.bit_generator.state = meta["rng"]
+        eng.docs_seen = int(meta["docs_seen"])
+        self.history = History(**meta["history"])
+        self._t0 = time.perf_counter() - float(meta["wall_elapsed"])
+
+
+def make_trainer(cfg: LDAConfig, corpus: Corpus, *, algo: str,
+                 distributed: Optional[DIVIConfig] = None,
+                 batch_size: int = 64, seed: int = 0,
+                 test_corpus: Optional[Corpus] = None,
+                 memo_store: str = "dense", chunk_docs: int = 8192,
+                 bucket_by_length: bool = False, mesh=None,
+                 data_axes=None) -> Trainer:
+    """Bind a corpus to the right Trainer for (algo, distributed)."""
+    if distributed is not None:
+        return DIVITrainer(cfg, distributed, corpus, seed=seed,
+                           test_corpus=test_corpus, mesh=mesh,
+                           data_axes=data_axes)
+    return SingleHostTrainer(cfg, corpus, algo=algo, batch_size=batch_size,
+                             seed=seed, test_corpus=test_corpus,
+                             memo_store=memo_store, chunk_docs=chunk_docs,
+                             bucket_by_length=bucket_by_length)

@@ -1,0 +1,318 @@
+"""`repro.lda` facade: parity, durable checkpoints, serving, API surface.
+
+The acceptance bars of ISSUE 3:
+
+* facade trajectories are BIT-equal to driving the engines directly
+  (same seed) for all four single-host algos and for D-IVI;
+* save → load → resume is bit-equal to an uninterrupted run — *including*
+  a save taken mid-epoch, for the dense / bf16-chunked / γ-only memo
+  stores (the memo, the rng stream and the unvisited epoch remainder all
+  round-trip through the manifest);
+* ``LDA.transform`` on held-out docs matches the E-step
+  ``predictive.log_predictive`` runs, to fp32 tolerance, via the Pallas
+  backend;
+* the legacy bare-λ flat-npz checkpoints still load (serve-only, with a
+  ``DeprecationWarning``) — the old ``train.py`` save path silently
+  produced non-resumable IVI runs;
+* the public API surface (``repro.lda.__all__``) is guarded, and the old
+  entry points stay importable.
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LDAConfig, LDAEngine
+from repro.core.estep import estep_gather
+from repro.core.math import safe_normalize
+from repro.core.predictive import split_heldout
+from repro.dist import DIVIConfig, DIVIEngine
+from repro.lda import LDA
+
+
+def _cfg(spec, **kw):
+    kw.setdefault("estep_max_iters", 20)
+    return LDAConfig(num_topics=4, vocab_size=spec.vocab_size, **kw)
+
+
+def _same(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# parity: facade == direct engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["mvi", "svi", "ivi", "sivi"])
+def test_facade_parity_single_host(tiny_corpus, algo):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    lda = LDA(cfg, algo=algo, batch_size=16, seed=3).fit(train, epochs=2)
+    eng = LDAEngine(cfg, train, algo=algo, batch_size=16, seed=3)
+    eng.run_epoch()
+    eng.run_epoch()
+    _same(lda.lam, eng.state.lam)
+    _same(lda.state.m_vk, eng.state.m_vk)
+    assert lda.docs_seen == eng.docs_seen
+
+
+def test_facade_parity_divi(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    dcfg = DIVIConfig(num_workers=2, batch_size=8)
+    lda = LDA(cfg, algo="divi", distributed=dcfg, seed=0).fit(train, rounds=3)
+    eng = DIVIEngine(cfg, dcfg, train, seed=0)
+    for _ in range(3):
+        eng.run_round()
+    _same(lda.lam, eng.lam)
+    assert lda.docs_seen == eng.docs_seen
+
+
+# ---------------------------------------------------------------------------
+# durable checkpoints: save mid-epoch → restore → bit-equal continuation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("store,algo,bucketed", [
+    ("dense", "ivi", False),
+    ("chunked", "ivi", False),
+    ("gamma", "sivi", False),
+    ("dense", "ivi", True),
+])
+def test_checkpoint_roundtrip_mid_epoch(tiny_corpus, tmp_path, store, algo,
+                                        bucketed):
+    """Save after 3 minibatches (mid-epoch), resume, run 2 more: λ and
+    ⟨m_vk⟩ must be bit-equal to the run that never stopped — for every
+    memo-store representation, including the bf16 wire."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    kw = dict(algo=algo, batch_size=16, seed=7, memo_store=store,
+              chunk_docs=16, bucket_by_length=bucketed)
+    path = os.path.join(tmp_path, "ck")
+
+    a = LDA(cfg, **kw).partial_fit(train, steps=3)
+    assert a.trainer.pending_batches > 0      # genuinely mid-epoch
+    a.save(path)
+    a.partial_fit(steps=2)
+
+    b = LDA.load(path).resume(train)
+    assert b.trainer.pending_batches > 0      # the remainder round-tripped
+    b.partial_fit(steps=2)
+
+    _same(a.lam, b.lam)
+    _same(a.state.m_vk, b.state.m_vk)
+    _same(a.state.init_frac, b.state.init_frac)
+    # the memo itself is bit-equal too (in its own wire dtype)
+    sa, sb = a.trainer.eng.memo.state_dict(), b.trainer.eng.memo.state_dict()
+    assert sorted(sa) == sorted(sb)
+    for k in sa:
+        _same(sa[k], sb[k])
+
+
+def test_checkpoint_roundtrip_mvi(tiny_corpus, tmp_path):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    path = os.path.join(tmp_path, "ck")
+    a = LDA(cfg, algo="mvi", batch_size=16, seed=1).fit(train, epochs=1)
+    a.save(path)
+    a.fit(epochs=1)
+    b = LDA.load(path).resume(train).fit(epochs=1)
+    _same(a.lam, b.lam)   # needs the γ warm-start buffer in the manifest
+
+
+def test_checkpoint_roundtrip_divi(tiny_corpus, tmp_path):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    path = os.path.join(tmp_path, "ck")
+    dcfg = DIVIConfig(num_workers=2, batch_size=8, staleness=2)
+    a = LDA(cfg, algo="divi", distributed=dcfg, seed=0).fit(train, rounds=2)
+    a.save(path)
+    a.partial_fit(steps=2)
+    b = LDA.load(path).resume(train)
+    assert b.distributed == dcfg              # DIVIConfig round-trips
+    b.partial_fit(steps=2)
+    _same(a.lam, b.lam)
+    _same(a.state.m_vk, b.state.m_vk)
+
+
+def test_fit_on_unresumed_checkpoint_refuses(tiny_corpus, tmp_path):
+    """fit() on a loaded-but-not-resumed estimator must not silently
+    retrain from scratch while the checkpoint payload sits unused."""
+    train, _, spec = tiny_corpus
+    path = os.path.join(tmp_path, "ck")
+    LDA(_cfg(spec), algo="ivi", batch_size=16).partial_fit(
+        train, steps=1).save(path)
+    loaded = LDA.load(path)
+    with pytest.raises(ValueError, match="resume"):
+        loaded.fit(train, epochs=1)
+    loaded.resume(train).fit(epochs=1)       # the blessed path still works
+
+
+def test_resave_to_same_path(tiny_corpus, tmp_path):
+    """Periodic checkpointing to one directory: the reload must see the
+    newest generation, not a mix."""
+    train, _, spec = tiny_corpus
+    path = os.path.join(tmp_path, "ck")
+    a = LDA(_cfg(spec), algo="ivi", batch_size=16, seed=5)
+    a.partial_fit(train, steps=2).save(path)
+    a.partial_fit(steps=2).save(path)        # overwrite in place
+    b = LDA.load(path).resume(train)
+    _same(a.lam, b.lam)
+    _same(a.state.m_vk, b.state.m_vk)
+
+
+def test_resume_with_wrong_corpus_refuses(tiny_corpus, tmp_path):
+    """A checkpoint carries no corpus, but restoring into a different-sized
+    one must fail loudly, not gather out-of-range memo rows silently."""
+    train, test, spec = tiny_corpus          # train: 96 docs, test: 32
+    path = os.path.join(tmp_path, "ck")
+    LDA(_cfg(spec), algo="ivi", batch_size=16).partial_fit(
+        train, steps=1).save(path)
+    with pytest.raises(ValueError, match="checkpoint"):
+        LDA.load(path).resume(test)
+
+
+def test_late_test_corpus_rebinds(tiny_corpus):
+    """test_corpus passed after the first bind must take effect."""
+    train, test, spec = tiny_corpus
+    lda = LDA(_cfg(spec), algo="ivi", batch_size=16).fit(train, epochs=1)
+    lda.fit(epochs=1, test_corpus=test)
+    assert "lpp" in lda.evaluate()
+
+
+def test_wrong_store_on_resume_refuses(tiny_corpus, tmp_path):
+    """The memo is algorithm state: restoring it into a different store
+    kind silently changes the wire dtype — must refuse instead."""
+    train, _, spec = tiny_corpus
+    path = os.path.join(tmp_path, "ck")
+    a = LDA(_cfg(spec), algo="ivi", batch_size=16,
+            memo_store="chunked").partial_fit(train, steps=1)
+    a.save(path)
+    b = LDA.load(path)
+    b.memo_store = "dense"                    # simulate a mismatched rebuild
+    with pytest.raises(ValueError, match="memo store"):
+        b.resume(train)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_transform_matches_predictive_estep_pallas(tiny_corpus):
+    """``LDA.transform`` (fused Pallas backend, bucketed + padded batches)
+    must match the plain token-gather E-step that ``log_predictive`` fits
+    on observed halves — fp32 tolerance (the backends share the fixed
+    point but not the float op order)."""
+    train, test, spec = tiny_corpus
+    # converge the fixed point hard so the comparison tests float agreement,
+    # not where each backend's while_loop happened to stop on the plateau
+    cfg = _cfg(spec, estep_max_iters=100, estep_tol=1e-6)
+    lda = LDA(cfg, algo="ivi", batch_size=16, seed=0).fit(train, epochs=1)
+    obs, _ = split_heldout(test, seed=0)
+
+    eb = jnp.exp(jax.scipy.special.digamma(lda.lam)
+                 - jax.scipy.special.digamma(lda.lam.sum(0)))
+    want = estep_gather(cfg, eb, obs.token_ids, obs.counts)
+    theta_want = np.asarray(safe_normalize(want.gamma, axis=-1))
+
+    theta = lda.transform(obs, backend="pallas", batch_size=8)
+    np.testing.assert_allclose(theta, theta_want, rtol=2e-3, atol=2e-3)
+
+    gamma = lda.posterior(obs, backend="gather", batch_size=8)
+    np.testing.assert_allclose(gamma, np.asarray(want.gamma),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_serve_from_loaded_checkpoint_without_corpus(tiny_corpus, tmp_path):
+    train, test, spec = tiny_corpus
+    path = os.path.join(tmp_path, "ck")
+    lda = LDA(_cfg(spec), algo="ivi", batch_size=16).fit(train, epochs=1)
+    lda.save(path)
+    served = LDA.load(path)                  # no resume, no corpus
+    theta = served.transform(test)
+    assert theta.shape == (test.num_docs, 4)
+    np.testing.assert_allclose(theta.sum(-1), 1.0, atol=1e-5)
+    assert served.top_words(3).shape == (4, 3)
+    assert np.isfinite(served.score(test))
+
+
+# ---------------------------------------------------------------------------
+# legacy checkpoints + evaluate() History hygiene
+# ---------------------------------------------------------------------------
+
+def test_legacy_bare_lambda_checkpoint(tiny_corpus, tmp_path):
+    from repro.checkpoint import save_checkpoint
+    train, test, spec = tiny_corpus
+    cfg = _cfg(spec)
+    eng = LDAEngine(cfg, train, algo="ivi", batch_size=16, seed=0)
+    eng.run_epoch()
+    path = os.path.join(tmp_path, "legacy.npz")
+    save_checkpoint(path, eng.state)
+
+    with pytest.warns(DeprecationWarning, match="CANNOT resume"):
+        lda = LDA.load(path)
+    _same(lda.lam, eng.state.lam)            # serving state intact
+    assert lda.transform(test).shape == (test.num_docs, cfg.num_topics)
+    with pytest.raises(ValueError, match="resume"):
+        lda.resume(train)                    # but training cannot continue
+    with pytest.raises(ValueError, match="serve-only"):
+        lda.fit(train, epochs=1)             # ...not even from scratch
+
+
+def test_evaluate_without_test_corpus_records_bound(tiny_corpus):
+    """No test corpus → no lpp=nan rows; the memoized bound is recorded."""
+    train, _, spec = tiny_corpus
+    eng = LDAEngine(_cfg(spec), train, algo="ivi", batch_size=16, seed=0)
+    eng.run_epoch()
+    out = eng.evaluate()
+    assert "lpp" not in out and "elbo" in out
+    assert eng.history.lpp == []             # never padded with nan
+    assert len(eng.history.elbo) == 1
+    assert np.isfinite(eng.history.elbo[0])
+    # and the recorded value is the memoized bound
+    assert out["elbo"] == pytest.approx(eng.full_bound())
+
+
+# ---------------------------------------------------------------------------
+# public API surface
+# ---------------------------------------------------------------------------
+
+def test_public_api_surface():
+    """``repro.lda.__all__`` is the public contract: additions are fine,
+    removals/renames are breaking — keep this list in sync deliberately."""
+    import repro.lda as lda_pkg
+
+    expected = {
+        "LDA", "Trainer", "SingleHostTrainer", "DIVITrainer",
+        "make_trainer", "TopicInferencer", "topic_posterior",
+        "save_lda_checkpoint", "load_lda_checkpoint", "SCHEMA_VERSION",
+    }
+    assert expected.issubset(set(lda_pkg.__all__))
+    for name in lda_pkg.__all__:
+        assert getattr(lda_pkg, name) is not None
+
+
+def test_old_entry_points_still_importable():
+    """The facade wraps — it does not replace — the historical surface."""
+    from repro.core import (LDAEngine, incremental_update, ivi_step,  # noqa
+                            sivi_step, svi_step)
+    from repro.dist import DIVIConfig, DIVIEngine                     # noqa
+    from repro.checkpoint import (restore_checkpoint,                 # noqa
+                                  save_checkpoint)
+    import repro.launch.train                                         # noqa
+    import repro.launch.serve_lda                                     # noqa
+
+
+def test_constructor_validation(tiny_corpus):
+    _, _, spec = tiny_corpus
+    with pytest.raises(ValueError, match="incompatible"):
+        LDA(num_topics=4, vocab_size=spec.vocab_size, algo="ivi",
+            distributed=DIVIConfig())
+    with pytest.raises(TypeError, match="not both"):
+        LDA(_cfg(spec), num_topics=8)
+    with pytest.raises(ValueError, match="unknown algo"):
+        LDA(num_topics=4, vocab_size=spec.vocab_size, algo="vb")
+    # divi shorthand implies a default DIVIConfig
+    assert LDA(_cfg(spec), algo="divi").distributed is not None

@@ -51,18 +51,19 @@ def elbo_memoized(cfg: LDAConfig, corpus: Corpus, gamma: jax.Array,
     return doc_terms + _topics_term(cfg, lam)
 
 
-def elbo_memoized_store(cfg: LDAConfig, corpus: Corpus, store,
-                        lam: jax.Array, *, batch_docs: int = 512) -> jax.Array:
-    """The memoized ELBO read through a ``MemoStore``, chunk by chunk.
+def elbo_memoized_docs(cfg: LDAConfig, corpus: Corpus, store,
+                       elog_beta: jax.Array, *,
+                       batch_docs: int = 512) -> jax.Array:
+    """Document terms of the memoized ELBO, read through a ``MemoStore``.
 
     Never materialises the (D, L, K) memo: each store chunk is gathered,
     its γ reconstructed from the memo (γ = α₀ + Σ_l cnt·π, Alg. 1 line 6),
-    and its word/θ terms accumulated. With the dense store this equals
-    ``elbo_memoized`` up to fp summation order; with the bf16-chunked or
-    γ-only stores the π that enters IS the store's (compressed) memo, so
-    the bound reported is the bound of the state the engine actually holds.
+    and its word/θ terms accumulated. The λ-Dirichlet topics term is NOT
+    included — that is what makes this the per-shard reduction unit of the
+    distributed bound (`DIVITrainer.full_bound`): every worker shard
+    contributes its documents' terms independently and the topics term
+    enters exactly once at the end, with no all-gather of the memo shards.
     """
-    elog_beta = dirichlet_expectation(lam, axis=0)
     total = jnp.zeros(())
     for idx, pi, _vis in store.iter_chunks(batch_docs):
         ids = corpus.token_ids[jnp.asarray(idx)]
@@ -70,7 +71,23 @@ def elbo_memoized_store(cfg: LDAConfig, corpus: Corpus, store,
         gamma = cfg.alpha0 + jnp.einsum("blk,bl->bk", pi, cnts)
         total = total + _memoized_doc_terms(cfg, ids, cnts, gamma, pi,
                                             elog_beta)
-    return total + _topics_term(cfg, lam)
+    return total
+
+
+def elbo_memoized_store(cfg: LDAConfig, corpus: Corpus, store,
+                        lam: jax.Array, *, batch_docs: int = 512) -> jax.Array:
+    """The memoized ELBO read through a ``MemoStore``, chunk by chunk.
+
+    ``elbo_memoized_docs`` plus the topics term. With the dense store this
+    equals ``elbo_memoized`` up to fp summation order; with the
+    bf16-chunked or γ-only stores the π that enters IS the store's
+    (compressed) memo, so the bound reported is the bound of the state the
+    engine actually holds.
+    """
+    docs = elbo_memoized_docs(cfg, corpus, store,
+                              dirichlet_expectation(lam, axis=0),
+                              batch_docs=batch_docs)
+    return docs + _topics_term(cfg, lam)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -21,7 +21,9 @@ Three backends:
   point is ONE fused ``pallas_call`` (γ/Eθ resident in VMEM scratch, Eφ
   streamed once per sweep via the V grid, in-kernel convergence flag), and
   ``solve_correction`` emits token-aligned π and the (V, K) correction
-  from a second fused kernel with no (B, L, K) jnp intermediates.
+  from the segment-sum ``memo_delta`` pair — a token-π kernel tiling
+  (B, L) and a V-chunk scatter — with no (B, L, K) jnp intermediates and
+  no dense (nb, V, K) scatter partials.
 
 All backends return the converged document-topic parameter γ and the
 memoized responsibilities π in token layout (B, L, K) — the quantity IVI
@@ -244,14 +246,28 @@ class DenseBackend(EStepBackend):
 
 class PallasBackend(EStepBackend):
     """Fused-kernel backend (`repro.kernels.ops`): one pallas_call per
-    fixed point, memo correction with no (B, L, K) jnp intermediates."""
+    fixed point, memo correction via the segment-sum ``memo_delta`` pair —
+    no (B, L, K) jnp intermediates and no dense (nb, V, K) scatter
+    partials.
+
+    ``delta_block_v`` is the scatter's second-level V-chunk size. ``None``
+    (the default) defers to the VMEM-budget policy
+    (`lda_estep.segment_scatter_blocks`): the largest lane-aligned chunk
+    whose selector + accumulators fit the kernel's step budget, capped at
+    the vocab so small vocabularies run V-resident in a single chunk. The
+    chunk count is the scatter's HBM-traffic knob — the token rows are
+    re-streamed once per chunk — so overriding it only makes sense for
+    benchmark sweeps.
+    """
 
     name = "pallas"
+    delta_block_v: Optional[int] = None     # None → VMEM-budget policy
 
     def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
         from repro.kernels import ops as kops
         return kops.estep_pallas(cfg, exp_elog_beta, batch.token_ids,
-                                 batch.counts, gamma0)
+                                 batch.counts, gamma0,
+                                 delta_block_v=self.delta_block_v)
 
     def solve_correction(self, cfg, exp_elog_beta, batch, old_pi, visited,
                          pi_dtype="float32"):
@@ -259,7 +275,8 @@ class PallasBackend(EStepBackend):
         return kops.memo_correction_pallas(cfg, exp_elog_beta,
                                            batch.token_ids, batch.counts,
                                            old_pi, visited,
-                                           pi_dtype=pi_dtype)
+                                           pi_dtype=pi_dtype,
+                                           delta_block_v=self.delta_block_v)
 
 
 _BACKENDS: Dict[str, EStepBackend] = {

@@ -75,8 +75,10 @@ class MemoStore:
     kind: str = "abstract"
     # wire dtype of the stored π: engines round π through it BEFORE the
     # add-new side of the correction so ⟨m_vk⟩ adds exactly what the store
-    # will later subtract (estep.quantize_pi) — the accumulator/memo
-    # identity is then an invariant even for low-precision stores
+    # will later subtract (estep.quantize_pi; the Pallas path rounds in
+    # its token-π kernel, so the segment-sum scatter already consumes the
+    # quantized rows) — the accumulator/memo identity is then an
+    # invariant even for low-precision stores
     pi_wire_dtype: str = "float32"
     num_docs: int
     max_unique: int

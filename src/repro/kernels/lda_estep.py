@@ -1,12 +1,7 @@
 """Pallas TPU kernels for the LDA E-step hotspot.
 
-Four kernels. The two *fused* kernels are the production path
-(`ops.estep_pallas` / `ops.memo_correction_pallas`); the two per-sweep
-kernels are kept as the legacy formulation (`ops.estep_pallas_sweeps`) and
-as the benchmark baseline.
+Production path (`ops.estep_pallas` / `ops.memo_correction_pallas`):
 
-Fused path
-----------
 * ``estep_fixed_point`` — the ENTIRE γ fixed point in one ``pallas_call``:
   grid ``(B-tiles, max_iters, V-tiles)`` with γ, Eθ and the sweep
   accumulator resident in VMEM scratch across grid steps. Each sweep
@@ -15,16 +10,19 @@ Fused path
   remaining sweeps to no-ops, and the sweep counter is emitted per tile.
   Nothing γ-shaped ever round-trips to HBM between sweeps — the old path
   paid one pallas_call per sweep plus a jnp Eθ recomputation per sweep.
-* ``memo_delta`` — token-aligned π AND the subtract-old/add-new scatter in
-  one kernel: for each (B-tile, V-tile) it forms π = Eθ⊙Eφ_tok/φnorm in
-  VMEM, then scatters cnt·π_new and cnt·π_old with a one-hot MXU matmul
-  (ids == V-tile rows) into per-B-tile partial (nb, V, K) sums — every
-  output block is written exactly once (Pallas TPU only guarantees
-  revisited output blocks when the revisits are grid-consecutive, and the
-  π output already pins the B axis outermost) — which the wrapper reduces
-  over nb in jnp. The IVI correction therefore needs **no (B, L, K) jnp
-  intermediates**: the only (B, L, K) array XLA sees is the Eφ token
-  gather feeding the kernel.
+* ``memo_delta`` — token-aligned π AND the subtract-old/add-new scatter as
+  a **segment-sum** over two kernels: the token-π kernel tiles the (B, L)
+  axes (the L grid axis — VMEM no longer bounds the corpus L) and forms
+  π = Eθ⊙Eφ_tok/φnorm per tile; the scatter kernel flattens the batch to
+  token rows and accumulates cnt·π_new / cnt·π_old into (V, K) over a
+  second-level **V-chunk grid axis** — the chunk axis is outermost, so
+  each (block_v, K) accumulator is revisited only by grid-consecutive row
+  tiles (the revisit pattern Pallas TPU defines) and hits HBM exactly once
+  per chunk. No dense (nb, V, K) one-hot partials exist anywhere, and the
+  IVI correction still needs **no (B, L, K) jnp intermediates**: the only
+  (B, L, K) array XLA sees is the Eφ token gather feeding the kernel.
+  The retired one-hot-partial formulation is kept as
+  ``memo_delta_onehot`` (benchmark baseline).
 
 Legacy per-sweep path
 ---------------------
@@ -44,6 +42,7 @@ contraction dimension. ``stream_dtype=bfloat16`` streams C and Eφ in bf16
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -203,10 +202,227 @@ def estep_fixed_point(c: jax.Array, eb: jax.Array, gamma0: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# fused token-π + memo-correction kernel
+# memo correction, production path: token-π kernel + segment-sum scatter
 # ---------------------------------------------------------------------------
 
-def _memo_delta_kernel(block_v: int, has_old: bool, quantize: bool, *refs):
+def _token_pi_kernel(quantize: bool, cnts_ref, ebtok_ref, et_ref, pi_ref):
+    """π = Eθ⊙Eφ_tok/φnorm for one (B-tile, L-tile); each block written once.
+
+    The L grid axis is what lifts the old ``L ≤ ~4k`` VMEM cap: the working
+    set is two (block_b, block_l, K) cubes regardless of the corpus L.
+    """
+    et = et_ref[...]                                   # (bB, K)
+    ebt = ebtok_ref[...]                               # (bB, bL, K)
+    cnts = cnts_ref[...]                               # (bB, bL)
+    p = (et[:, None, :] * ebt).sum(-1) + _EPS          # (bB, bL)
+    pi = et[:, None, :] * ebt / p[:, :, None]
+    pi = jnp.where(cnts[:, :, None] > 0, pi, 0.0)
+    if quantize:
+        # round through the memo store's wire dtype BEFORE the scatter,
+        # so ⟨m_vk⟩ adds exactly what the store will later subtract
+        pi = pi.astype(jnp.bfloat16).astype(jnp.float32)
+    pi_ref[...] = pi
+
+
+def _segment_scatter_kernel(has_old: bool, *refs):
+    """Segment-sum one tile of token rows into the current V chunk.
+
+    Grid ``(V-chunks, row-tiles)`` with the chunk axis OUTER: for a fixed
+    chunk ``j`` the (block_v, K) output block is revisited across the
+    grid-consecutive row tiles, which is exactly the revisit pattern Pallas
+    TPU defines for in-kernel accumulation — so the (V, K) masses build up
+    in VMEM and hit HBM once per chunk, with **no** per-B-tile (nb, V, K)
+    partials. Rows are segmented arithmetically: a row contributes to the
+    chunk its token id falls in (`iota == ids`, count-scaled), everything
+    else multiplies to zero — padded rows carry count 0 and are inert.
+    """
+    if has_old:
+        ids_ref, cnts_ref, wnew_ref, wold_ref, snew_ref, sold_ref = refs
+    else:
+        ids_ref, cnts_ref, wnew_ref, snew_ref = refs
+        wold_ref = sold_ref = None
+    j, t = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        snew_ref[...] = jnp.zeros_like(snew_ref)
+        if has_old:
+            sold_ref[...] = jnp.zeros_like(sold_ref)
+
+    bv = snew_ref.shape[0]
+    tb = ids_ref.shape[1]
+    rows = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bv, tb), 0)
+    # count-scaled segment selector: (bV, T) — doubles as the MXU scatter
+    # operand, so cnt·π never materialises as a separate row array
+    weights = jnp.where(rows == ids_ref[...], cnts_ref[...], 0.0)
+    snew_ref[...] += jax.lax.dot(weights, wnew_ref[...],
+                                 preferred_element_type=jnp.float32)
+    if has_old:
+        sold_ref[...] += jax.lax.dot(weights, wold_ref[...],
+                                     preferred_element_type=jnp.float32)
+
+
+# VMEM budgets: the token-π step holds two (block_b, block_l, K) fp32 cubes
+# (Eφ tokens in, π out); the scatter step holds the (block_v, T) selector
+# plus one or two (block_v, K) accumulators and (T, K) row tiles. Both kept
+# at half the 16 MB VMEM for the pipeline's double buffering.
+_PI_VMEM_BUDGET = 8 * 1024 * 1024
+_SEG_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def pi_tile_shape(b: int, l: int, k: int, *, block_b: int = 32,
+                  block_l: int = 512) -> Tuple[int, int]:
+    """(block_b, block_l) for the token-π kernel under the VMEM budget.
+
+    L longer than ``block_l`` is tiled by the L grid axis (the corpus L no
+    longer bounds VMEM); the B tile is then halved until the two
+    (block_b, block_l, K) cubes fit the step budget.
+    """
+    bl = l if l <= block_l else block_l
+    bb = min(block_b, b)
+    while bb > 1 and 2 * bb * bl * k * 4 > _PI_VMEM_BUDGET:
+        nxt = bb // 2
+        bb = nxt if b % nxt == 0 else 1    # keep the grid exact
+    return bb, bl
+
+
+def segment_scatter_blocks(k: int, vocab_size: int, has_old: bool, *,
+                           block_v: int | None = None,
+                           block_t: int = 128) -> Tuple[int, int]:
+    """(block_v, block_t) for the segment-sum scatter under its budget.
+
+    ``block_v`` is the second-level V-chunk: the largest multiple of 128
+    whose selector + accumulators fit ``_SEG_VMEM_BUDGET`` (capped at the
+    lane-aligned vocab, so small vocabs run V-resident in one chunk). The
+    scatter re-streams the token rows once per chunk, so bigger chunks mean
+    fewer re-streams — the chunk count is the path's traffic knob.
+    """
+    nacc = 2 if has_old else 1
+
+    def _step_bytes(vc):
+        return (vc * block_t + nacc * (vc * k + block_t * k)) * 4
+
+    if block_v is None:
+        block_v = 8192
+        while block_v > 128 and _step_bytes(block_v) > _SEG_VMEM_BUDGET:
+            block_v //= 2
+    block_v = min(block_v, _round_up(vocab_size, 128))
+    return block_v, block_t
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
+               etheta: jax.Array, vocab_size: int,
+               old_pi: jax.Array | None = None, *,
+               quantize: bool = False, block_b: int = 32,
+               block_l: int = 512, block_v: int | None = None,
+               block_t: int = 128, interpret: bool | None = None):
+    """Token-aligned π plus segment-summed new/old masses — two kernels.
+
+    Shapes: token_ids/counts (B, L), eb_tok (B, L, K) = Eφ[token_ids],
+    etheta (B, K). Returns (π (B, L, K), S_new (V, K)[, S_old (V, K)]):
+    S_new = Σ cnt·π_new and S_old = Σ cnt·π_old accumulated at the token
+    ids, so the IVI correction is ``S_new − S_old`` and the batch
+    sufficient statistics are ``S_new``.
+
+    Two ``pallas_call``s because the two outputs want opposite grid
+    orders: π blocks pin the (B, L) axes as owners (each written once),
+    while the (V, K) masses accumulate over ALL rows — which is only
+    TPU-safe with the V-chunk axis outermost (grid-consecutive revisits).
+    The first kernel tiles (B, L) — the **L grid axis** that removes the
+    old L ≤ ~4k VMEM cap — and emits π (quantized through the memo wire
+    dtype when asked). The second flattens the rows and segment-sums them
+    into (V, K) chunk by chunk: no dense (nb, V, K) one-hot partials
+    exist anywhere, the only transient beyond the outputs is the
+    row-padding remainder. The retired partial formulation is kept as
+    ``memo_delta_onehot`` (benchmark baseline).
+
+    B must divide by the effective B-tile (pad upstream with zero-count
+    rows); V and L are padded here (zero-count padding is inert).
+    """
+    b, l = token_ids.shape
+    k = etheta.shape[1]
+    has_old = old_pi is not None
+    interpret = _default_interpret(interpret)
+
+    # -- kernel 1: token-aligned π over the (B-tiles, L-tiles) grid -----
+    bb, bl = pi_tile_shape(b, l, k, block_b=block_b, block_l=block_l)
+    assert b % bb == 0, (b, bb)
+    lp = _round_up(l, bl)
+
+    def _pad_l(x):
+        if lp == l:
+            return x
+        pad = ((0, 0), (0, lp - l)) + ((0, 0),) * (x.ndim - 2)
+        return jnp.pad(x, pad)
+
+    ids_p, cnts_p, ebt_p = _pad_l(token_ids), _pad_l(counts), _pad_l(eb_tok)
+    nb, nl = b // bb, lp // bl
+    pi_pad = pl.pallas_call(
+        functools.partial(_token_pi_kernel, quantize),
+        grid=(nb, nl),
+        in_specs=[
+            pl.BlockSpec((bb, bl), lambda i, li: (i, li)),
+            pl.BlockSpec((bb, bl, k), lambda i, li: (i, li, 0)),
+            pl.BlockSpec((bb, k), lambda i, li: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bl, k), lambda i, li: (i, li, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lp, k), jnp.float32),
+        interpret=interpret,
+    )(cnts_p, ebt_p, etheta)
+
+    # -- kernel 2: segment-sum scatter over the V-chunk grid ------------
+    vc, tb = segment_scatter_blocks(k, vocab_size, has_old,
+                                    block_v=block_v, block_t=block_t)
+    rows = b * lp
+    tb = min(tb, rows)
+    rows_p = _round_up(rows, tb)
+    nt = rows_p // tb
+
+    def _flat_rows(x, width):
+        flat = x.reshape(rows, *((width,) if width else ()))
+        if rows_p == rows:
+            return flat
+        pad = ((0, rows_p - rows),) + ((0, 0),) * (flat.ndim - 1)
+        return jnp.pad(flat, pad)
+
+    ids2 = _flat_rows(ids_p, None).reshape(nt, tb)
+    cnts2 = _flat_rows(cnts_p, None).reshape(nt, tb)
+    wnew = _flat_rows(pi_pad, k)
+    inputs = [ids2, cnts2, wnew]
+    if has_old:
+        inputs.append(_flat_rows(_pad_l(old_pi), k))
+
+    vp = _round_up(vocab_size, vc)
+    row_spec = pl.BlockSpec((1, tb), lambda j, t: (t, 0))
+    w_spec = pl.BlockSpec((tb, k), lambda j, t: (t, 0))
+    acc_spec = pl.BlockSpec((vc, k), lambda j, t: (j, 0))
+    n_out = 2 if has_old else 1
+    outs = pl.pallas_call(
+        functools.partial(_segment_scatter_kernel, has_old),
+        grid=(vp // vc, nt),
+        in_specs=[row_spec, row_spec, w_spec] + [w_spec] * (n_out - 1),
+        out_specs=[acc_spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((vp, k), jnp.float32)] * n_out,
+        interpret=interpret,
+    )(*inputs)
+
+    pi = pi_pad if lp == l else pi_pad[:, :l]
+    snew = outs[0][:vocab_size]
+    if has_old:
+        return pi, snew, outs[1][:vocab_size]
+    return pi, snew
+
+
+# ---------------------------------------------------------------------------
+# legacy one-hot memo-correction kernel (benchmark baseline)
+# ---------------------------------------------------------------------------
+
+def _memo_delta_onehot_kernel(block_v: int, has_old: bool, quantize: bool,
+                              *refs):
     if has_old:
         (ids_ref, cnts_ref, ebtok_ref, oldpi_ref, et_ref,
          pi_ref, snew_ref, sold_ref) = refs
@@ -249,18 +465,17 @@ def _memo_delta_kernel(block_v: int, has_old: bool, quantize: bool, *refs):
                                     preferred_element_type=jnp.float32)[None]
 
 
-# VMEM budget for one memo_delta grid step (≈4 (block_b, L, K) fp32 cubes
-# plus the (block_v, block_b·L) one-hot), kept at half of the 16 MB VMEM to
-# leave room for the pipeline's double buffering. The wrapper halves
-# block_b until the step fits, so long token axes trade B-parallelism for
-# VMEM instead of overflowing it. The L axis itself is NOT tiled: even at
-# block_b = 1 the step needs ~4·L·K·4 bytes, i.e. L ≤ ~4k at K = 128.
+# VMEM budget for one one-hot memo_delta grid step (≈4 (block_b, L, K) fp32
+# cubes plus the (block_v, block_b·L) one-hot), kept at half of the 16 MB
+# VMEM to leave room for the pipeline's double buffering. The wrapper
+# halves block_b until the step fits; the L axis is NOT tiled here, which
+# is the L ≤ ~4k cap the segment-sum path removes.
 _DELTA_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def delta_effective_block_b(b: int, l: int, k: int, *, block_b: int = 32,
                             block_v: int = 128, has_old: bool = True) -> int:
-    """The B-tile ``memo_delta`` actually runs after the VMEM guard.
+    """The B-tile ``memo_delta_onehot`` actually runs after the VMEM guard.
 
     Larger B-tiles mean fewer (nb, V, K) partial blocks to spill and
     reduce, so the default starts at 32 and is halved until the per-step
@@ -280,22 +495,20 @@ def delta_effective_block_b(b: int, l: int, k: int, *, block_b: int = 32,
     return block_b
 
 
-def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
-               etheta: jax.Array, vocab_size: int,
-               old_pi: jax.Array | None = None, *,
-               quantize: bool = False, block_b: int = 32, block_v: int = 128,
-               interpret: bool | None = None):
-    """Token-aligned π plus one-hot-scattered new/old masses in one kernel.
+def memo_delta_onehot(token_ids: jax.Array, counts: jax.Array,
+                      eb_tok: jax.Array, etheta: jax.Array, vocab_size: int,
+                      old_pi: jax.Array | None = None, *,
+                      quantize: bool = False, block_b: int = 32,
+                      block_v: int = 128, interpret: bool | None = None):
+    """RETIRED production path, kept as the benchmark baseline.
 
-    Shapes: token_ids/counts (B, L), eb_tok (B, L, K) = Eφ[token_ids],
-    etheta (B, K). Returns (π (B, L, K), S_new (V, K)[, S_old (V, K)]):
-    S_new = Σ cnt·π_new and S_old = Σ cnt·π_old scattered at the token
-    ids, so the IVI correction is ``S_new − S_old`` and the batch
-    sufficient statistics are ``S_new`` — with every (B, L, K)
-    intermediate living only in VMEM tiles. The kernel emits per-B-tile
-    (nb, V, K) partials (each grid step owns its output block outright —
-    the TPU-safe pattern; see ``_memo_delta_kernel``) which are reduced
-    over nb here before returning.
+    Same contract as ``memo_delta``, via the dense one-hot formulation: one
+    kernel forms π and scatters cnt·π_new / cnt·π_old with a one-hot MXU
+    matmul into per-B-tile (nb, V, K) partials (each output block written
+    exactly once — the TPU-safe revisit discipline), reduced over nb in
+    jnp here. Those partials are the cost the segment-sum path removes:
+    ~2·nb·V·K fp32 of transient HBM per batch (~2.5 GB at Arxiv V=142k),
+    and with the L axis untiled the VMEM guard caps L at ~4k (K=128).
 
     B must divide by ``block_b`` (pad upstream; ``block_b`` is halved
     automatically until the VMEM step budget holds, see
@@ -330,7 +543,8 @@ def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
         out_shape.append(jax.ShapeDtypeStruct((nb, vp, k), jnp.float32))
 
     outs = pl.pallas_call(
-        functools.partial(_memo_delta_kernel, block_v, has_old, quantize),
+        functools.partial(_memo_delta_onehot_kernel, block_v, has_old,
+                          quantize),
         grid=(nb, nv),
         in_specs=in_specs,
         out_specs=out_specs,

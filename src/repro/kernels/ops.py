@@ -5,14 +5,15 @@
 ``LDAConfig(estep_backend="pallas")``): it pads (B, V, K) to the kernel
 block grid, runs the WHOLE γ fixed point in one ``pallas_call``
 (`lda_estep.estep_fixed_point`), and recovers token-aligned π and the
-sufficient statistics with the fused ``memo_delta`` kernel — two kernel
-launches per E-step, none of them inside a ``while`` loop, and no
-(B, L, K) jnp intermediates beyond the Eφ token gather that feeds the
-kernel.
+sufficient statistics with the segment-sum ``memo_delta`` pair (token-π
+kernel + V-chunk scatter) — three kernel launches per E-step, none of
+them inside a ``while`` loop, no (B, L, K) jnp intermediates beyond the
+Eφ token gather that feeds the kernels, and no dense (nb, V, K) scatter
+partials.
 
 ``memo_correction_pallas`` is the IVI hot path behind
-``core.estep.PallasBackend.solve_correction``: the same two launches also
-emit the subtract-old/add-new correction ``S_new − S_old`` directly.
+``core.estep.PallasBackend.solve_correction``: the same three launches
+also emit the subtract-old/add-new correction ``S_new − S_old`` directly.
 
 ``estep_pallas_sweeps`` keeps the pre-fusion formulation (one
 ``pallas_call`` per sweep inside ``lax.while_loop`` + a separate sstats
@@ -125,8 +126,12 @@ def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                  gamma0: Optional[jax.Array] = None, *,
                  block_b: int = 128, block_v: int = 512,
                  delta_block_b: int = 32,
-                 delta_block_v: int = 128) -> EStepResult:
-    """Fused batched E-step: fixed-point kernel + memo_delta kernel."""
+                 delta_block_v: Optional[int] = None) -> EStepResult:
+    """Fused batched E-step: fixed-point kernel + memo_delta pair.
+
+    ``delta_block_v`` is the scatter's V-chunk (None → the VMEM-budget
+    policy ``lda_estep.segment_scatter_blocks``).
+    """
     bsz = token_ids.shape[0]
     gamma, et, iters = _run_fixed_point(cfg, exp_elog_beta, token_ids,
                                         counts, gamma0, block_b, block_v)
@@ -146,15 +151,19 @@ def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                            old_pi: jax.Array, visited: jax.Array, *,
                            pi_dtype: str = "float32",
                            block_b: int = 128, block_v: int = 512,
-                           delta_block_b: int = 32, delta_block_v: int = 128
+                           delta_block_b: int = 32,
+                           delta_block_v: Optional[int] = None
                            ) -> Tuple[jax.Array, jax.Array, EStepResult]:
     """Fused IVI hot path: E-step + subtract-old/add-new correction.
 
     Returns (correction (V, K), first-visit word count, EStepResult) —
     exactly the `EStepBackend.solve_correction` contract. The correction
-    is ``S_new − S_old`` from the one-hot scatters of the ``memo_delta``
-    kernel; the only (B, L, K) jnp array in the jaxpr is the Eφ token
-    gather feeding the kernel (old_pi is an *input*, not an intermediate).
+    is ``S_new − S_old`` from the segment-sum scatters of the
+    ``memo_delta`` pair; the only (B, L, K) jnp array in the jaxpr is the
+    Eφ token gather feeding the kernels (old_pi is an *input*, not an
+    intermediate), and no (nb, V, K) scatter partials exist.
+    ``delta_block_v`` is the scatter's V-chunk (None → the VMEM-budget
+    policy ``lda_estep.segment_scatter_blocks``).
     """
     if pi_dtype not in ("float32", "bfloat16"):
         # the in-kernel quantize only implements the bf16 wire; refuse

@@ -264,6 +264,48 @@ def pallas_call_sites(fn, *args, **kwargs) -> Dict[str, int]:
     return counts
 
 
+def dense_vocab_cubes(fn, vocab_size: int, *args, **kwargs) -> int:
+    """Count rank-≥3 jaxpr values carrying a vocab-sized axis.
+
+    The one-hot ``memo_delta`` emitted (nb, V, K) scatter partials — rank-3
+    arrays with a (padded) vocab axis that exist only to be reduced. The
+    segment-sum path must produce **zero** such values: its (V, K) masses
+    are rank 2 and its only rank-3 arrays are (B, L, K) token cubes. An
+    axis counts as vocab-sized only inside the lane-padding window
+    ``[V, round_up(V, 128)]`` — the extent a vocab axis can actually take
+    in the launch structure — NOT for any axis ≥ V, or a long token axis
+    (L ≥ V is routine for small-vocab shapes) would trip the guard.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs) if callable(fn) else fn
+    vocab_pad = ((vocab_size + 127) // 128) * 128
+    count = 0
+
+    def sub_jaxprs(eqn):
+        for v in eqn.params.values():
+            if isinstance(v, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                yield v
+            elif isinstance(v, (tuple, list)):
+                for x in v:
+                    if isinstance(x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                        yield x
+
+    def walk(jx):
+        nonlocal count
+        if isinstance(jx, jax.core.ClosedJaxpr):
+            jx = jx.jaxpr
+        for eqn in jx.eqns:
+            for ov in eqn.outvars:
+                shape = getattr(ov.aval, "shape", ())
+                if len(shape) >= 3 and any(vocab_size <= d <= vocab_pad
+                                           for d in shape):
+                    count += 1
+            for sub in sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    return count
+
+
 def _dot_flops(ins: Instr, defs: Dict[str, str]) -> float:
     """2 × numel(result) × contraction size for a dot instruction.
 

@@ -157,13 +157,16 @@ def main() -> None:
           f"backend={inf.cfg.estep_backend}: {docs / wall:.1f} docs/s")
     print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
           f"p99={pct['p99']:.1f} max={max(lat):.1f}")
-    print(f"jit cache: {len(inf.cache_info())} widths "
-          f"{sorted(inf.cache_info())}")
+    cache = inf.cache_info()
+    print(f"jit cache: {cache['jit_entries']} compiled widths "
+          f"{cache['compiled_widths']} "
+          f"(batches per width: {cache['batches_per_width']})")
     if args.out:
         rec = {"mode": "serve", "backend": inf.cfg.estep_backend,
                "batch": args.batch, "requests": args.requests,
                "docs_per_s": docs / wall, "latency_ms": pct,
-               "jit_widths": sorted(inf.cache_info()), "ok": True}
+               "jit_widths": cache["compiled_widths"],
+               "batches_per_width": cache["batches_per_width"], "ok": True}
         with open(args.out, "a") as f:
             f.write(json.dumps(rec) + "\n")
 

@@ -48,6 +48,16 @@ def _serving_buckets(counts: np.ndarray, boundaries=_WIDTH_BOUNDARIES):
     the observed halves ``predictive.split_heldout`` produces. Bucketing
     by the LAST live column keeps the ``[:width]`` slice lossless for any
     layout; interior zero-count slots are harmless (the E-step masks them).
+
+    EMPTY documents (no live slot at all, ``last == 0``) are real serving
+    traffic — requests whose every token fell outside the vocabulary —
+    and must not fall through the bucket ladder: a dropped row would leave
+    its γ all-zero in ``posterior`` and ``transform`` would then normalise
+    a zero vector. They ride the smallest bucket (the ``last <= w`` test
+    of the first rung, whose lower bound is inclusive at 0), where the
+    E-step leaves their γ at the prior α₀ in one sweep, i.e. the prior
+    posterior. Every document lands in exactly one bucket — ``posterior``
+    asserts the cover.
     """
     d, l = counts.shape
     live = counts > 0
@@ -55,11 +65,9 @@ def _serving_buckets(counts: np.ndarray, boundaries=_WIDTH_BOUNDARIES):
     last = np.where(live.any(1), l - np.argmax(live[:, ::-1], axis=1), 0)
     widths = sorted({min(b, l) for b in boundaries if b < l} | {l})
     out = []
-    lo = 0
+    lo = -1                   # first rung includes last == 0 (empty docs)
     for w in widths:
         rows = np.nonzero((last > lo) & (last <= w))[0]
-        if lo == 0:
-            rows = np.union1d(rows, np.nonzero(last == 0)[0])
         if len(rows):
             out.append((rows.astype(np.int64), int(w)))
         lo = w
@@ -98,13 +106,21 @@ class TopicInferencer:
 
     # -- core -----------------------------------------------------------
     def posterior(self, corpus: Corpus) -> np.ndarray:
-        """γ (D, K) for every document, bucketed + fixed-batch padded."""
+        """γ (D, K) for every document, bucketed + fixed-batch padded.
+
+        Empty documents (all-zero counts) come back at the prior γ = α₀ —
+        see ``_serving_buckets`` — so no row of the result can be the
+        all-zero vector ``transform`` would fail to normalise.
+        """
         d = corpus.num_docs
         out = np.zeros((d, self.cfg.num_topics), np.float32)
         ids_all = np.asarray(corpus.token_ids)
         cnts_all = np.asarray(corpus.counts)
         b = self.batch_size
-        for rows_all, width in _serving_buckets(cnts_all):
+        buckets = _serving_buckets(cnts_all)
+        covered = sum(len(rows) for rows, _ in buckets)
+        assert covered == d, (covered, d)     # every doc in exactly one bucket
+        for rows_all, width in buckets:
             for lo in range(0, len(rows_all), b):
                 rows = rows_all[lo:lo + b]
                 ids = np.zeros((b, width), np.int32)
@@ -125,9 +141,25 @@ class TopicInferencer:
         return np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
 
     # -- introspection ---------------------------------------------------
-    def cache_info(self) -> Dict[int, int]:
-        """{bucket width: batches served} — one jit entry per key."""
-        return dict(self._compiled_widths)
+    def cache_info(self) -> Dict[str, object]:
+        """Serving-cache introspection — counters and compilations apart.
+
+        ``_compiled_widths`` counts *batches served* per width, NOT jit
+        entries (a width served twice still holds one compiled
+        executable), so the two quantities are reported separately:
+
+        * ``batches_per_width`` — {bucket width: batches served through
+          it}, a traffic histogram;
+        * ``compiled_widths``   — the sorted set of widths that have
+          compiled an executable (the keys above);
+        * ``jit_entries``       — its size: the number of compiled
+          executables the fixed ``batch_size`` bounds.
+        """
+        return {
+            "batches_per_width": dict(self._compiled_widths),
+            "compiled_widths": sorted(self._compiled_widths),
+            "jit_entries": len(self._compiled_widths),
+        }
 
 
 def topic_posterior(cfg: LDAConfig, lam: jax.Array, corpus: Corpus, *,

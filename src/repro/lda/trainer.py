@@ -279,11 +279,17 @@ class DIVITrainer(Trainer):
     run_pass = run_step
 
     def evaluate(self) -> Dict[str, float]:
+        """Periodic evaluation snapshot — mirrors ``LDAEngine.evaluate``:
+        held-out LPP with a test corpus, otherwise the memoized corpus
+        bound (``full_bound``) so distributed runs report ``elbo`` too."""
         out: Dict[str, float] = {}
         if self._obs is not None:
             out["lpp"] = float(log_predictive(self.cfg, self.eng.lam,
                                               self._obs, self._held))
             self.history.lpp.append(out["lpp"])
+        else:
+            out["elbo"] = self.full_bound()
+            self.history.elbo.append(out["elbo"])
         self.history.docs_seen.append(self.docs_seen)
         self.history.wall.append(time.perf_counter() - self._t0)
         return out
@@ -292,9 +298,35 @@ class DIVITrainer(Trainer):
         self._obs, self._held = split_heldout(corpus, seed=seed)
 
     def full_bound(self) -> float:
-        raise NotImplementedError(
-            "the corpus bound is not wired for the sharded memo; evaluate "
-            "held-out LPP instead (Trainer.evaluate with a test corpus)")
+        """Memoized corpus ELBO over the sharded worker memos.
+
+        An all-gather-free per-shard reduction: each worker's slice of the
+        (W, D_w, L, K) memo is viewed as its own ``DenseMemoStore`` and
+        contributes its documents' word/θ terms through the same
+        chunk-by-chunk read-through the single-host engines use
+        (`bound.elbo_memoized_docs`); the λ-Dirichlet topics term enters
+        once at the end. The full memo is never materialised in one piece
+        — peak extra memory is one worker shard. The bound covers the
+        sharded corpus, i.e. the ``num_docs % num_workers`` tail documents
+        ``shard_corpus`` drops are excluded, exactly as they are excluded
+        from training.
+        """
+        from repro.core.bound import _topics_term, elbo_memoized_docs
+        from repro.core.math import dirichlet_expectation
+        from repro.core.memo import DenseMemoStore
+
+        eng = self.eng
+        lam = eng.state.lam
+        elog_beta = dirichlet_expectation(lam, axis=0)
+        total = 0.0
+        for w in range(self.dcfg.num_workers):
+            store_w = DenseMemoStore(pi=eng.shard.pi[w],
+                                     visited=eng.shard.visited[w])
+            corpus_w = Corpus(token_ids=eng.shard.token_ids[w],
+                              counts=eng.shard.counts[w])
+            total += float(elbo_memoized_docs(self.cfg, corpus_w, store_w,
+                                              elog_beta))
+        return total + float(_topics_term(self.cfg, lam))
 
     # -- durable state --------------------------------------------------
     def capture(self):

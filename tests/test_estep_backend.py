@@ -21,12 +21,12 @@ import pytest
 
 from repro.core import LDAConfig, LDAEngine
 from repro.core.estep import (BowBatch, estep_gather, get_backend,
-                              scatter_sstats, warm_start_gamma)
+                              quantize_pi, scatter_sstats, warm_start_gamma)
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.memo import make_memo_store, memo_footprint_bytes
 from repro.core.types import Corpus
 from repro.data.bow import bucket_corpus, bucket_padding_stats, corpus_from_docs
-from repro.launch.hlo_analysis import pallas_call_sites
+from repro.launch.hlo_analysis import dense_vocab_cubes, pallas_call_sites
 
 BACKENDS = ("gather", "dense", "pallas")
 
@@ -172,27 +172,128 @@ def test_bucketed_epoch_covers_and_shrinks_padding(tiny_corpus):
 
 
 def test_fused_pallas_launch_structure():
-    """One pallas_call per fixed point: no kernel under a while/scan and
-    no (B, L, K) jnp arithmetic in the fused correction jaxpr — the
-    regression guard that keeps the Pallas path from rotting back to
-    per-sweep launches."""
+    """One pallas_call per fixed point plus the memo_delta pair: no kernel
+    under a while/scan, no (B, L, K) jnp arithmetic, and ZERO dense
+    vocab-sized rank-3 values (the (nb, V, K) one-hot partials the
+    segment-sum scatter eliminates) in the fused correction jaxpr."""
     cfg, corpus, eb = _ragged_batch(2)
     batch = BowBatch(corpus.token_ids, corpus.counts)
     old_pi = jnp.zeros(corpus.token_ids.shape + (cfg.num_topics,))
     visited = jnp.zeros((corpus.num_docs,), bool)
 
-    fused = pallas_call_sites(
-        lambda: get_backend("pallas").solve_correction(cfg, eb, batch,
-                                                       old_pi, visited))
-    assert fused["total"] == 2, fused           # fixed point + memo_delta
+    def fused_corr():
+        return get_backend("pallas").solve_correction(cfg, eb, batch,
+                                                      old_pi, visited)
+
+    fused = pallas_call_sites(fused_corr)
+    # fixed point + token-π + segment scatter
+    assert fused["total"] == 3, fused
     assert fused["under_loop"] == 0, fused
     assert fused["blk_intermediates"] == 0, fused
+    assert dense_vocab_cubes(fused_corr, cfg.vocab_size) == 0
+
+    # the retired one-hot baseline DOES allocate the dense partials — the
+    # guard must be able to see them, or the zero above proves nothing
+    from repro.kernels import lda_estep
+    eb_tok = eb[corpus.token_ids]
+    et = jnp.ones((corpus.num_docs, cfg.num_topics), jnp.float32)
+    assert dense_vocab_cubes(
+        lambda: lda_estep.memo_delta_onehot(
+            corpus.token_ids, corpus.counts, eb_tok, et, cfg.vocab_size,
+            old_pi=old_pi, block_b=4),
+        cfg.vocab_size) > 0
 
     from repro.kernels.ops import estep_pallas_sweeps
     legacy = pallas_call_sites(
         lambda: estep_pallas_sweeps(cfg, eb, corpus.token_ids,
                                     corpus.counts))
     assert legacy["under_loop"] >= 1            # the old one-launch-per-sweep
+
+
+def test_pallas_correction_long_token_axis():
+    """L=8192 — far past the one-hot path's ~4k VMEM cap — must match the
+    jnp backend at fp32 tolerance (the L grid axis acceptance bar)."""
+    b, l, vocab, k = 4, 8192, 300, 8
+    rng = np.random.default_rng(11)
+    ids = jnp.asarray(rng.integers(0, vocab, (b, l)).astype(np.int32))
+    cnts = jnp.asarray((rng.poisson(0.8, (b, l))).astype(np.float32))
+    cfg = LDAConfig(num_topics=k, vocab_size=vocab, estep_max_iters=15,
+                    estep_backend="pallas")
+    lam = jax.random.gamma(jax.random.key(4), 100.0, (vocab, k)) * 0.01
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    batch = BowBatch(ids, cnts)
+    visited = jnp.asarray(rng.random(b) < 0.5)
+    base = get_backend("gather").solve(cfg, eb, batch)
+    old_pi = jnp.where(visited[:, None, None], base.pi, 0.0)
+    want = get_backend("gather").solve_correction(cfg, eb, batch, old_pi,
+                                                  visited)
+    got = get_backend("pallas").solve_correction(cfg, eb, batch, old_pi,
+                                                 visited)
+    np.testing.assert_allclose(got[0], want[0], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(got[2].pi, want[2].pi, rtol=2e-3, atol=1e-4)
+    # L >= V here: the dense-partial guard must not mistake the (B, L, K)
+    # token cubes' long L axis for a vocab axis
+    assert dense_vocab_cubes(
+        lambda: get_backend("pallas").solve_correction(cfg, eb, batch,
+                                                       old_pi, visited),
+        cfg.vocab_size) == 0
+
+
+def test_pallas_correction_non_resident_vocab():
+    """A non-lane-multiple vocab large enough to need several V chunks
+    (forced via a small block_v) must match the jnp backend — the
+    non-V-resident acceptance shape, run in interpret mode."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(12)
+    b, l, vocab, k = 8, 40, 4999, 12
+    ids = jnp.asarray(rng.integers(0, vocab, (b, l)).astype(np.int32))
+    cnts = jnp.asarray((rng.poisson(1.0, (b, l)) + 1).astype(np.float32))
+    cfg = LDAConfig(num_topics=k, vocab_size=vocab, estep_max_iters=20,
+                    estep_backend="pallas")
+    lam = jax.random.gamma(jax.random.key(5), 100.0, (vocab, k)) * 0.01
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    batch = BowBatch(ids, cnts)
+    old_pi = jnp.zeros((b, l, k), jnp.float32)
+    visited = jnp.zeros((b,), bool)
+    want = get_backend("gather").solve_correction(cfg, eb, batch, old_pi,
+                                                  visited)
+    got = kops.memo_correction_pallas(cfg, eb, ids, cnts, old_pi, visited,
+                                      delta_block_v=512)   # 10 V chunks
+    np.testing.assert_allclose(got[0], want[0], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(got[2].sstats, want[2].sstats,
+                               rtol=1e-2, atol=2e-3)
+
+
+def test_pallas_correction_bf16_wire_segment_parity():
+    """Under a bf16 memo wire the segment-sum path must return the SAME
+    rounded π as the jnp backend and masses consistent with scattering
+    exactly those rounded values (the store invariant across the new
+    scatter)."""
+    cfg, corpus, eb = _ragged_batch(5)
+    batch = BowBatch(corpus.token_ids, corpus.counts)
+    rng = np.random.default_rng(5)
+    base = get_backend("gather").solve(cfg, eb, batch)
+    visited = jnp.asarray(rng.random(corpus.num_docs) < 0.5)
+    old_pi = jnp.where(visited[:, None, None],
+                       quantize_pi(base.pi, "bfloat16"), 0.0)
+    want = get_backend("gather").solve_correction(cfg, eb, batch, old_pi,
+                                                  visited,
+                                                  pi_dtype="bfloat16")
+    got = get_backend("pallas").solve_correction(cfg, eb, batch, old_pi,
+                                                 visited,
+                                                 pi_dtype="bfloat16")
+    # the rounded π must be bf16-representable and agree across backends
+    pi = np.asarray(got[2].pi)
+    np.testing.assert_array_equal(
+        pi, np.asarray(quantize_pi(jnp.asarray(pi), "bfloat16")))
+    np.testing.assert_allclose(pi, np.asarray(want[2].pi),
+                               rtol=2e-3, atol=2e-3)
+    # and the masses are the scatter of exactly those rounded rows
+    rebuilt = scatter_sstats(corpus.token_ids,
+                             corpus.counts[:, :, None] * got[2].pi,
+                             cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(got[2].sstats),
+                               np.asarray(rebuilt), rtol=1e-4, atol=1e-4)
 
 
 def test_engine_end_to_end_pallas_backend(tiny_corpus):

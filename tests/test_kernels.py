@@ -99,11 +99,11 @@ def _memo_delta_refs(ids, cnts, ebt, et, v):
     (64, 32, 16),    # nb = 4: the multi-partial reduction path
     (32, 512, 32),   # VMEM guard halves block_b (32 → 4 at L=512, K=128)
 ])
-def test_memo_delta_multi_tile_partials(b, l, block_b, rng):
-    """The (nb, V, K) partial scheme must match the jnp scatter with nb ≥ 2
-    B-tiles and when the VMEM guard shrinks the tile — shapes at which the
-    old cross-tile output accumulation (TPU-undefined) was actually
-    exercised; nb = 1 degenerates to a single block and cannot catch it."""
+def test_memo_delta_onehot_multi_tile_partials(b, l, block_b, rng):
+    """The retired (nb, V, K) partial scheme (the benchmark baseline) must
+    still match the jnp scatter with nb ≥ 2 B-tiles and when the VMEM
+    guard shrinks the tile — shapes at which the old cross-tile output
+    accumulation (TPU-undefined) was actually exercised."""
     v, k = 700, 128
     ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
     cnts = jnp.asarray(rng.poisson(1.0, (b, l)).astype(np.float32))
@@ -112,14 +112,74 @@ def test_memo_delta_multi_tile_partials(b, l, block_b, rng):
     opi = jnp.asarray(rng.random((b, l, k)).astype(np.float32))
     assert b // lda_estep.delta_effective_block_b(
         b, l, k, block_b=block_b) >= 2          # the shapes must fan out
-    pi, snew, sold = lda_estep.memo_delta(ids, cnts, ebt, et, v,
-                                          old_pi=opi, block_b=block_b)
+    pi, snew, sold = lda_estep.memo_delta_onehot(ids, cnts, ebt, et, v,
+                                                 old_pi=opi, block_b=block_b)
     pref, sref = _memo_delta_refs(ids, cnts, ebt, et, v)
     soldref = jnp.zeros((v, k)).at[ids.reshape(-1)].add(
         (cnts[:, :, None] * opi).reshape(-1, k))
     np.testing.assert_allclose(pi, pref, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(snew, sref, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(sold, soldref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,l,v,kwargs", [
+    # L grid axis: 2 L-tiles × 2 B-tiles (the old path capped L at ~4k —
+    # this exercises the tiling machinery, test_estep_backend covers 8192)
+    (8, 700, 300, dict(block_l=512, block_b=4)),
+    # V-chunk grid axis: 6 chunks over a non-lane-multiple vocab, and a
+    # row count that pads up to the T tile
+    (12, 37, 700, dict(block_v=128, block_t=64)),
+    # single-chunk V-resident degenerate case
+    (16, 24, 200, dict()),
+])
+def test_memo_delta_segment_grid(b, l, v, kwargs, rng):
+    """The segment-sum scatter must match the jnp scatter across the
+    (B, L) tiling of the token-π kernel and the V-chunk grid of the
+    accumulator — including padded L remainders and padded row tiles,
+    which must stay inert (count 0)."""
+    k = 128
+    ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+    cnts = jnp.asarray(rng.poisson(1.0, (b, l)).astype(np.float32))
+    ebt = jnp.asarray(rng.gamma(1.0, 1.0, (b, l, k)).astype(np.float32))
+    et = jnp.asarray(rng.gamma(1.0, 1.0, (b, k)).astype(np.float32))
+    opi = jnp.asarray(rng.random((b, l, k)).astype(np.float32))
+    pi, snew, sold = lda_estep.memo_delta(ids, cnts, ebt, et, v,
+                                          old_pi=opi, **kwargs)
+    pref, sref = _memo_delta_refs(ids, cnts, ebt, et, v)
+    soldref = jnp.zeros((v, k)).at[ids.reshape(-1)].add(
+        (cnts[:, :, None] * opi).reshape(-1, k))
+    np.testing.assert_allclose(pi, pref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(snew, sref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sold, soldref, rtol=1e-4, atol=1e-4)
+
+
+def test_memo_delta_matches_onehot_baseline(rng):
+    """Segment-sum and the retired one-hot baseline agree bit-for-bit in
+    what they compute (π) and to fp32 summation tolerance in the masses —
+    the 'measured, not asserted' bridge BENCH_estep quantifies."""
+    b, l, v, k = 16, 48, 500, 64
+    ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+    cnts = jnp.asarray(rng.poisson(1.0, (b, l)).astype(np.float32))
+    ebt = jnp.asarray(rng.gamma(1.0, 1.0, (b, l, k)).astype(np.float32))
+    et = jnp.asarray(rng.gamma(1.0, 1.0, (b, k)).astype(np.float32))
+    seg = lda_estep.memo_delta(ids, cnts, ebt, et, v, quantize=True)
+    one = lda_estep.memo_delta_onehot(ids, cnts, ebt, et, v, quantize=True)
+    np.testing.assert_array_equal(np.asarray(seg[0]), np.asarray(one[0]))
+    np.testing.assert_allclose(seg[1], one[1], rtol=1e-4, atol=1e-4)
+
+
+def test_segment_scatter_blocks_policy():
+    """The V-chunk policy stays lane-aligned, under budget, and V-resident
+    for small vocabs."""
+    f = lda_estep.segment_scatter_blocks
+    vc, tb = f(128, 141_952, True)
+    assert vc % 128 == 0 and vc >= 2048            # big vocabs: few chunks
+    assert (vc * tb + 2 * (vc * 128 + tb * 128)) * 4 <= 8 * 1024 * 1024
+    assert f(128, 700, True)[0] == 768             # V-resident, lane-aligned
+    assert f(128, 4096, False)[0] == 4096
+    bb, bl = lda_estep.pi_tile_shape(32, 8192, 128)
+    assert bl == 512 and 2 * bb * bl * 128 * 4 <= 8 * 1024 * 1024
+    assert 32 % bb == 0
 
 
 def test_delta_effective_block_b_guard():

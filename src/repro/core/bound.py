@@ -91,13 +91,74 @@ def elbo_memoized_store(cfg: LDAConfig, corpus: Corpus, store,
 
 
 @partial(jax.jit, static_argnames=("cfg",))
+def _collapsed_doc_terms(cfg: LDAConfig, token_ids: jax.Array,
+                         counts: jax.Array, gamma: jax.Array,
+                         elog_beta: jax.Array) -> jax.Array:
+    """Per-document collapsed-π terms: words + θ-Dirichlet pieces."""
+    elog_theta = dirichlet_expectation(gamma)              # (B, K)
+    eb = elog_beta[token_ids]                              # (B, L, K)
+    lse = logsumexp(elog_theta[:, None, :] + eb, axis=-1)  # (B, L)
+    words = jnp.sum(counts * lse)
+    return words + dirichlet_elbo_term(gamma, cfg.alpha0, elog_theta, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
 def elbo_collapsed(cfg: LDAConfig, corpus: Corpus, gamma: jax.Array,
                    lam: jax.Array) -> jax.Array:
     """ELBO with π at its optimum given (γ, λ)."""
-    elog_theta = dirichlet_expectation(gamma)              # (D, K)
     elog_beta = dirichlet_expectation(lam, axis=0)         # (V, K)
-    eb = elog_beta[corpus.token_ids]                       # (D, L, K)
-    lse = logsumexp(elog_theta[:, None, :] + eb, axis=-1)  # (D, L)
-    words = jnp.sum(corpus.counts * lse)
-    theta_term = dirichlet_elbo_term(gamma, cfg.alpha0, elog_theta, axis=-1)
-    return words + theta_term + _topics_term(cfg, lam)
+    docs = _collapsed_doc_terms(cfg, corpus.token_ids, corpus.counts,
+                                gamma, elog_beta)
+    return docs + _topics_term(cfg, lam)
+
+
+# ---------------------------------------------------------------------------
+# stream-fed variants: no (D, L) corpus resident, chunk-by-chunk read-through
+# ---------------------------------------------------------------------------
+
+def elbo_memoized_stream(cfg: LDAConfig, stream, store, lam: jax.Array, *,
+                         batch_docs: int = 512) -> jax.Array:
+    """The memoized ELBO when the corpus is a ``DocStream``.
+
+    The streaming analogue of ``elbo_memoized_store``: documents are pulled
+    and padded ``batch_docs`` at a time (`data.stream.iter_padded_chunks`,
+    sequential — the same doc order ``MemoStore.iter_chunks`` walks), the
+    matching memo rows gathered, and each chunk's word/θ terms accumulated;
+    the λ-Dirichlet topics term enters once. Peak resident corpus state is
+    one chunk.
+    """
+    import numpy as np
+
+    from repro.data.stream import iter_padded_chunks
+
+    elog_beta = dirichlet_expectation(lam, axis=0)
+    total = jnp.zeros(())
+    for start, ids, cnts in iter_padded_chunks(stream, batch_docs,
+                                               stream.max_unique):
+        pi, _vis = store.gather(np.arange(start, start + ids.shape[0]))
+        cnts_j = jnp.asarray(cnts)
+        gamma = cfg.alpha0 + jnp.einsum("blk,bl->bk", pi, cnts_j)
+        total = total + _memoized_doc_terms(cfg, jnp.asarray(ids), cnts_j,
+                                            gamma, pi, elog_beta)
+    return total + _topics_term(cfg, lam)
+
+
+def elbo_collapsed_stream(cfg: LDAConfig, stream, lam: jax.Array, *,
+                          batch_docs: int = 512) -> jax.Array:
+    """Collapsed corpus bound over a ``DocStream`` (the MVI/SVI monitoring
+    path): a fresh token-gather E-step per chunk, doc terms accumulated,
+    topics term once — never a full-corpus (D, L, K) intermediate."""
+    from repro.core.estep import estep_gather
+    from repro.core.math import exp_dirichlet_expectation
+    from repro.data.stream import iter_padded_chunks
+
+    elog_beta = dirichlet_expectation(lam, axis=0)
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    total = jnp.zeros(())
+    for _start, ids, cnts in iter_padded_chunks(stream, batch_docs,
+                                                stream.max_unique):
+        ids_j, cnts_j = jnp.asarray(ids), jnp.asarray(cnts)
+        res = estep_gather(cfg, eb, ids_j, cnts_j)
+        total = total + _collapsed_doc_terms(cfg, ids_j, cnts_j, res.gamma,
+                                             elog_beta)
+    return total + _topics_term(cfg, lam)

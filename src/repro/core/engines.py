@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bound import elbo_collapsed, elbo_memoized_store
+from repro.core.bound import (elbo_collapsed, elbo_collapsed_stream,
+                              elbo_memoized_store, elbo_memoized_stream)
 from repro.core import estep as estep_mod
 from repro.core.estep import BowBatch, estep, get_backend
 from repro.core.math import exp_dirichlet_expectation
@@ -235,36 +236,80 @@ class History:
 class LDAEngine:
     """Host driver: shuffling, mini-batching, evaluation, timing.
 
+    ``corpus`` may be a padded ``Corpus`` (the materialized path) or a
+    ``repro.data.stream.DocStream`` — ragged documents pulled and packed
+    per mini-batch (`repro.data.stream.BatchPacker`), so no ``(D, L)``
+    padded corpus is ever resident. One pass over the stream is one epoch
+    (stream order — a stream cannot be permuted); packing is
+    bit-transparent, so a stream-fed run reproduces the materialized run's
+    trajectory exactly under the same batch schedule
+    (tests/test_stream_pipeline.py). MVI (full batch) and the γ-only
+    store (π reconstructed from resident corpus rows) need the
+    materialized corpus.
+
     ``memo_store`` selects the π-memo representation for the incremental
     engines: ``dense`` (device fp32 oracle), ``chunked`` (bf16 host
     chunks) or ``gamma`` (γ-only reconstruction — S-IVI only, the eq. 4
     exactness needs the true π). ``bucket_by_length=True`` batches each
     epoch inside length buckets (`repro.data.bow.bucket_corpus`), so
     E-step FLOPs and memo traffic scale with each bucket's own padding
-    width instead of the corpus-wide maximum.
+    width instead of the corpus-wide maximum; ``bucket_stats`` then holds
+    the per-bucket pad fractions (logged once per run by ``train.py``).
+    Stream ingest packs by bucket width always.
     """
 
-    def __init__(self, cfg: LDAConfig, corpus: Corpus, *, algo: str,
+    def __init__(self, cfg: LDAConfig, corpus, *, algo: str,
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False):
         assert algo in ("mvi", "svi", "ivi", "sivi")
-        self.cfg, self.corpus, self.algo = cfg, corpus, algo
+        self.cfg, self.algo = cfg, algo
         self.batch_size = batch_size
         self.rng = np.random.default_rng(seed)
         self.state = init_engine_state(cfg, jax.random.key(seed))
         self.memo: Optional[MemoStore] = None
         self._gamma_buf = None
         self._buckets = None
+        self.bucket_stats: Optional[dict] = None
+        self.stream = None
+        if isinstance(corpus, Corpus):
+            self.corpus: Optional[Corpus] = corpus
+            self.num_docs = corpus.num_docs
+            max_unique = corpus.max_unique
+            num_words = float(np.asarray(corpus.counts).sum())
+        else:
+            from repro.data.stream import BatchPacker, is_doc_stream
+            if not is_doc_stream(corpus):
+                raise TypeError(f"corpus must be a Corpus or DocStream, "
+                                f"got {type(corpus).__name__}")
+            if algo == "mvi":
+                raise ValueError(
+                    "mvi is full-batch coordinate ascent — it scans the "
+                    "materialized corpus every epoch; use "
+                    "data.stream.materialize(stream) or a mini-batch algo")
+            if memo_store == "gamma":
+                raise ValueError(
+                    "the γ-only store reconstructs π from resident corpus "
+                    "rows — materialize the stream or pick dense/chunked")
+            self.stream = corpus
+            self.corpus = None
+            self.num_docs = corpus.num_docs
+            max_unique = corpus.max_unique
+            num_words = float(corpus.num_words)
+            self._packer = BatchPacker(batch_size, max_width=max_unique,
+                                       vocab_size=cfg.vocab_size)
+            self._stream_cursor = 0          # docs pulled this epoch
+            self._stream_iter = None
+            self._stream_emitted: List = []  # flushed, not yet processed
         if algo in ("ivi", "sivi"):
             if memo_store == "gamma" and algo == "ivi":
                 raise ValueError(
                     "the γ-only store reconstructs π approximately — it "
                     "breaks IVI's exact eq. 4 accumulator; use it with "
                     "sivi (or divi), or pick dense/chunked for ivi")
-            self.memo = make_memo_store(memo_store, cfg, corpus.num_docs,
-                                        corpus.max_unique, corpus=corpus,
+            self.memo = make_memo_store(memo_store, cfg, self.num_docs,
+                                        max_unique, corpus=self.corpus,
                                         chunk_docs=chunk_docs)
         elif algo == "mvi":
             # per-document warm starts carried across epochs (see mvi_scan);
@@ -275,13 +320,14 @@ class LDAEngine:
             zrow_c = jnp.zeros((1, corpus.max_unique), jnp.float32)
             self._mvi_ids = jnp.concatenate([corpus.token_ids, zrow_i])
             self._mvi_cnts = jnp.concatenate([corpus.counts, zrow_c])
-        if bucket_by_length:
+        if bucket_by_length and self.stream is None:
             if algo == "mvi":
                 raise ValueError("bucket_by_length applies to the "
                                  "mini-batch engines (svi/ivi/sivi)")
-            from repro.data.bow import bucket_corpus
+            from repro.data.bow import bucket_corpus, bucket_padding_stats
             self._buckets = bucket_corpus(corpus)
-        self.num_words_total = jnp.asarray(float(np.asarray(corpus.counts).sum()))
+            self.bucket_stats = bucket_padding_stats(corpus, self._buckets)
+        self.num_words_total = jnp.asarray(num_words)
         self.docs_seen = 0
         self.history = History()
         self._t0 = time.perf_counter()
@@ -332,12 +378,19 @@ class LDAEngine:
         """
         if self.algo == "mvi":
             raise ValueError("mvi is full-batch: use run_epoch")
+        if self.stream is not None:
+            raise ValueError("stream ingest has no materialized epoch "
+                             "order: drive it with stream_step/run_epoch")
         if self._buckets is not None:
             return self._bucketed_epoch_order()
         return [(rows, None) for rows in self._epoch_order()]
 
     # -- steps -------------------------------------------------------------
     def run_epoch(self) -> None:
+        if self.stream is not None:
+            while self.stream_step():
+                pass
+            return
         if self.algo == "mvi":
             self._run_mvi_epoch()
             return
@@ -369,9 +422,17 @@ class LDAEngine:
         ids, cnts = self.corpus.token_ids[idx], self.corpus.counts[idx]
         if width is not None and width < self.corpus.max_unique:
             ids, cnts = ids[:, :width], cnts[:, :width]
+        self._update_batch(rows, ids, cnts)
+
+    def _update_batch(self, rows: np.ndarray, ids: jax.Array,
+                      cnts: jax.Array) -> None:
+        """One global update on a padded (B', W) batch — the shared core of
+        the materialized (`run_minibatch`) and stream (`stream_step`)
+        paths; ``W`` is whatever width the batch was packed/sliced to."""
+        width = ids.shape[1]
         if self.algo == "svi":
             self.state = svi_step(self.cfg, self.state, ids, cnts,
-                                  jnp.asarray(float(self.corpus.num_docs)))
+                                  jnp.asarray(float(self.num_docs)))
         elif self.algo in ("ivi", "sivi"):
             old_pi, visited = self.memo.gather(rows, width=width)
             self.state, new_pi, eb = incremental_update(
@@ -382,6 +443,46 @@ class LDAEngine:
         else:
             raise ValueError(self.algo)
         self.docs_seen += len(rows)
+
+    # -- stream ingest -----------------------------------------------------
+    def stream_step(self) -> bool:
+        """Pull-and-pack until ONE mini-batch emits, then process it.
+
+        Returns True when a batch was processed; False exactly at an epoch
+        boundary (the stream is exhausted and every flushed batch has been
+        processed — the cursor resets, so the next call starts a new
+        pass). Every document of the stream is processed exactly once per
+        epoch: the packer's partial buckets flush at exhaustion, the
+        streaming analogue of the ``D % batch_size`` epoch-tail batch.
+        """
+        assert self.stream is not None, "stream_step needs stream ingest"
+        if self._stream_emitted:
+            self._run_packed(self._stream_emitted.pop(0))
+            return True
+        if self._stream_iter is None:
+            self._stream_iter = self.stream.iter_from(self._stream_cursor)
+        for ids, cnts in self._stream_iter:
+            pos = self._stream_cursor
+            self._stream_cursor += 1
+            batch = self._packer.add(pos, ids, cnts)
+            if batch is not None:
+                self._run_packed(batch)
+                return True
+        self._stream_emitted = self._packer.flush()
+        if self._stream_emitted:
+            self._run_packed(self._stream_emitted.pop(0))
+            return True
+        self._stream_cursor = 0              # epoch boundary: rewind
+        self._stream_iter = None
+        return False
+
+    def _run_packed(self, batch) -> None:
+        self._update_batch(batch.rows, jnp.asarray(batch.token_ids),
+                           jnp.asarray(batch.counts))
+
+    def stream_padding_stats(self) -> dict:
+        """Pad-waste accounting of everything packed so far (stream mode)."""
+        return self._packer.padding_stats()
 
     # -- evaluation --------------------------------------------------------
     def evaluate(self) -> Dict[str, float]:
@@ -417,6 +518,13 @@ class LDAEngine:
         bound at freshly fitted γ.
         """
         cfg = self.cfg
+        if self.stream is not None:
+            # stream ingest: chunk-by-chunk read-through, no (D, L) corpus
+            if self.memo is not None:
+                return float(elbo_memoized_stream(cfg, self.stream,
+                                                  self.memo, self.state.lam))
+            return float(elbo_collapsed_stream(cfg, self.stream,
+                                               self.state.lam))
         if self.memo is not None:
             return float(elbo_memoized_store(cfg, self.corpus, self.memo,
                                              self.state.lam))

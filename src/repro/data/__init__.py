@@ -2,4 +2,9 @@ from repro.data.synthetic import SyntheticSpec, make_corpus, PAPER_CORPORA
 from repro.data.bow import (LengthBuckets, bucket_corpus,
                             bucket_padding_stats, corpus_from_docs,
                             pad_corpus)
-from repro.data.uci import load_uci, save_uci
+from repro.data.stream import (WIDTH_BOUNDARIES, BatchPacker, CorpusDocStream,
+                               DocStream, ListDocStream, PackedBatch,
+                               as_doc_stream, as_ragged_doc, bucket_rows,
+                               is_doc_stream, iter_padded_chunks, materialize,
+                               width_ladder)
+from repro.data.uci import UCIDocStream, load_uci, load_vocab, save_uci

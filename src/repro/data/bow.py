@@ -3,7 +3,7 @@ plus the length-bucketed view that shrinks per-batch padding."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,39 +57,43 @@ class LengthBuckets:
 
 
 def bucket_corpus(corpus: Corpus,
-                  boundaries: Sequence[int] = (8, 16, 32, 64, 128, 256, 512),
+                  boundaries: Optional[Sequence[int]] = None
                   ) -> LengthBuckets:
-    """Group documents into width buckets by unique-token count.
+    """Group documents into ladder-width buckets.
 
-    Buckets with no documents are dropped; the final bucket width is the
-    corpus max L, so every document lands somewhere. Zero-length (fully
-    padded) documents join the narrowest bucket.
+    A ``LengthBuckets`` view over the ONE bucketing implementation,
+    `repro.data.stream.bucket_rows` (keyed on the last live column — equal
+    to the unique-token count for this canonical leading-column layout,
+    and lossless for any other). Buckets with no documents are dropped;
+    the final bucket width is the corpus max L, so every document lands
+    somewhere; empty documents join the narrowest bucket.
     """
-    cnts = np.asarray(corpus.counts)
-    n_unique = (cnts > 0).sum(axis=1)
-    l = corpus.max_unique
-    widths = sorted({min(b, l) for b in boundaries if b < l} | {l})
-    doc_idx, kept = [], []
-    lo = 0
-    for w in widths:
-        rows = np.nonzero((n_unique > lo) & (n_unique <= w))[0]
-        if lo == 0:
-            rows = np.union1d(rows, np.nonzero(n_unique == 0)[0])
-        if len(rows):
-            doc_idx.append(rows.astype(np.int64))
-            kept.append(int(w))
-        lo = w
-    return LengthBuckets(doc_idx=doc_idx, widths=kept)
+    from repro.data.stream import WIDTH_BOUNDARIES, bucket_rows
+    if boundaries is None:
+        boundaries = WIDTH_BOUNDARIES
+    buckets = bucket_rows(corpus.counts, boundaries)
+    return LengthBuckets(doc_idx=[rows for rows, _ in buckets],
+                         widths=[w for _, w in buckets])
 
 
 def bucket_padding_stats(corpus: Corpus, buckets: LengthBuckets) -> dict:
-    """Padding-waste accounting: slots touched per epoch, flat vs bucketed."""
+    """Padding-waste accounting: slots touched per epoch, flat vs bucketed,
+    plus the pad fraction inside each bucket (live slots vs padded slots —
+    the number that exposes packing regressions)."""
     d, l = corpus.num_docs, corpus.max_unique
+    cnts = np.asarray(corpus.counts)
     flat = d * l
-    bucketed = sum(len(rows) * w
-                   for rows, w in zip(buckets.doc_idx, buckets.widths))
+    per_bucket = []
+    bucketed = 0
+    for rows, w in zip(buckets.doc_idx, buckets.widths):
+        slots = len(rows) * w
+        live = int((cnts[rows, :w] > 0).sum())
+        bucketed += slots
+        per_bucket.append({"width": int(w), "docs": len(rows),
+                           "pad_frac": 1.0 - live / max(slots, 1)})
     return {"flat_slots": flat, "bucketed_slots": bucketed,
-            "slot_ratio": bucketed / max(flat, 1)}
+            "slot_ratio": bucketed / max(flat, 1),
+            "per_bucket": per_bucket}
 
 
 def pad_corpus(corpus: Corpus, num_docs: int) -> Corpus:

@@ -1,0 +1,417 @@
+"""Ragged token pipeline: ``DocStream`` ingest + packed device batches.
+
+The paper's headline regime — "massive document collections" — never fits
+a fully materialized, padded ``(D, L)`` ``Corpus`` in host RAM. This module
+is the single ingest contract both training and serving consume:
+
+* ``DocStream`` — an iterator of ragged ``(token_ids, counts)`` documents
+  with known ``vocab_size``, resumable via a **cursor** (a document
+  position). One pass over the stream is one epoch; a mid-epoch checkpoint
+  persists the cursor plus the packer's open buckets, nothing else.
+* ``BatchPacker`` — packs ragged documents into the bucketed ``(B, W)``
+  padded layouts the engines and the serving E-step consume, under ONE
+  width policy (`width_ladder` / `width_for`). It replaces the two
+  bucketing implementations that used to exist (`data/bow.py:bucket_corpus`
+  for training and the serving-side ``_serving_buckets``): both now route
+  through `bucket_rows` / the packer.
+
+**Width policy** (the one policy): a document needs the padded width that
+COVERS its last live slot — the smallest rung of the boundary ladder
+``(8, 16, 32, 64, 128, 256, 512)`` that is ≥ its live extent, capped at
+``max_width`` when the stream declares one (training: the memo's L) and
+extended by doubling past the top rung when it does not (serving: unknown
+request lengths; the jit cache stays bounded because widths stay on the
+ladder). Keying on the *last live column* — not the live-slot count —
+keeps the ``[:width]`` slice lossless for any slot layout, including the
+interleaved-zero halves ``predictive.split_heldout`` produces; for the
+canonical leading-column layout the two keys coincide. Empty documents
+(no live slot) ride the smallest rung, where the E-step leaves their γ at
+the prior in one sweep.
+
+Packing is **bit-transparent**: a batch packed from ragged docs is
+bit-identical to gathering the same rows from a padded ``Corpus`` and
+slicing to the bucket width, so a stream-fed training run reproduces the
+padded-corpus trajectory exactly (tests/test_stream_pipeline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import Corpus
+
+# THE width ladder — the single source of truth for both train and serve.
+WIDTH_BOUNDARIES = (8, 16, 32, 64, 128, 256, 512)
+
+RaggedDoc = Tuple[np.ndarray, np.ndarray]      # (ids int32, counts float32)
+
+
+# ---------------------------------------------------------------------------
+# width policy
+# ---------------------------------------------------------------------------
+
+def width_ladder(max_width: int,
+                 boundaries: Sequence[int] = WIDTH_BOUNDARIES) -> List[int]:
+    """Bucket widths for documents up to ``max_width`` live slots: every
+    ladder rung below it plus ``max_width`` itself as the final rung —
+    every document lands somewhere, none is sliced lossily."""
+    l = max(int(max_width), 1)
+    return sorted({min(b, l) for b in boundaries if b < l} | {l})
+
+
+def bucket_rows(counts: np.ndarray,
+                boundaries: Sequence[int] = WIDTH_BOUNDARIES,
+                ) -> List[Tuple[np.ndarray, int]]:
+    """Group padded rows by the ladder width covering their LAST live slot.
+
+    The one bucketing implementation (see module docstring): training's
+    ``bucket_corpus`` and the serving batcher are both views of this.
+    Returns ``[(row_indices int64, width)]`` with ascending widths; every
+    row appears in exactly one bucket (empty rows in the first)."""
+    counts = np.asarray(counts)
+    d, l = counts.shape
+    live = counts > 0
+    # width needed per doc = index of its last live column + 1 (0 if empty)
+    last = np.where(live.any(1), l - np.argmax(live[:, ::-1], axis=1), 0)
+    out: List[Tuple[np.ndarray, int]] = []
+    lo = -1                   # first rung includes last == 0 (empty docs)
+    for w in width_ladder(l, boundaries):
+        rows = np.nonzero((last > lo) & (last <= w))[0]
+        if len(rows):
+            out.append((rows.astype(np.int64), int(w)))
+        lo = w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ragged documents
+# ---------------------------------------------------------------------------
+
+def as_ragged_doc(doc) -> RaggedDoc:
+    """Normalise one request/ingest document to ``(ids int32, cnts fp32)``.
+
+    Accepts a ``(token_ids, counts)`` pair (already unique) or a raw token
+    array with repeats (uniquified, ids ascending — the ``corpus_from_docs``
+    convention)."""
+    if isinstance(doc, tuple) and len(doc) == 2:
+        ids, cnts = doc
+        return (np.asarray(ids, np.int32).ravel(),
+                np.asarray(cnts, np.float32).ravel())
+    tokens = np.asarray(doc, np.int64).ravel()
+    ids, cnts = np.unique(tokens, return_counts=True)
+    return ids.astype(np.int32), cnts.astype(np.float32)
+
+
+class DocStream:
+    """Iterator of ragged documents, resumable via a cursor.
+
+    The ingest contract for training and serving (see module docstring):
+
+    * ``vocab_size`` — token ids are ``< vocab_size``;
+    * ``num_docs`` — documents per pass (one pass == one epoch);
+    * ``num_words`` — total token count (exact for integer counts) — the
+      incremental engines need it up front to retire the random-init mass;
+    * ``max_unique`` — an upper bound on any document's live extent (the
+      memo width L); implementations may compute it lazily;
+    * ``iter_from(cursor)`` — yield documents ``cursor, cursor+1, …`` as
+      ``(ids int32, counts float32)`` ragged pairs. ``cursor`` is a plain
+      document position, so a mid-epoch checkpoint is just an integer.
+    """
+
+    vocab_size: int
+
+    @property
+    def num_docs(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def num_words(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def max_unique(self) -> int:
+        raise NotImplementedError
+
+    def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
+        raise NotImplementedError
+
+
+class CorpusDocStream(DocStream):
+    """A padded ``Corpus`` viewed as a ``DocStream`` (rows trimmed to their
+    last live slot). Streaming this is bit-equal to slicing the corpus —
+    the bridge the stream-vs-materialized equality tests are built on."""
+
+    def __init__(self, corpus: Corpus, vocab_size: Optional[int] = None):
+        self._ids = np.asarray(corpus.token_ids)
+        self._cnts = np.asarray(corpus.counts)
+        self.vocab_size = (int(self._ids.max(initial=0)) + 1
+                           if vocab_size is None else vocab_size)
+        live = self._cnts > 0
+        l = self._cnts.shape[1]
+        self._last = np.where(live.any(1),
+                              l - np.argmax(live[:, ::-1], axis=1), 0)
+
+    @property
+    def num_docs(self) -> int:
+        return self._ids.shape[0]
+
+    @property
+    def num_words(self) -> float:
+        # same accumulation the corpus-mode engine uses (fp32 numpy sum)
+        return float(self._cnts.sum())
+
+    @property
+    def max_unique(self) -> int:
+        return self._cnts.shape[1]
+
+    def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
+        for d in range(cursor, self._ids.shape[0]):
+            n = int(self._last[d])
+            yield self._ids[d, :n], self._cnts[d, :n]
+
+
+class ListDocStream(DocStream):
+    """Ragged documents held in host memory (lists / generators already
+    drained). The convenience stream the facade wraps around plain doc
+    iterables; real mass ingest should use a lazy stream (`data/uci.py`)."""
+
+    def __init__(self, docs, vocab_size: int):
+        self._docs = [as_ragged_doc(d) for d in docs]
+        self.vocab_size = vocab_size
+
+    @property
+    def num_docs(self) -> int:
+        return len(self._docs)
+
+    @property
+    def num_words(self) -> float:
+        return float(sum(float(c.sum()) for _, c in self._docs))
+
+    @property
+    def max_unique(self) -> int:
+        return max((len(i) for i, _ in self._docs), default=1)
+
+    def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
+        yield from self._docs[cursor:]
+
+
+def is_doc_stream(obj) -> bool:
+    """Duck-typed DocStream check (protocol, not inheritance)."""
+    return hasattr(obj, "iter_from") and hasattr(obj, "vocab_size")
+
+
+def as_doc_stream(data, vocab_size: Optional[int] = None) -> DocStream:
+    """Coerce: DocStream passthrough, Corpus → view, iterable → list."""
+    if is_doc_stream(data):
+        return data
+    if isinstance(data, Corpus):
+        return CorpusDocStream(data, vocab_size)
+    if vocab_size is None:
+        raise ValueError("wrapping a raw document iterable needs vocab_size")
+    return ListDocStream(data, vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# the packer
+# ---------------------------------------------------------------------------
+
+class PackedBatch(NamedTuple):
+    """One padded device batch packed from ragged documents."""
+
+    rows: np.ndarray        # (B',) int64 — document positions
+    token_ids: np.ndarray   # (B', width) int32, leading-column layout
+    counts: np.ndarray      # (B', width) float32
+    width: int
+
+
+@dataclasses.dataclass
+class _WidthStats:
+    docs: int = 0
+    live_slots: int = 0
+    padded_slots: int = 0
+
+
+class BatchPacker:
+    """Pack ragged documents into bucketed ``(B, W)`` padded batches.
+
+    Stateful: ``add`` files each document under the ladder width covering
+    it and emits a ``PackedBatch`` the moment that bucket holds
+    ``batch_size`` documents; ``flush`` emits the partial remainder
+    (ascending widths). Emission is a deterministic function of the input
+    document sequence — which is what lets a mid-epoch checkpoint persist
+    just the not-yet-emitted ``pending_docs`` and the stream cursor.
+
+    ``max_width``: the stream's declared ``max_unique`` (training — caps
+    the ladder at the memo width; longer documents are clipped to their
+    most frequent tokens, the ``corpus_from_docs`` rule) or ``None``
+    (serving — the ladder extends by doubling past its top rung).
+
+    ``vocab_size``: when given, every packed token id is checked against
+    it — a jnp gather silently CLAMPS out-of-range indices, so a
+    malformed document would otherwise train/serve on token V−1 instead
+    of failing (the materialized path asserts this in
+    ``corpus_from_docs``; the packer is the streaming equivalent).
+    """
+
+    def __init__(self, batch_size: int, *, max_width: Optional[int] = None,
+                 boundaries: Sequence[int] = WIDTH_BOUNDARIES,
+                 vocab_size: Optional[int] = None):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.batch_size = batch_size
+        self.max_width = max_width
+        self.vocab_size = vocab_size
+        self.boundaries = tuple(boundaries)
+        self._widths = (width_ladder(max_width, boundaries)
+                        if max_width is not None else sorted(boundaries))
+        self._open: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+        self._stats: Dict[int, _WidthStats] = {}
+
+    # -- width policy ----------------------------------------------------
+    def width_for(self, n_live: int) -> int:
+        """The ladder rung covering a document with ``n_live`` live slots."""
+        if self.max_width is not None and n_live > self.max_width:
+            n_live = self.max_width
+        for w in self._widths:
+            if n_live <= w:
+                return w
+        # unbounded ladder (serving): extend by doubling past the top rung
+        w = self._widths[-1]
+        while w < n_live:
+            w *= 2
+            self._widths.append(w)
+        return w
+
+    # -- packing ---------------------------------------------------------
+    def add(self, pos: int, ids: np.ndarray,
+            cnts: np.ndarray) -> Optional[PackedBatch]:
+        """File one ragged document; emit its bucket if it just filled."""
+        ids = np.asarray(ids, np.int32).ravel()
+        cnts = np.asarray(cnts, np.float32).ravel()
+        if self.vocab_size is not None and len(ids) \
+                and not (0 <= int(ids.min())
+                         and int(ids.max()) < self.vocab_size):
+            raise ValueError(
+                f"document {pos}: token ids in [{ids.min()}, {ids.max()}] "
+                f"fall outside the vocabulary [0, {self.vocab_size})")
+        if self.max_width is not None and len(ids) > self.max_width:
+            # keep the most frequent tokens (the corpus_from_docs rule)
+            top = np.argsort(-cnts)[: self.max_width]
+            ids, cnts = ids[top], cnts[top]
+        w = self.width_for(len(ids))
+        bucket = self._open.setdefault(w, [])
+        bucket.append((int(pos), ids, cnts))
+        if len(bucket) == self.batch_size:
+            return self._emit(w)
+        return None
+
+    def _emit(self, width: int) -> PackedBatch:
+        docs = self._open.pop(width)
+        b = len(docs)
+        rows = np.asarray([p for p, _, _ in docs], np.int64)
+        out_ids = np.zeros((b, width), np.int32)
+        out_cnt = np.zeros((b, width), np.float32)
+        st = self._stats.setdefault(width, _WidthStats())
+        for r, (_, ids, cnts) in enumerate(docs):
+            out_ids[r, : len(ids)] = ids
+            out_cnt[r, : len(cnts)] = cnts
+            st.live_slots += len(ids)
+        st.docs += b
+        st.padded_slots += b * width
+        return PackedBatch(rows, out_ids, out_cnt, width)
+
+    def flush(self) -> List[PackedBatch]:
+        """Emit every partially-filled bucket, ascending widths."""
+        return [self._emit(w) for w in sorted(self._open) if self._open[w]]
+
+    # -- checkpointing ---------------------------------------------------
+    def pending_docs(self) -> List[Tuple[int, np.ndarray, np.ndarray]]:
+        """The open buckets' documents (< num_widths × batch_size of them),
+        in an order whose replay through ``add`` reconstructs this exact
+        packer state — the mid-epoch checkpoint payload."""
+        out: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        for w in sorted(self._open):
+            out.extend(self._open[w])
+        return out
+
+    def load_pending(self,
+                     docs: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
+        """Restore ``pending_docs`` output into a fresh packer."""
+        if self._open:
+            raise ValueError("load_pending needs a fresh packer")
+        for pos, ids, cnts in docs:
+            if self.add(pos, ids, cnts) is not None:
+                raise ValueError("pending docs overflowed a bucket — the "
+                                 "checkpoint does not match this batch_size")
+
+    # -- introspection ---------------------------------------------------
+    def padding_stats(self) -> dict:
+        """Pad-waste accounting over everything emitted so far: per-width
+        document counts and pad fractions, plus the overall slot ratio."""
+        per_width = [
+            {"width": w, "docs": st.docs,
+             "pad_frac": 1.0 - st.live_slots / max(st.padded_slots, 1)}
+            for w, st in sorted(self._stats.items())
+        ]
+        live = sum(st.live_slots for st in self._stats.values())
+        padded = sum(st.padded_slots for st in self._stats.values())
+        return {"per_width": per_width,
+                "live_slots": live, "padded_slots": padded,
+                "pad_frac": 1.0 - live / max(padded, 1)}
+
+
+# ---------------------------------------------------------------------------
+# stream utilities
+# ---------------------------------------------------------------------------
+
+def materialize(stream: DocStream,
+                max_unique: Optional[int] = None) -> Corpus:
+    """Drain a stream into the padded ``Corpus`` layout (the inverse of
+    ``CorpusDocStream``; over-long docs keep their most frequent tokens)."""
+    import jax.numpy as jnp
+
+    docs = [(np.asarray(i, np.int32), np.asarray(c, np.float32))
+            for i, c in stream.iter_from(0)]
+    width = max((len(i) for i, _ in docs), default=1)
+    if max_unique is not None:
+        width = min(width, max_unique)
+    width = max(width, 1)
+    out_ids = np.zeros((len(docs), width), np.int32)
+    out_cnt = np.zeros((len(docs), width), np.float32)
+    for r, (ids, cnts) in enumerate(docs):
+        if len(ids) > width:
+            top = np.argsort(-cnts)[:width]
+            ids, cnts = ids[top], cnts[top]
+        out_ids[r, : len(ids)] = ids
+        out_cnt[r, : len(cnts)] = cnts
+    assert out_ids.max(initial=0) < stream.vocab_size
+    return Corpus(jnp.asarray(out_ids), jnp.asarray(out_cnt))
+
+
+def iter_padded_chunks(stream: DocStream, batch_docs: int, width: int
+                       ) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
+    """Yield ``(start, ids (b, width), cnts (b, width))`` sequential chunks
+    — the read-through path for the streamed memoized ELBO, mirroring
+    ``MemoStore.iter_chunks``'s sequential doc order."""
+    buf: List[RaggedDoc] = []
+    start = 0
+    for doc in stream.iter_from(0):
+        buf.append(doc)
+        if len(buf) == batch_docs:
+            yield start, *_pad_docs(buf, width)
+            start += len(buf)
+            buf = []
+    if buf:
+        yield start, *_pad_docs(buf, width)
+
+
+def _pad_docs(docs: List[RaggedDoc], width: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    out_ids = np.zeros((len(docs), width), np.int32)
+    out_cnt = np.zeros((len(docs), width), np.float32)
+    for r, (ids, cnts) in enumerate(docs):
+        out_ids[r, : len(ids)] = ids
+        out_cnt[r, : len(cnts)] = cnts
+    return out_ids, out_cnt

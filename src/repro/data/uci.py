@@ -1,60 +1,168 @@
-"""UCI bag-of-words format loader (docword.txt / vocab.txt).
+"""UCI bag-of-words format (docword.txt / vocab.txt), lazily streamable.
 
 The standard distribution format of the paper's corpora (NYT, Enron, ... on
 the UCI repository):
 
-    docword.txt:  D\n W\n NNZ\n  then lines "docID wordID count" (1-based)
+    docword.txt:  D\n W\n NNZ\n  then lines "docID wordID count" (1-based,
+                  grouped by docID)
     vocab.txt:    one token per line (line i+1 = wordID i+1)
 
-`load_uci` returns (Corpus, vocab list). Files may be gzip-compressed.
-No network access is required — benchmarks/tests write synthetic files in
-this format to exercise the loader.
+``UCIDocStream`` exposes such a file as a `repro.data.stream.DocStream`:
+the header is read eagerly (D, W), documents lazily — one per-doc group of
+lines at a time — so a corpus streams through training without ever being
+materialized as a dense ``(D, L)`` padded array
+(``launch/train.py --stream``). ``load_uci`` keeps the old materialized
+behaviour, now implemented as ``materialize(UCIDocStream(...))`` so the
+parser exists exactly once. Files may be gzip-compressed. No network
+access is required — benchmarks/tests write synthetic files in this format
+to exercise the loader.
 """
 from __future__ import annotations
 
 import gzip
 import os
-from typing import List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.types import Corpus
-from repro.data.bow import corpus_from_docs
+from repro.data.stream import DocStream, RaggedDoc, materialize
 
 
 def _open(path: str):
     return gzip.open(path, "rt") if path.endswith(".gz") else open(path)
 
 
+class UCIDocStream(DocStream):
+    """Lazy ``DocStream`` over a UCI docword file (see module docstring).
+
+    Only the 3-line header is read at construction. ``num_words`` and
+    ``max_unique`` need one pass over the file; it runs lazily on first
+    access and is cached. ``iter_from(cursor)`` re-reads from the top and
+    skips ``cursor`` documents — resuming costs one sequential scan of the
+    prefix, never any resident state.
+
+    Quirks mirrored from the materialized loader for exact equivalence:
+    docIDs absent from the file (empty documents) yield the placeholder
+    ``([0], [1.0])`` that ``load_uci`` has always produced for them, and
+    ``max_unique``/per-doc clipping keep the most frequent tokens.
+    """
+
+    def __init__(self, docword_path: str, *, max_docs: Optional[int] = None,
+                 max_unique: Optional[int] = None):
+        self.path = docword_path
+        self.max_unique_cap = max_unique
+        with _open(docword_path) as f:
+            d = int(f.readline())
+            w = int(f.readline())
+            int(f.readline())                     # NNZ, unused
+        self.vocab_size = w
+        self._num_docs = min(d, max_docs) if max_docs else d
+        self._stats: Optional[Tuple[float, int]] = None   # (words, max_uniq)
+
+    # -- DocStream contract ---------------------------------------------
+    @property
+    def num_docs(self) -> int:
+        return self._num_docs
+
+    @property
+    def num_words(self) -> float:
+        return self._scan_stats()[0]
+
+    @property
+    def max_unique(self) -> int:
+        return self._scan_stats()[1]
+
+    def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
+        for pos, doc in enumerate(self._iter_docs()):
+            if pos >= cursor:
+                yield doc
+
+    # -- internals -------------------------------------------------------
+    def _iter_docs(self) -> Iterator[RaggedDoc]:
+        """All documents 0..num_docs-1 in order, clipping applied."""
+        empty = (np.asarray([0], np.int32), np.asarray([1.0], np.float32))
+        next_doc = 0                     # next docID (0-based) to emit
+        words: List[int] = []
+        cnts: List[int] = []
+        with _open(self.path) as f:
+            for _ in range(3):
+                f.readline()
+            for line in f:
+                parts = line.split()
+                if len(parts) != 3:
+                    continue
+                doc, word, cnt = (int(parts[0]) - 1, int(parts[1]) - 1,
+                                  int(parts[2]))
+                if doc >= self._num_docs:
+                    continue
+                if doc < next_doc:
+                    # a line for an already-emitted document: the file is
+                    # not grouped by docID — a lazy reader cannot go back,
+                    # so fail loudly instead of emitting phantom documents
+                    raise ValueError(
+                        f"{self.path!r}: docword lines are not grouped by "
+                        f"docID (doc {doc + 1} after doc {next_doc + 1}) — "
+                        "sort the file or use the eager load path")
+                if doc != next_doc and words:
+                    yield self._finish_doc(words, cnts)
+                    next_doc += 1
+                    words, cnts = [], []
+                while next_doc < doc:    # gap in docIDs: empty documents
+                    yield empty
+                    next_doc += 1
+                words.append(word)
+                cnts.append(cnt)
+        if words:
+            yield self._finish_doc(words, cnts)
+            next_doc += 1
+        while next_doc < self._num_docs:
+            yield empty
+            next_doc += 1
+
+    def _finish_doc(self, words: List[int], cnts: List[int]) -> RaggedDoc:
+        """Aggregate one doc's lines: duplicate wordIDs summed, ids
+        ascending (the np.unique-of-repeats order ``load_uci`` produced),
+        clipped to the most frequent under a ``max_unique`` cap."""
+        w = np.asarray(words, np.int64)
+        c = np.asarray(cnts, np.int64)
+        uw, inv = np.unique(w, return_inverse=True)
+        uc = np.zeros(len(uw), np.int64)
+        np.add.at(uc, inv, c)
+        ids = uw.astype(np.int32)
+        out = uc.astype(np.float32)
+        cap = self.max_unique_cap
+        if cap is not None and len(ids) > cap:
+            top = np.argsort(-out)[:cap]
+            ids, out = ids[top], out[top]
+        return ids, out
+
+    def _scan_stats(self) -> Tuple[float, int]:
+        if self._stats is None:
+            words, maxu = 0.0, 1
+            for ids, cnts in self._iter_docs():
+                words += float(cnts.sum())
+                maxu = max(maxu, len(ids))
+            self._stats = (words, maxu)
+        return self._stats
+
+
+def load_vocab(vocab_path: Optional[str]) -> List[str]:
+    """The vocab.txt side of the format (empty list if absent)."""
+    if not (vocab_path and os.path.exists(vocab_path)):
+        return []
+    with _open(vocab_path) as f:
+        return [ln.strip() for ln in f]
+
+
 def load_uci(docword_path: str, vocab_path: Optional[str] = None,
              max_docs: Optional[int] = None,
              max_unique: Optional[int] = None) -> Tuple[Corpus, List[str]]:
-    """Parse UCI bag-of-words files into the padded Corpus layout."""
-    with _open(docword_path) as f:
-        d = int(f.readline())
-        w = int(f.readline())
-        nnz = int(f.readline())
-        n_docs = min(d, max_docs) if max_docs else d
-        ids: List[List[int]] = [[] for _ in range(n_docs)]
-        cnts: List[List[int]] = [[] for _ in range(n_docs)]
-        for line in f:
-            parts = line.split()
-            if len(parts) != 3:
-                continue
-            doc, word, cnt = int(parts[0]) - 1, int(parts[1]) - 1, int(parts[2])
-            if doc >= n_docs:
-                continue
-            ids[doc].append(word)
-            cnts[doc].append(cnt)
-    docs = [np.repeat(np.asarray(i, np.int64), np.asarray(c, np.int64))
-            for i, c in zip(ids, cnts)]
-    docs = [dd if len(dd) else np.zeros(1, np.int64) for dd in docs]
-    corpus = corpus_from_docs(docs, w, max_unique=max_unique)
-    vocab: List[str] = []
-    if vocab_path and os.path.exists(vocab_path):
-        with _open(vocab_path) as f:
-            vocab = [ln.strip() for ln in f]
-    return corpus, vocab
+    """Parse UCI bag-of-words files into the padded Corpus layout —
+    ``materialize`` over the lazy stream (one parser, two consumers)."""
+    stream = UCIDocStream(docword_path, max_docs=max_docs,
+                          max_unique=max_unique)
+    return materialize(stream, max_unique=max_unique), load_vocab(vocab_path)
 
 
 def save_uci(corpus: Corpus, docword_path: str) -> None:

@@ -73,7 +73,11 @@ def run_serve_dryrun(batch: int = 256, widths=ARXIV_WIDTHS,
 
 
 def _percentiles(xs, ps=(50, 95, 99)):
-    xs = np.asarray(xs)
+    """Latency percentiles; NaNs for a zero-request run (np.percentile
+    raises on an empty array — the caller skips the report row instead)."""
+    xs = np.asarray(xs, np.float64)
+    if xs.size == 0:
+        return {f"p{p}": float("nan") for p in ps}
     return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
 
 
@@ -92,6 +96,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=32,
                     help="request batch size (also the jit pad width)")
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--ragged", action="store_true",
+                    help="serve ragged requests through posterior_docs "
+                         "(no padded Corpus; double-buffered by default)")
+    ap.add_argument("--no-double-buffer", action="store_true",
+                    help="with --ragged: the synchronous reference path")
     ap.add_argument("--warm-epochs", type=int, default=1,
                     help="quick-train epochs when no --ckpt is given")
     ap.add_argument("--seed", type=int, default=0)
@@ -137,34 +146,55 @@ def main() -> None:
     inf = lda.inferencer(backend=args.backend, batch_size=args.batch)
     rng = np.random.default_rng(args.seed)
 
+    if args.ragged:
+        # ragged request traffic — no padded Corpus built per request; the
+        # double-buffered pipeline packs batch t+1 while batch t runs
+        from repro.data.stream import CorpusDocStream
+        ragged_docs = list(CorpusDocStream(test).iter_from(0))
+        serve = lambda docs: inf.posterior_docs(   # noqa: E731
+            docs, double_buffer=not args.no_double_buffer)
+        request = lambda rows: serve([ragged_docs[r] for r in rows])  # noqa: E731
+    else:
+        request = lambda rows: inf.posterior(      # noqa: E731
+            test.take(jnp.asarray(rows)))
+
     # warmup: serve the whole test corpus once — every bucket width
     # compiles here, so the timed loop measures steady-state latency
-    inf.posterior(test)
+    if args.requests:
+        request(np.arange(test.num_docs))
 
     lat = []
     t0 = time.perf_counter()
     for _ in range(args.requests):
         rows = rng.choice(test.num_docs, size=args.batch, replace=False)
         t1 = time.perf_counter()
-        gamma = inf.posterior(test.take(jnp.asarray(rows)))
+        gamma = request(rows)
         lat.append((time.perf_counter() - t1) * 1e3)
         assert gamma.shape == (args.batch, lda.cfg.num_topics)
     wall = time.perf_counter() - t0
 
     pct = _percentiles(lat)
     docs = args.requests * args.batch
-    print(f"served {args.requests} requests × {args.batch} docs "
-          f"backend={inf.cfg.estep_backend}: {docs / wall:.1f} docs/s")
-    print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
-          f"p99={pct['p99']:.1f} max={max(lat):.1f}")
+    mode = ("ragged" + ("" if args.no_double_buffer else "+double-buffer")
+            if args.ragged else "padded")
+    if lat:
+        print(f"served {args.requests} requests × {args.batch} docs "
+              f"backend={inf.cfg.estep_backend} [{mode}]: "
+              f"{docs / wall:.1f} docs/s")
+        print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+              f"p99={pct['p99']:.1f} max={max(lat):.1f}")
+    else:
+        print("served 0 requests — skipping the latency report")
     cache = inf.cache_info()
     print(f"jit cache: {cache['jit_entries']} compiled widths "
           f"{cache['compiled_widths']} "
           f"(batches per width: {cache['batches_per_width']})")
     if args.out:
         rec = {"mode": "serve", "backend": inf.cfg.estep_backend,
+               "serve_mode": mode,
                "batch": args.batch, "requests": args.requests,
-               "docs_per_s": docs / wall, "latency_ms": pct,
+               "docs_per_s": docs / wall if lat else 0.0,
+               "latency_ms": pct,
                "jit_widths": cache["compiled_widths"],
                "batches_per_width": cache["batches_per_width"], "ok": True}
         with open(args.out, "a") as f:

@@ -16,6 +16,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -36,19 +37,42 @@ def main_lda(args) -> None:
     on save, so an IVI/S-IVI run cannot actually continue from them).
     """
     from repro.core import LDAConfig
-    from repro.data import PAPER_CORPORA, make_corpus
+    from repro.data import PAPER_CORPORA, UCIDocStream, make_corpus, save_uci
     from repro.dist import DIVIConfig
     from repro.lda import LDA
 
     spec = PAPER_CORPORA[args.corpus]
-    train = make_corpus(spec, split="train", seed=args.seed,
-                        scale=args.scale)
     test = make_corpus(spec, split="test", seed=args.seed, scale=args.scale)
+    if args.stream:
+        # ragged streaming ingest: train from a lazily-read UCI docword
+        # file through a DocStream — no (D, L) padded corpus resident.
+        # With --docword an existing file is streamed; otherwise the
+        # synthetic corpus is written out in UCI format once and then
+        # streamed back, exercising the exact production ingest path.
+        if args.algo in ("mvi", "divi"):
+            raise SystemExit(f"--stream supports the single-host "
+                             f"mini-batch engines, not {args.algo}")
+        docword = args.docword
+        if docword is None:
+            import tempfile
+            mat = make_corpus(spec, split="train", seed=args.seed,
+                              scale=args.scale)
+            docword = os.path.join(tempfile.mkdtemp(prefix="lda_stream_"),
+                                   "docword.txt.gz")
+            save_uci(mat, docword)
+        train = UCIDocStream(docword)
+        print(f"stream={docword} docs={train.num_docs} "
+              f"words={train.num_words:.0f} K={args.topics}")
+    elif args.docword:
+        raise SystemExit("--docword goes with --stream")
+    else:
+        train = make_corpus(spec, split="train", seed=args.seed,
+                            scale=args.scale)
+        print(f"corpus={args.corpus} docs={train.num_docs} "
+              f"words={float(train.num_words):.0f} K={args.topics}")
     cfg = LDAConfig(num_topics=args.topics, vocab_size=spec.vocab_size,
                     estep_max_iters=args.estep_iters,
                     estep_backend=args.backend)
-    print(f"corpus={args.corpus} docs={train.num_docs} "
-          f"words={float(train.num_words):.0f} K={args.topics}")
 
     if args.resume:
         lda = LDA.load(args.resume).resume(train, test_corpus=test)
@@ -73,12 +97,27 @@ def main_lda(args) -> None:
     if memo is not None:
         print(f"memo_store={memo.kind} "
               f"footprint={memo.footprint_bytes() / 1e6:.2f}MB")
+    # pad-waste visibility: log the per-bucket pad fractions once per run
+    # so a packing/bucketing regression shows up in the training log
+    stats = (lda.trainer.eng.bucket_stats
+             if lda.trainer.kind == "single" else None)
+    if stats is not None:
+        per = " ".join(f"w{b['width']}:{b['docs']}d/{b['pad_frac']:.0%}"
+                       for b in stats["per_bucket"])
+        print(f"bucket_padding_stats slot_ratio={stats['slot_ratio']:.3f} "
+              f"[{per}]")
 
     if lda.distributed is not None:
         lda.fit(rounds=args.rounds, eval_every=args.eval_every,
                 verbose=True)
     else:
         lda.fit(epochs=args.epochs, eval_every=1, verbose=True)
+        if args.stream:
+            st = lda.trainer.eng.stream_padding_stats()
+            per = " ".join(f"w{b['width']}:{b['docs']}d/{b['pad_frac']:.0%}"
+                           for b in st["per_width"])
+            print(f"stream_padding_stats pad_frac={st['pad_frac']:.3f} "
+                  f"[{per}]")
         if args.bound:
             print("final exact bound:", lda.bound())
     if args.ckpt:
@@ -180,6 +219,12 @@ def main() -> None:
                      help="documents per host-store chunk")
     lda.add_argument("--bucketed", action="store_true",
                      help="length-bucketed epoch batching (svi/ivi/sivi)")
+    lda.add_argument("--stream", action="store_true",
+                     help="ragged streaming ingest through a UCI DocStream "
+                          "(no padded corpus resident; docs/streaming.md)")
+    lda.add_argument("--docword", default=None,
+                     help="existing UCI docword(.gz) file to stream "
+                          "(default: write the synthetic corpus out once)")
     lda.add_argument("--eval-every", type=int, default=5)
     lda.add_argument("--bound", action="store_true")
     lda.add_argument("--seed", type=int, default=0)

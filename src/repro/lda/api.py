@@ -94,7 +94,8 @@ class LDA:
         self.bucket_by_length = bucket_by_length
         self._mesh, self._data_axes = mesh, data_axes
         self.trainer: Optional[Trainer] = None
-        self._corpus: Optional[Corpus] = None
+        self._corpus = None           # coerced Corpus | DocStream
+        self._corpus_raw = None       # object the caller actually passed
         # set by LDA.load(): a state view for serve-without-resume, plus
         # the full trainer payload resume() restores; legacy bare-λ loads
         # set _serve_only (no payload to resume, training refused)
@@ -106,8 +107,32 @@ class LDA:
     # lifecycle: fit / partial_fit / resume
     # ------------------------------------------------------------------
 
-    def _bind(self, corpus: Optional[Corpus],
+    def _coerce_data(self, data):
+        """Normalise fit/resume input: padded ``Corpus`` (materialized
+        path), ``DocStream`` (ragged stream ingest — no (D, L) corpus ever
+        resident) or any plain iterable of documents (token arrays or
+        ``(ids, counts)`` pairs — wrapped as a host-resident stream)."""
+        if data is None or isinstance(data, Corpus):
+            return data
+        from repro.data.stream import ListDocStream, is_doc_stream
+        if is_doc_stream(data):
+            if data.vocab_size > self.cfg.vocab_size:
+                raise ValueError(
+                    f"stream vocab_size {data.vocab_size} exceeds the "
+                    f"model's {self.cfg.vocab_size}")
+            return data
+        return ListDocStream(data, vocab_size=self.cfg.vocab_size)
+
+    def _bind(self, corpus,
               test_corpus: Optional[Corpus] = None) -> Trainer:
+        raw = corpus
+        if raw is not None and raw is self._corpus_raw:
+            # the same data object the trainer is bound to: re-use the
+            # coerced form (coercing again would wrap plain iterables in a
+            # fresh ListDocStream and defeat the identity check below)
+            corpus = self._corpus
+        else:
+            corpus = self._coerce_data(corpus)
         if self._pending_restore is not None:
             # loaded-but-not-resumed: building a fresh trainer here would
             # silently discard the checkpoint and train from scratch
@@ -144,15 +169,19 @@ class LDA:
             bucket_by_length=self.bucket_by_length, mesh=self._mesh,
             data_axes=self._data_axes)
         self._corpus = corpus
+        self._corpus_raw = raw
         return self.trainer
 
-    def fit(self, corpus: Optional[Corpus] = None, *, epochs: int = 1,
+    def fit(self, corpus=None, *, epochs: int = 1,
             rounds: Optional[int] = None,
             test_corpus: Optional[Corpus] = None, eval_every: int = 0,
             verbose: bool = False) -> "LDA":
         """Train: ``epochs`` full passes (single host) / ``rounds`` global
         rounds (distributed; defaults to ``epochs`` if unset). Repeated
-        calls continue training the same bound corpus."""
+        calls continue training the same bound corpus. ``corpus`` may be a
+        padded ``Corpus``, a ``DocStream`` (ragged streaming ingest — one
+        pass over the stream per epoch, `docs/streaming.md`) or a plain
+        document iterable."""
         tr = self._bind(corpus, test_corpus)
         if rounds is not None and self.distributed is None:
             raise ValueError("rounds= applies to distributed training; "
@@ -170,8 +199,7 @@ class LDA:
                     print(f"{unit}={i + 1} docs={tr.docs_seen} {metrics}")
         return self
 
-    def partial_fit(self, corpus: Optional[Corpus] = None, *,
-                    steps: int = 1,
+    def partial_fit(self, corpus=None, *, steps: int = 1,
                     test_corpus: Optional[Corpus] = None) -> "LDA":
         """Run ``steps`` smallest resumable units (mini-batches / rounds)."""
         tr = self._bind(corpus, test_corpus)
@@ -179,15 +207,17 @@ class LDA:
             tr.run_step()
         return self
 
-    def resume(self, corpus: Corpus, *,
+    def resume(self, corpus, *,
                test_corpus: Optional[Corpus] = None, mesh=None,
                data_axes=None) -> "LDA":
-        """Rebind the corpus and restore the checkpointed trainer state.
+        """Rebind the corpus (or ``DocStream``) and restore the
+        checkpointed trainer state.
 
         The corpus is data, not state — it is not persisted in the
         checkpoint and must be supplied again. Everything else (λ-state,
-        memo, rng stream, mid-epoch remainder) comes from the manifest:
-        continuing is bit-equal to a run that never stopped.
+        memo, rng stream, mid-epoch remainder — for stream ingest the
+        epoch cursor and the packer's open buckets) comes from the
+        manifest: continuing is bit-equal to a run that never stopped.
         """
         if self._pending_restore is None:
             raise ValueError(
@@ -230,6 +260,18 @@ class LDA:
         """γ (D, K): unnormalised Dirichlet posterior parameters."""
         return self.inferencer(backend=backend,
                                batch_size=batch_size).posterior(corpus)
+
+    def posterior_docs(self, docs, *, backend: Optional[str] = None,
+                       batch_size: int = 256,
+                       double_buffer: bool = True) -> np.ndarray:
+        """γ (N, K) for RAGGED request documents — no padded ``Corpus``
+        required. ``docs`` is a ``DocStream`` or any iterable of documents
+        (token arrays or ``(ids, counts)`` pairs); with ``double_buffer``
+        the host packs batch t+1 while the device runs the E-step on
+        batch t (`docs/streaming.md`)."""
+        return self.inferencer(backend=backend,
+                               batch_size=batch_size).posterior_docs(
+                                   docs, double_buffer=double_buffer)
 
     def score(self, corpus: Corpus, *, seed: Optional[int] = None) -> float:
         """Held-out per-word log predictive probability (paper §6 metric):

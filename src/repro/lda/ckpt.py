@@ -11,7 +11,11 @@ A saved ``LDA`` is one manifest directory:
     memo.npz           — the MemoStore's chunks in their WIRE dtype (bf16
                          chunks stay bf16; γ-only stores include their
                          λ-epoch snapshots), or the D-IVI worker shards;
-    pending.npz / mvi.npz — mid-epoch batch remainder / MVI warm-start γ.
+    pending.npz / mvi.npz — mid-epoch batch remainder / MVI warm-start γ;
+    stream.npz         — stream-fed runs: the packer's open-bucket ragged
+                         docs and flushed-but-unprocessed batches (the
+                         epoch cursor itself lives in meta.trainer) —
+                         `docs/streaming.md`.
 
 ``load_lda_checkpoint`` also accepts the legacy flat ``.npz`` that
 ``train.py`` used to write via ``save_checkpoint(eng.state)``. Those

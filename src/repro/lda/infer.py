@@ -4,15 +4,23 @@ Training owns λ; serving only needs the per-document E-step against frozen
 topics (the same fixed point `predictive.log_predictive` runs before
 scoring). This module packages that E-step for request traffic:
 
-* documents are grouped into **length buckets** (the training ladder of
-  `repro.data.bow.bucket_corpus`, but keyed on the last LIVE column so
-  arbitrary request layouts slice losslessly — ``_serving_buckets``) and
-  each bucket sliced to its own width, so E-step FLOPs scale with a
-  request's actual length, not the corpus-wide maximum;
+* documents are grouped into **length buckets** under the ONE width
+  policy of the ragged token pipeline (`repro.data.stream`: the ladder
+  rung covering the last live slot — lossless for any slot layout,
+  including ``split_heldout`` halves) and each bucket sliced/packed to its
+  own width, so E-step FLOPs scale with a request's actual length, not
+  the corpus-wide maximum;
 * every bucket batch is padded to one fixed ``batch_size``, so the jit
   cache holds exactly **one compiled executable per bucket width** — a
   bounded, enumerable cache (``TopicInferencer.cache_info``) instead of
   one recompile per request shape;
+* ragged requests need no padded ``Corpus`` at all: ``posterior_docs``
+  consumes a ``DocStream`` / iterable of ragged documents through a
+  ``BatchPacker`` and — by default — an **async double-buffered
+  pipeline**: a host thread packs and stages request batch *t+1* while
+  the device runs the E-step on batch *t* (`docs/streaming.md`;
+  throughput record in ``BENCH_serve.json`` via
+  ``benchmarks/serve_bench.py``);
 * the E-step dispatches through ``cfg.estep_backend`` — with ``pallas``
   this is the fused fixed-point kernel (`docs/estep.md`), the production
   serving configuration.
@@ -24,8 +32,10 @@ exp(E[ln φ]) once); ``topic_posterior`` is the one-shot convenience the
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,44 +44,7 @@ import numpy as np
 from repro.core.estep import estep
 from repro.core.math import exp_dirichlet_expectation, safe_normalize
 from repro.core.types import Corpus, LDAConfig
-
-# the same width ladder repro.data.bow.bucket_corpus uses for training
-_WIDTH_BOUNDARIES = (8, 16, 32, 64, 128, 256, 512)
-
-
-def _serving_buckets(counts: np.ndarray, boundaries=_WIDTH_BOUNDARIES):
-    """Group documents by the padded width that COVERS their live slots.
-
-    Unlike training-side ``bucket_corpus`` (which buckets by the number of
-    live slots, valid for the canonical leading-column layout), serving
-    traffic may carry zero-count slots interspersed with live ones — e.g.
-    the observed halves ``predictive.split_heldout`` produces. Bucketing
-    by the LAST live column keeps the ``[:width]`` slice lossless for any
-    layout; interior zero-count slots are harmless (the E-step masks them).
-
-    EMPTY documents (no live slot at all, ``last == 0``) are real serving
-    traffic — requests whose every token fell outside the vocabulary —
-    and must not fall through the bucket ladder: a dropped row would leave
-    its γ all-zero in ``posterior`` and ``transform`` would then normalise
-    a zero vector. They ride the smallest bucket (the ``last <= w`` test
-    of the first rung, whose lower bound is inclusive at 0), where the
-    E-step leaves their γ at the prior α₀ in one sweep, i.e. the prior
-    posterior. Every document lands in exactly one bucket — ``posterior``
-    asserts the cover.
-    """
-    d, l = counts.shape
-    live = counts > 0
-    # width needed per doc = index of its last live column + 1 (0 if empty)
-    last = np.where(live.any(1), l - np.argmax(live[:, ::-1], axis=1), 0)
-    widths = sorted({min(b, l) for b in boundaries if b < l} | {l})
-    out = []
-    lo = -1                   # first rung includes last == 0 (empty docs)
-    for w in widths:
-        rows = np.nonzero((last > lo) & (last <= w))[0]
-        if len(rows):
-            out.append((rows.astype(np.int64), int(w)))
-        lo = w
-    return out
+from repro.data.stream import BatchPacker, as_ragged_doc, bucket_rows
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -79,6 +52,11 @@ def _posterior_batch(cfg: LDAConfig, exp_elog_beta: jax.Array,
                      token_ids: jax.Array, counts: jax.Array) -> jax.Array:
     """γ for one padded (B, width) batch via the configured backend."""
     return estep(cfg, exp_elog_beta, token_ids, counts).gamma
+
+
+# one staged request batch: (request positions, device ids, device counts,
+# bucket width, live row count)
+_Staged = Tuple[np.ndarray, jax.Array, jax.Array, int, int]
 
 
 class TopicInferencer:
@@ -104,20 +82,22 @@ class TopicInferencer:
                                                        axis=0)
         self._compiled_widths: Dict[int, int] = {}    # width → batches run
 
-    # -- core -----------------------------------------------------------
+    # -- padded-corpus requests -----------------------------------------
     def posterior(self, corpus: Corpus) -> np.ndarray:
         """γ (D, K) for every document, bucketed + fixed-batch padded.
 
         Empty documents (all-zero counts) come back at the prior γ = α₀ —
-        see ``_serving_buckets`` — so no row of the result can be the
-        all-zero vector ``transform`` would fail to normalise.
+        they ride the smallest bucket (`repro.data.stream.bucket_rows`
+        keeps ``last == 0`` rows on the first rung), so no row of the
+        result can be the all-zero vector ``transform`` would fail to
+        normalise.
         """
         d = corpus.num_docs
         out = np.zeros((d, self.cfg.num_topics), np.float32)
         ids_all = np.asarray(corpus.token_ids)
         cnts_all = np.asarray(corpus.counts)
         b = self.batch_size
-        buckets = _serving_buckets(cnts_all)
+        buckets = bucket_rows(cnts_all)
         covered = sum(len(rows) for rows, _ in buckets)
         assert covered == d, (covered, d)     # every doc in exactly one bucket
         for rows_all, width in buckets:
@@ -138,6 +118,126 @@ class TopicInferencer:
         """θ̄ (D, K): the normalised topic posterior (matches the θ̄ that
         ``predictive.log_predictive`` scores held-out words with)."""
         gamma = self.posterior(corpus)
+        return np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
+
+    # -- ragged requests -------------------------------------------------
+    def _stage(self, batch) -> _Staged:
+        """Pad a packed batch to the fixed ``batch_size`` and put it on
+        device — the host half of the pipeline (runs on the packer
+        thread when double-buffered)."""
+        n = len(batch.rows)
+        ids = np.zeros((self.batch_size, batch.width), np.int32)
+        cnts = np.zeros((self.batch_size, batch.width), np.float32)
+        ids[:n] = batch.token_ids
+        cnts[:n] = batch.counts
+        return (batch.rows, jnp.asarray(ids), jnp.asarray(cnts),
+                batch.width, n)
+
+    def _staged_batches(self, docs) -> Iterator[_Staged]:
+        """Pack a ragged request iterable into staged device batches.
+
+        The serving packer runs the SAME width policy as training but with
+        an open-ended ladder (requests of unseen lengths extend it by
+        doubling) — the jit cache stays one executable per width.
+        """
+        it = (docs.iter_from(0) if hasattr(docs, "iter_from")
+              else (as_ragged_doc(d) for d in docs))
+        packer = BatchPacker(self.batch_size,
+                             vocab_size=self.cfg.vocab_size)
+        pos = 0
+        for ids, cnts in it:
+            batch = packer.add(pos, ids, cnts)
+            pos += 1
+            if batch is not None:
+                yield self._stage(batch)
+        for batch in packer.flush():
+            yield self._stage(batch)
+
+    def posterior_docs(self, docs, *,
+                       double_buffer: bool = True) -> np.ndarray:
+        """γ (N, K) for RAGGED request documents — no padded ``Corpus``.
+
+        ``docs``: a ``DocStream`` or any iterable of documents (raw token
+        arrays with repeats, or unique ``(ids, counts)`` pairs; empty
+        documents return the prior γ = α₀). Results come back in request
+        order.
+
+        ``double_buffer=True`` (default) overlaps ingest with compute: a
+        host thread packs, pads and stages batch *t+1* while the device
+        runs the E-step on batch *t* (the consumer dispatches without
+        blocking — jax's async dispatch keeps the device queue full — and
+        only converts γ to host arrays once every batch is in flight).
+        ``double_buffer=False`` is the synchronous reference path: pack →
+        run → block, one batch at a time (the baseline
+        ``benchmarks/serve_bench.py`` measures the pipelining win
+        against). Both paths run identical batches through the same jit
+        entries, so their results are bit-identical.
+        """
+        results: List[Tuple[np.ndarray, jax.Array, int]] = []
+        if double_buffer:
+            q: "queue.Queue" = queue.Queue(maxsize=2)
+            abort = threading.Event()
+            err: List[BaseException] = []
+
+            def put(item) -> bool:
+                # bounded put that gives up once the consumer aborts, so a
+                # consumer-side exception can never leave this thread (and
+                # its staged device buffers) blocked on a full queue
+                while not abort.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        return True
+                    except queue.Full:
+                        continue
+                return False
+
+            def produce():
+                try:
+                    for staged in self._staged_batches(docs):
+                        if not put(staged):
+                            return
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    err.append(e)
+                finally:
+                    put(None)
+
+            t = threading.Thread(target=produce, name="serve-packer",
+                                 daemon=True)
+            t.start()
+            try:
+                while True:
+                    staged = q.get()
+                    if staged is None:
+                        break
+                    results.append(self._dispatch(staged))
+            finally:
+                abort.set()
+                t.join()
+            if err:
+                raise err[0]
+        else:
+            for staged in self._staged_batches(docs):
+                rows, gamma, n = self._dispatch(staged)
+                gamma.block_until_ready()     # the synchronous baseline
+                results.append((rows, gamma, n))
+        total = sum(n for _, _, n in results)
+        out = np.zeros((total, self.cfg.num_topics), np.float32)
+        for rows, gamma, n in results:
+            out[rows] = np.asarray(gamma[:n])
+        return out
+
+    def _dispatch(self, staged: _Staged) -> Tuple[np.ndarray, jax.Array, int]:
+        rows, ids, cnts, width, n = staged
+        gamma = _posterior_batch(self.cfg, self.exp_elog_beta, ids, cnts)
+        self._compiled_widths[width] = \
+            self._compiled_widths.get(width, 0) + 1
+        return rows, gamma, n
+
+    def transform_docs(self, docs, *, double_buffer: bool = True
+                       ) -> np.ndarray:
+        """θ̄ (N, K) for ragged request documents (``posterior_docs``
+        normalised)."""
+        gamma = self.posterior_docs(docs, double_buffer=double_buffer)
         return np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
 
     # -- introspection ---------------------------------------------------

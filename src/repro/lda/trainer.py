@@ -116,16 +116,25 @@ class Trainer:
 class SingleHostTrainer(Trainer):
     """``LDAEngine`` behind the Trainer contract, with a resumable epoch.
 
-    The trainer materialises each epoch's batch sequence up front (the
-    exact sequence — and the exact rng consumption — ``run_epoch`` uses,
-    via ``LDAEngine.epoch_batches``) and steps through it, so a checkpoint
-    taken mid-epoch persists the unvisited remainder and the resumed run
-    finishes the same epoch with the same batches.
+    Materialized path: the trainer materialises each epoch's batch
+    sequence up front (the exact sequence — and the exact rng consumption
+    — ``run_epoch`` uses, via ``LDAEngine.epoch_batches``) and steps
+    through it, so a checkpoint taken mid-epoch persists the unvisited
+    remainder and the resumed run finishes the same epoch with the same
+    batches.
+
+    Stream path (``corpus`` is a ``DocStream``): no batch sequence exists
+    up front — documents are pulled and packed per mini-batch. A
+    mid-epoch checkpoint persists the **epoch cursor** (documents pulled),
+    the packer's open buckets (ragged — bounded by
+    num_widths × batch_size documents) and any flushed-but-unprocessed
+    batches; ``restore`` re-seats the stream at the cursor, so
+    save → load → resume stays bit-equal to an uninterrupted run.
     """
 
     kind = "single"
 
-    def __init__(self, cfg: LDAConfig, corpus: Corpus, *, algo: str,
+    def __init__(self, cfg: LDAConfig, corpus, *, algo: str,
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
@@ -135,6 +144,7 @@ class SingleHostTrainer(Trainer):
                              memo_store=memo_store, chunk_docs=chunk_docs,
                              bucket_by_length=bucket_by_length)
         self.algo = algo
+        self._streamed = self.eng.stream is not None
         self._pending: List[Tuple[np.ndarray, Optional[int]]] = []
 
     # -- views ----------------------------------------------------------
@@ -152,20 +162,38 @@ class SingleHostTrainer(Trainer):
 
     @property
     def pending_batches(self) -> int:
-        """Batches of the current epoch not yet visited (0 ≡ epoch boundary)."""
+        """Batches of the current epoch not yet visited (0 ≡ epoch
+        boundary). Stream mode: flushed-but-unprocessed batches only —
+        ``stream_cursor`` is the mid-epoch indicator there."""
+        if self._streamed:
+            return len(self.eng._stream_emitted)
         return len(self._pending)
+
+    @property
+    def stream_cursor(self) -> int:
+        """Documents pulled from the stream this epoch (stream mode)."""
+        return self.eng._stream_cursor if self._streamed else 0
 
     # -- stepping -------------------------------------------------------
     def run_step(self) -> None:
         if self.algo == "mvi":
             raise ValueError("mvi is full-batch coordinate ascent — it has "
                              "no mini-batch step; use run_pass()")
+        if self._streamed:
+            if not self.eng.stream_step():
+                # exactly at an epoch boundary: start the next pass
+                self.eng.stream_step()
+            return
         if not self._pending:
             self._pending = list(self.eng.epoch_batches())
         rows, width = self._pending.pop(0)
         self.eng.run_minibatch(rows, width=width)
 
     def run_pass(self) -> None:
+        if self._streamed:
+            while self.eng.stream_step():
+                pass
+            return
         if self.algo == "mvi":
             self.eng.run_epoch()
             return
@@ -195,12 +223,30 @@ class SingleHostTrainer(Trainer):
             "wall_elapsed": time.perf_counter() - eng._t0,
             "pending_widths": [None if w is None else int(w)
                                for _, w in self._pending],
+            "streamed": self._streamed,
         }
         arrays: Dict[str, Dict[str, np.ndarray]] = {
             "state": _capture_state(eng.state),
             "pending": {f"batch_{i:05d}": np.asarray(rows, np.int64)
                         for i, (rows, _) in enumerate(self._pending)},
         }
+        if self._streamed:
+            # the epoch cursor + the packer's open buckets + any flushed
+            # batches not yet processed — the full mid-epoch stream state
+            pend = eng._packer.pending_docs()
+            meta["stream_cursor"] = int(eng._stream_cursor)
+            meta["stream_pending_pos"] = [int(p) for p, _, _ in pend]
+            meta["stream_emitted_widths"] = [int(b.width)
+                                             for b in eng._stream_emitted]
+            grp: Dict[str, np.ndarray] = {}
+            for i, (_pos, ids, cnts) in enumerate(pend):
+                grp[f"pend_{i:05d}_ids"] = np.asarray(ids, np.int32)
+                grp[f"pend_{i:05d}_cnts"] = np.asarray(cnts, np.float32)
+            for i, b in enumerate(eng._stream_emitted):
+                grp[f"emit_{i:05d}_rows"] = np.asarray(b.rows, np.int64)
+                grp[f"emit_{i:05d}_ids"] = np.asarray(b.token_ids)
+                grp[f"emit_{i:05d}_cnts"] = np.asarray(b.counts)
+            arrays["stream"] = grp
         if eng.memo is not None:
             meta["memo_kind"] = eng.memo.kind
             arrays["memo"] = eng.memo.state_dict()
@@ -212,6 +258,13 @@ class SingleHostTrainer(Trainer):
         if meta["algo"] != self.algo:
             raise ValueError(f"checkpoint algo {meta['algo']!r} != "
                              f"trainer algo {self.algo!r}")
+        if bool(meta.get("streamed", False)) != self._streamed:
+            kind = "stream-fed" if meta.get("streamed") else "materialized"
+            raise ValueError(
+                f"checkpoint belongs to a {kind} run — resume it with a "
+                "matching data source (DocStream vs padded Corpus); the "
+                "epoch bookkeeping of the two ingest paths is not "
+                "interchangeable")
         eng = self.eng
         eng.state = _restore_state(arrays["state"], eng.state)
         if eng.memo is not None:
@@ -232,6 +285,23 @@ class SingleHostTrainer(Trainer):
             (arrays["pending"][f"batch_{i:05d}"],
              None if w is None else int(w))
             for i, w in enumerate(widths)]
+        if self._streamed:
+            from repro.data.stream import BatchPacker, PackedBatch
+            grp = arrays.get("stream", {})
+            packer = BatchPacker(eng.batch_size,
+                                 max_width=eng.stream.max_unique,
+                                 vocab_size=eng.cfg.vocab_size)
+            packer.load_pending([
+                (pos, grp[f"pend_{i:05d}_ids"], grp[f"pend_{i:05d}_cnts"])
+                for i, pos in enumerate(meta["stream_pending_pos"])])
+            eng._packer = packer
+            eng._stream_cursor = int(meta["stream_cursor"])
+            eng._stream_iter = None          # re-seated lazily at the cursor
+            eng._stream_emitted = [
+                PackedBatch(grp[f"emit_{i:05d}_rows"],
+                            grp[f"emit_{i:05d}_ids"],
+                            grp[f"emit_{i:05d}_cnts"], int(w))
+                for i, w in enumerate(meta["stream_emitted_widths"])]
 
 
 # ---------------------------------------------------------------------------
@@ -366,15 +436,20 @@ class DIVITrainer(Trainer):
         self._t0 = time.perf_counter() - float(meta["wall_elapsed"])
 
 
-def make_trainer(cfg: LDAConfig, corpus: Corpus, *, algo: str,
+def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                  distributed: Optional[DIVIConfig] = None,
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False, mesh=None,
                  data_axes=None) -> Trainer:
-    """Bind a corpus to the right Trainer for (algo, distributed)."""
+    """Bind a corpus (or ``DocStream``) to the right Trainer."""
     if distributed is not None:
+        if not isinstance(corpus, Corpus):
+            raise ValueError(
+                "D-IVI shards a materialized corpus across workers — "
+                "stream ingest is single-host only; use "
+                "repro.data.stream.materialize(stream) first")
         return DIVITrainer(cfg, distributed, corpus, seed=seed,
                            test_corpus=test_corpus, mesh=mesh,
                            data_axes=data_axes)

@@ -1,9 +1,10 @@
 """Serving + distributed-bound correctness fixes (PR 4 satellites).
 
-* empty documents (all-zero counts) through ``_serving_buckets`` /
-  ``posterior`` / ``transform`` / the ``serve_lda`` launcher: routed to the
-  smallest bucket, returned at the prior γ = α₀ / uniform θ̄ — never an
-  all-zero row or a NaN from normalising one;
+* empty documents (all-zero counts) through the serving buckets (now the
+  unified ``repro.data.stream.bucket_rows``) / ``posterior`` /
+  ``transform`` / the ``serve_lda`` launcher: routed to the smallest
+  bucket, returned at the prior γ = α₀ / uniform θ̄ — never an all-zero
+  row or a NaN from normalising one;
 * ``TopicInferencer.cache_info`` reports batch counters and compiled
   widths as separate quantities;
 * ``DIVITrainer.full_bound``: the all-gather-free per-shard reduction must
@@ -22,8 +23,9 @@ from repro.core.memo import DenseMemoStore
 from repro.core.types import Corpus, LDAConfig
 from repro.data.bow import corpus_from_docs
 from repro.dist.protocol import DIVIConfig
+from repro.data.stream import bucket_rows
 from repro.lda import LDA
-from repro.lda.infer import TopicInferencer, _serving_buckets
+from repro.lda.infer import TopicInferencer
 from repro.lda.trainer import DIVITrainer
 
 
@@ -44,7 +46,7 @@ def test_serving_buckets_cover_every_document():
     cnts = (rng.poisson(0.4, (50, 40)) * (rng.random((50, 40)) < 0.5))
     cnts = cnts.astype(np.float32)
     cnts[::7] = 0.0                            # sprinkle empty docs
-    buckets = _serving_buckets(cnts)
+    buckets = bucket_rows(cnts)
     covered = np.sort(np.concatenate([rows for rows, _ in buckets]))
     np.testing.assert_array_equal(covered, np.arange(50))
     # the empty docs ride the smallest bucket
@@ -54,7 +56,7 @@ def test_serving_buckets_cover_every_document():
 
 
 def test_serving_buckets_all_empty_corpus():
-    buckets = _serving_buckets(np.zeros((5, 12), np.float32))
+    buckets = bucket_rows(np.zeros((5, 12), np.float32))
     assert len(buckets) == 1
     rows, w = buckets[0]
     np.testing.assert_array_equal(rows, np.arange(5))

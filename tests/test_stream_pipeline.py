@@ -1,0 +1,476 @@
+"""Ragged token pipeline (ISSUE 5): DocStream ingest, BatchPacker, serving.
+
+The acceptance bars:
+
+* **packer properties** — every document appears in exactly one emitted
+  batch per pass, batch widths come off the one ladder and cover each
+  document's live extent, no batch exceeds ``batch_size``;
+* **stream-vs-materialized bit-equality** — an IVI run fed by a
+  ``DocStream`` matches the padded-``Corpus`` run trajectory EXACTLY
+  under the same batch schedule (λ, ⟨m_vk⟩, init_frac bit-equal), and a
+  mid-epoch save → load → resume through the stream cursor continues
+  bit-equally;
+* **ragged-serving parity** — ``posterior_docs`` equals the padded
+  ``posterior`` to fp32 tolerance (empty documents included, returned at
+  the prior), and the double-buffered pipeline is bit-identical to the
+  synchronous path;
+* **UCI lazy stream** — ``UCIDocStream`` materializes to exactly what the
+  eager ``load_uci`` produced, and resumes from a cursor.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LDAConfig, LDAEngine
+from repro.data import (PAPER_CORPORA, BatchPacker, CorpusDocStream,
+                        ListDocStream, UCIDocStream, bucket_corpus,
+                        bucket_padding_stats, corpus_from_docs, make_corpus,
+                        materialize, save_uci, width_ladder)
+from repro.lda import LDA
+
+
+def _cfg(spec, **kw):
+    kw.setdefault("estep_max_iters", 20)
+    return LDAConfig(num_topics=4, vocab_size=spec.vocab_size, **kw)
+
+
+def _same(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _ragged_docs(rng, n, vocab, max_len=40):
+    out = []
+    for _ in range(n):
+        ln = int(rng.integers(0, max_len))
+        ids = np.sort(rng.choice(vocab, size=ln, replace=False))
+        cnts = (rng.poisson(1.0, ln) + 1).astype(np.float32)
+        out.append((ids.astype(np.int32), cnts))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# packer properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), batch=st.integers(1, 32))
+def test_packer_every_doc_exactly_once(seed, batch):
+    rng = np.random.default_rng(seed)
+    docs = _ragged_docs(rng, int(rng.integers(1, 80)), vocab=500)
+    packer = BatchPacker(batch, max_width=64)
+    ladder = width_ladder(64)
+    emitted = []
+    for pos, (ids, cnts) in enumerate(docs):
+        out = packer.add(pos, ids, cnts)
+        if out is not None:
+            emitted.append(out)
+    emitted += packer.flush()
+    rows = np.concatenate([e.rows for e in emitted]) if emitted else []
+    assert sorted(np.asarray(rows).tolist()) == list(range(len(docs)))
+    for e in emitted:
+        assert len(e.rows) <= batch
+        assert e.width in ladder                     # widths off the ladder
+        for r, pos in enumerate(e.rows):
+            ids, cnts = docs[pos]
+            assert len(ids) <= e.width               # width covers the doc
+            _same(e.token_ids[r, : len(ids)], ids)   # content bit-equal
+            _same(e.counts[r, : len(cnts)], cnts)
+            assert not e.counts[r, len(cnts):].any()  # zero padding
+
+
+def test_packer_open_ladder_extends_by_doubling():
+    packer = BatchPacker(4)                          # serving: no max_width
+    assert packer.width_for(512) == 512
+    assert packer.width_for(513) == 1024
+    assert packer.width_for(3000) == 4096
+    assert packer.width_for(0) == 8                  # empty docs: first rung
+
+
+def test_packer_clips_overlong_docs_to_most_frequent():
+    packer = BatchPacker(1, max_width=4)
+    ids = np.arange(8, dtype=np.int32)
+    cnts = np.asarray([1, 9, 2, 8, 3, 7, 4, 6], np.float32)
+    batch = packer.add(0, ids, cnts)
+    assert batch.width == 4
+    assert set(batch.counts[0].tolist()) == {9, 8, 7, 6}
+
+
+def test_packer_pending_roundtrip():
+    """pending_docs → load_pending reconstructs the exact packer state."""
+    rng = np.random.default_rng(3)
+    docs = _ragged_docs(rng, 23, vocab=300)
+    a = BatchPacker(8, max_width=64)
+    for pos, (ids, cnts) in enumerate(docs):
+        a.add(pos, ids, cnts)
+    b = BatchPacker(8, max_width=64)
+    b.load_pending(a.pending_docs())
+    fa, fb = a.flush(), b.flush()
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert x.width == y.width
+        _same(x.rows, y.rows)
+        _same(x.token_ids, y.token_ids)
+        _same(x.counts, y.counts)
+
+
+def test_bucket_corpus_delegates_to_one_policy(tiny_corpus):
+    """Training buckets == the unified bucket_rows, and the padding stats
+    carry per-bucket pad fractions."""
+    train, _, _ = tiny_corpus
+    from repro.data import bucket_rows
+    buckets = bucket_corpus(train)
+    raw = bucket_rows(train.counts)
+    assert buckets.widths == [w for _, w in raw]
+    for got, (rows, _) in zip(buckets.doc_idx, raw):
+        _same(got, rows)
+    stats = bucket_padding_stats(train, buckets)
+    assert len(stats["per_bucket"]) == buckets.num_buckets
+    assert all(0.0 <= b["pad_frac"] < 1.0 for b in stats["per_bucket"])
+
+
+# ---------------------------------------------------------------------------
+# stream-vs-materialized training bit-equality
+# ---------------------------------------------------------------------------
+
+def _packer_schedule(stream, batch_size):
+    """The deterministic batch schedule the stream engine will run."""
+    packer = BatchPacker(batch_size, max_width=stream.max_unique)
+    out = []
+    for pos, (ids, cnts) in enumerate(stream.iter_from(0)):
+        b = packer.add(pos, ids, cnts)
+        if b is not None:
+            out.append(b)
+    return out + packer.flush()
+
+
+@pytest.mark.parametrize("algo,store", [("ivi", "dense"),
+                                        ("ivi", "chunked"),
+                                        ("sivi", "dense"),
+                                        ("svi", "dense")])
+def test_stream_run_bit_equals_padded_corpus_run(tiny_corpus, algo, store):
+    """The tentpole invariant: per-minibatch ragged packing (no (D, L)
+    corpus resident) is bit-transparent — the stream-fed trajectory equals
+    the padded-corpus engine driven with the same batch schedule, over two
+    full epochs, for every wire dtype."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    stream = CorpusDocStream(train, spec.vocab_size)
+    se = LDAEngine(cfg, stream, algo=algo, batch_size=16, seed=0,
+                   memo_store=store, chunk_docs=32)
+    ce = LDAEngine(cfg, train, algo=algo, batch_size=16, seed=0,
+                   memo_store=store, chunk_docs=32)
+    sched = _packer_schedule(stream, 16)
+    for _ in range(2):
+        se.run_epoch()
+        for b in sched:
+            ce.run_minibatch(b.rows, width=b.width)
+    _same(se.state.lam, ce.state.lam)
+    _same(se.state.m_vk, ce.state.m_vk)
+    _same(se.state.init_frac, ce.state.init_frac)
+    assert se.docs_seen == ce.docs_seen == 2 * train.num_docs
+    if se.memo is not None:
+        assert float(se.state.init_frac) == 0.0      # every doc visited
+        sa, sb = se.memo.state_dict(), ce.memo.state_dict()
+        for k in sa:
+            _same(sa[k], sb[k])
+        # and the streamed memoized bound equals the store read-through
+        np.testing.assert_allclose(se.full_bound(), ce.full_bound(),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("store", ["dense", "chunked"])
+def test_stream_mid_epoch_save_resume_bit_equal(tiny_corpus, tmp_path,
+                                                store):
+    """Save with the cursor mid-epoch AND open packer buckets, resume on a
+    fresh stream object: λ, ⟨m_vk⟩ and the memo must be bit-equal to the
+    run that never stopped (the epoch cursor + open buckets round-trip
+    through the manifest)."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    path = os.path.join(tmp_path, "ck")
+    kw = dict(algo="ivi", batch_size=16, seed=7, memo_store=store,
+              chunk_docs=16)
+
+    a = LDA(cfg, **kw).partial_fit(CorpusDocStream(train, spec.vocab_size),
+                                   steps=3)
+    cursor = a.trainer.stream_cursor
+    assert cursor > 0                                # genuinely mid-epoch
+    a.save(path)
+    a.partial_fit(steps=6)                           # crosses the epoch tail
+
+    b = LDA.load(path).resume(CorpusDocStream(train, spec.vocab_size))
+    assert b.trainer.stream_cursor == cursor         # cursor round-tripped
+    b.partial_fit(steps=6)
+
+    _same(a.lam, b.lam)
+    _same(a.state.m_vk, b.state.m_vk)
+    _same(a.state.init_frac, b.state.init_frac)
+    sa, sb = a.trainer.eng.memo.state_dict(), b.trainer.eng.memo.state_dict()
+    for k in sa:
+        _same(sa[k], sb[k])
+
+
+def test_stream_facade_matches_engine(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    lda = LDA(cfg, algo="ivi", batch_size=16, seed=0).fit(
+        CorpusDocStream(train, spec.vocab_size), epochs=2)
+    eng = LDAEngine(cfg, CorpusDocStream(train, spec.vocab_size),
+                    algo="ivi", batch_size=16, seed=0)
+    eng.run_epoch()
+    eng.run_epoch()
+    _same(lda.lam, eng.state.lam)
+    assert lda.docs_seen == eng.docs_seen
+
+
+def test_stream_resume_mode_mismatch_refuses(tiny_corpus, tmp_path):
+    """A stream-fed checkpoint cannot silently resume as a materialized
+    run (and vice versa) — the epoch bookkeeping differs."""
+    train, _, spec = tiny_corpus
+    path = os.path.join(tmp_path, "ck")
+    LDA(_cfg(spec), algo="ivi", batch_size=16).partial_fit(
+        CorpusDocStream(train, spec.vocab_size), steps=1).save(path)
+    with pytest.raises(ValueError, match="stream-fed"):
+        LDA.load(path).resume(train)
+    path2 = os.path.join(tmp_path, "ck2")
+    LDA(_cfg(spec), algo="ivi", batch_size=16).partial_fit(
+        train, steps=1).save(path2)
+    with pytest.raises(ValueError, match="materialized"):
+        LDA.load(path2).resume(CorpusDocStream(train, spec.vocab_size))
+
+
+def test_stream_rejects_unsupported_modes(tiny_corpus):
+    train, _, spec = tiny_corpus
+    stream = CorpusDocStream(train, spec.vocab_size)
+    with pytest.raises(ValueError, match="full-batch"):
+        LDAEngine(_cfg(spec), stream, algo="mvi")
+    with pytest.raises(ValueError, match="materialize"):
+        LDAEngine(_cfg(spec), stream, algo="sivi", memo_store="gamma")
+    from repro.dist import DIVIConfig
+    with pytest.raises(ValueError, match="materialize"):
+        LDA(_cfg(spec), algo="divi",
+            distributed=DIVIConfig(num_workers=2)).fit(stream, rounds=1)
+
+
+def test_plain_iterable_ingest(tiny_corpus):
+    """LDA.fit on a raw list of token arrays: wrapped as a ListDocStream,
+    bit-equal to the explicit stream."""
+    _, _, spec = tiny_corpus
+    rng = np.random.default_rng(5)
+    raw = [rng.integers(0, spec.vocab_size, size=rng.integers(1, 25))
+           for _ in range(40)]
+    cfg = _cfg(spec)
+    a = LDA(cfg, algo="ivi", batch_size=8, seed=1).fit(raw, epochs=1)
+    b = LDA(cfg, algo="ivi", batch_size=8, seed=1).fit(
+        ListDocStream(raw, spec.vocab_size), epochs=1)
+    _same(a.lam, b.lam)
+
+
+# ---------------------------------------------------------------------------
+# UCI lazy stream
+# ---------------------------------------------------------------------------
+
+def test_uci_stream_matches_materialized_loader(tiny_corpus, tmp_path):
+    from repro.data import load_uci
+    train, _, _ = tiny_corpus
+    path = os.path.join(tmp_path, "docword.txt.gz")
+    save_uci(train, path)
+    eager, _ = load_uci(path)
+    stream = UCIDocStream(path)
+    assert stream.num_docs == eager.num_docs
+    assert stream.max_unique == eager.max_unique
+    assert stream.num_words == float(np.asarray(eager.counts).sum())
+    got = materialize(stream)
+    _same(got.token_ids, eager.token_ids)
+    _same(got.counts, eager.counts)
+
+
+def test_uci_stream_cursor_resume(tiny_corpus, tmp_path):
+    train, _, _ = tiny_corpus
+    path = os.path.join(tmp_path, "docword.txt")
+    save_uci(train, path)
+    stream = UCIDocStream(path)
+    full = list(stream.iter_from(0))
+    tail = list(stream.iter_from(40))
+    assert len(tail) == len(full) - 40
+    for (ai, ac), (bi, bc) in zip(full[40:], tail):
+        _same(ai, bi)
+        _same(ac, bc)
+
+
+def test_uci_stream_empty_doc_gaps(tmp_path):
+    """docIDs absent from the file are empty docs: the stream mirrors the
+    eager loader's placeholder and keeps positions aligned."""
+    path = os.path.join(tmp_path, "docword.txt")
+    with open(path, "w") as f:
+        f.write("4\n9\n3\n")                   # doc 2 (1-based) is absent
+        f.write("1 3 2\n3 5 1\n4 9 4\n")
+    from repro.data import load_uci
+    eager, _ = load_uci(path)
+    stream = UCIDocStream(path)
+    got = materialize(stream)
+    assert stream.num_docs == 4
+    _same(got.token_ids, eager.token_ids)
+    _same(got.counts, eager.counts)
+
+
+def test_uci_stream_fed_training_matches_materialized(tiny_corpus, tmp_path):
+    """End-to-end: IVI fed by the lazy UCI stream == IVI on the eagerly
+    loaded corpus driven with the same schedule."""
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec)
+    path = os.path.join(tmp_path, "docword.txt.gz")
+    save_uci(train, path)
+    from repro.data import load_uci
+    eager, _ = load_uci(path)
+    stream = UCIDocStream(path)
+    se = LDAEngine(cfg, stream, algo="ivi", batch_size=16, seed=0)
+    se.run_epoch()
+    ce = LDAEngine(cfg, eager, algo="ivi", batch_size=16, seed=0)
+    for b in _packer_schedule(stream, 16):
+        ce.run_minibatch(b.rows, width=b.width)
+    _same(se.state.lam, ce.state.lam)
+    _same(se.state.m_vk, ce.state.m_vk)
+
+
+# ---------------------------------------------------------------------------
+# ragged serving parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_lda(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = _cfg(spec, estep_max_iters=100, estep_tol=1e-6)
+    return LDA(cfg, algo="ivi", batch_size=16, seed=0).fit(train, epochs=1)
+
+
+def test_posterior_docs_matches_padded_posterior(served_lda, tiny_corpus):
+    """Ragged requests == padded Corpus requests to fp32 tolerance, empty
+    documents included (returned at the prior γ = α₀)."""
+    _, _, spec = tiny_corpus
+    lda = served_lda
+    rng = np.random.default_rng(2)
+    raw = [rng.integers(0, spec.vocab_size, size=rng.integers(1, 30))
+           for _ in range(37)]
+    raw[5] = np.asarray([], np.int64)            # an empty (OOV) request
+    raw[20] = np.asarray([], np.int64)
+
+    corpus = materialize(ListDocStream(raw, spec.vocab_size))
+    inf = lda.inferencer(batch_size=8)
+    g_pad = inf.posterior(corpus)
+    g_ragged = inf.posterior_docs(raw, double_buffer=True)
+    assert g_ragged.shape == g_pad.shape
+    np.testing.assert_allclose(g_ragged, g_pad, rtol=2e-3, atol=2e-3)
+    assert np.allclose(g_ragged[[5, 20]], lda.cfg.alpha0)
+
+
+def test_posterior_docs_double_buffer_bit_equals_sync(served_lda, tiny_corpus):
+    """Both paths run identical staged batches through the same jit
+    entries — results must be bit-identical, in request order."""
+    _, test, spec = tiny_corpus
+    docs = list(CorpusDocStream(test, spec.vocab_size).iter_from(0))
+    inf = served_lda.inferencer(batch_size=8)
+    g_sync = inf.posterior_docs(docs, double_buffer=False)
+    g_db = inf.posterior_docs(docs, double_buffer=True)
+    _same(g_sync, g_db)
+    assert g_sync.shape == (test.num_docs, served_lda.cfg.num_topics)
+
+
+def test_posterior_docs_accepts_doc_stream(served_lda, tiny_corpus):
+    _, test, spec = tiny_corpus
+    stream = CorpusDocStream(test, spec.vocab_size)
+    g = served_lda.posterior_docs(stream, batch_size=8)
+    g_pad = served_lda.posterior(test, batch_size=8)
+    np.testing.assert_allclose(g, g_pad, rtol=2e-3, atol=2e-3)
+
+
+def test_posterior_docs_empty_request_set(served_lda):
+    g = served_lda.posterior_docs([], batch_size=8)
+    assert g.shape == (0, served_lda.cfg.num_topics)
+
+
+def test_posterior_docs_producer_error_propagates(served_lda):
+    def bad_docs():
+        yield np.asarray([1, 2, 3])
+        raise RuntimeError("ingest failure")
+
+    with pytest.raises(RuntimeError, match="ingest failure"):
+        served_lda.posterior_docs(bad_docs(), batch_size=8)
+
+
+def test_posterior_docs_consumer_error_unblocks_producer(served_lda,
+                                                         monkeypatch):
+    """A consumer-side failure (the E-step dispatch raises) while the
+    producer is blocked on the full bounded queue: the error must
+    propagate and the packer thread must wind down, not stay blocked on
+    q.put forever."""
+    import threading
+    import time
+
+    inf = served_lda.inferencer(batch_size=4)
+    boom = RuntimeError("device fell over")
+
+    def bad_dispatch(staged):
+        time.sleep(0.2)          # let the producer fill the queue + block
+        raise boom
+
+    monkeypatch.setattr(inf, "_dispatch", bad_dispatch)
+    docs = [np.asarray([1, 2, 3])] * 64      # 16 batches ≫ queue capacity
+    before = threading.active_count()
+    with pytest.raises(RuntimeError, match="device fell over"):
+        inf.posterior_docs(docs, double_buffer=True)
+    for _ in range(100):                     # packer thread must wind down
+        if threading.active_count() <= before:
+            break
+        time.sleep(0.05)
+    assert threading.active_count() <= before
+
+
+# ---------------------------------------------------------------------------
+# review-fix regressions: OOV guards, unsorted UCI, iterable rebind
+# ---------------------------------------------------------------------------
+
+def test_stream_training_rejects_out_of_vocab_ids(tiny_corpus):
+    """jnp gathers CLAMP out-of-range ids — the packer must refuse them
+    instead of silently training on token V−1."""
+    _, _, spec = tiny_corpus
+    bad = [(np.asarray([0, spec.vocab_size + 7], np.int32),
+            np.asarray([1.0, 2.0], np.float32))]
+    lda = LDA(_cfg(spec), algo="ivi", batch_size=4)
+    with pytest.raises(ValueError, match="outside the vocabulary"):
+        lda.fit(bad, epochs=1)
+
+
+def test_serving_rejects_out_of_vocab_ids(served_lda):
+    with pytest.raises(ValueError, match="outside the vocabulary"):
+        served_lda.posterior_docs([np.asarray([10**6])], batch_size=4)
+
+
+def test_uci_stream_rejects_ungrouped_lines(tmp_path):
+    """Lines out of docID order would silently misattribute tokens in a
+    lazy reader — it must fail loudly instead."""
+    path = os.path.join(tmp_path, "docword.txt")
+    with open(path, "w") as f:
+        f.write("2\n10\n3\n")
+        f.write("1 5 2\n2 7 1\n1 9 1\n")    # doc 1 resumes after doc 2
+    stream = UCIDocStream(path)
+    with pytest.raises(ValueError, match="not grouped"):
+        list(stream.iter_from(0))
+
+
+def test_refit_same_plain_iterable_continues(tiny_corpus):
+    """fit(docs); fit(docs) with the SAME list must continue training, not
+    raise 'already bound' because of a fresh ListDocStream wrapper."""
+    _, _, spec = tiny_corpus
+    rng = np.random.default_rng(9)
+    docs = [rng.integers(0, spec.vocab_size, size=rng.integers(1, 20))
+            for _ in range(24)]
+    cfg = _cfg(spec)
+    lda = LDA(cfg, algo="ivi", batch_size=8, seed=2).fit(docs, epochs=1)
+    lda.fit(docs, epochs=1)                  # continues the bound stream
+    want = LDA(cfg, algo="ivi", batch_size=8, seed=2).fit(docs, epochs=2)
+    _same(lda.lam, want.lam)
+    with pytest.raises(ValueError, match="already bound"):
+        lda.fit(list(docs), epochs=1)        # a DIFFERENT object still refuses

@@ -157,6 +157,22 @@ def pipeline_check_and_timing(*, timed: bool, n_docs: int = 2048,
                                                      - t0)
         out["measured_ratio"] = (out["double_buffered_docs_per_s"]
                                  / out["sync_docs_per_s"])
+        # Honesty flag: at this CPU-proxy shape the measured ratio sits
+        # BELOW 1 — host packing (plus the GIL the producer thread shares
+        # with the interpreted device loop) costs far more than the
+        # device E-step it is meant to hide, so overlapping buys nothing
+        # and thread handoff costs a little. That does not contradict the
+        # modeled 1.3x Arxiv bar (t_pack comparable to t_step there); it
+        # means THIS measurement is a proxy for pipeline overhead, not
+        # evidence about the overlap win. Recorded explicitly so the
+        # number cannot be quoted as a TPU result.
+        out["proxy_regime"] = True
+        out["proxy_reason"] = (
+            "CPU-proxy shapes: per-batch host pack cost >> interpreted "
+            "device E-step cost, so double-buffering cannot win here; "
+            "the overlap claim is carried by the modeled arxiv_serve "
+            "record, the bit-equality check is what this measurement "
+            "guards")
     return out
 
 
@@ -190,7 +206,8 @@ if __name__ == "__main__":
     if "measured_ratio" in pl:
         print(f"  measured    : sync {pl['sync_docs_per_s']:.0f} docs/s, "
               f"double-buffered {pl['double_buffered_docs_per_s']:.0f} "
-              f"docs/s ({pl['measured_ratio']:.2f}x, CPU proxy)")
+              f"docs/s ({pl['measured_ratio']:.2f}x, proxy_regime="
+              f"{pl['proxy_regime']} — pack cost >> device cost here)")
     print(f"  host packing: {rec['measured_pack_doc_us']:.1f} us/doc "
           f"measured (model constant {PACK_DOC_US:.0f})")
     print(f"  arxiv model : t_pack={ax['t_pack_ms']:.2f}ms "

@@ -2,20 +2,47 @@
 
 Trains IVI through the ``repro.lda.LDA`` facade on a synthetic
 paper-shaped corpus, shows the monotone bound and held-out predictive
-likelihood, contrasts with SVI, and round-trips a checkpoint.
+likelihood, contrasts with SVI, and round-trips a checkpoint. The IVI
+run records `repro.obs` telemetry (spans + metrics + a warn-policy ELBO
+watchdog) and ends with a one-screen run summary.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--corpus tiny|small]
+                                                   [--trace PATH]
 """
 import argparse
 
 from repro.data import PAPER_CORPORA, make_corpus
 from repro.lda import LDA
+from repro.obs import ElboWatchdog, Telemetry, spans_by_name
+
+
+def telemetry_summary(tel: Telemetry) -> None:
+    """One-screen run report from the telemetry bundle (docs/observability.md)."""
+    spans = spans_by_name(tel.trace.records)
+    upd = spans.get("train/update", {"count": 0, "total_s": 0.0})
+    tokens = tel.metrics.total("train.tokens")
+    wd = tel.watchdog.status()
+    print("\n== telemetry summary (repro.obs) ==")
+    print(f"updates : {upd['count']} batches, "
+          f"{tel.metrics.total('train.docs'):.0f} docs, {tokens:.0f} tokens "
+          f"in {upd['total_s']:.2f}s of update spans "
+          f"-> {tokens / max(upd['total_s'], 1e-9):.0f} tokens/s")
+    tail = ", ".join(f"{b:.1f}" for b in tel.watchdog.bound_tail(4))
+    print(f"bound   : tail [{tail}] (watchdog: {wd['checks']} checks, "
+          f"{wd['armed_checks']} armed, {wd['violations']} violations -> "
+          f"{'OK' if wd['ok'] else 'VIOLATED'})")
+    print(f"topics  : {tel.metrics.value('train.effective_topics'):.1f} "
+          f"effective (memo resident "
+          f"{tel.metrics.value('train.memo_resident_bytes') / 1e6:.1f} MB)")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--corpus", default="small", choices=sorted(PAPER_CORPORA),
                     help="tiny is the CI smoke size")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also dump the IVI run's span trace as JSONL "
+                         "(view via python -m repro.obs.trace --chrome)")
     args = ap.parse_args()
     spec = PAPER_CORPORA[args.corpus]
     train = make_corpus(spec, split="train", seed=0)
@@ -23,8 +50,9 @@ def main() -> None:
     topics = min(50, spec.vocab_size // 4)
 
     print("== IVI (the paper's algorithm: no learning rate) ==")
+    tel = Telemetry(watchdog=ElboWatchdog(policy="warn", check_every=0))
     ivi = LDA(num_topics=topics, vocab_size=spec.vocab_size, algo="ivi",
-              batch_size=32, seed=0)
+              batch_size=32, seed=0, telemetry=tel)
     ivi.fit(train, test_corpus=test)   # first pass retires random-init mass
     print(f"after 1 epoch: lpp={ivi.evaluate()['lpp']:.4f}")
     prev = ivi.bound()
@@ -52,6 +80,11 @@ def main() -> None:
     theta = LDA.load("/tmp/lda_quickstart_ckpt").transform(test)
     print(f"topic posterior for {theta.shape[0]} unseen docs, "
           f"K={theta.shape[1]} (resume with LDA.load(...).resume(train))")
+
+    telemetry_summary(tel)
+    if args.trace:
+        n = tel.trace.dump_jsonl(args.trace)
+        print(f"trace   : {n} span records -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -38,9 +38,11 @@ from repro.core import estep as estep_mod
 from repro.core.estep import BowBatch, estep, get_backend
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.memo import MemoStore, make_memo_store
+from repro.core.metrics import effective_topics
 from repro.core.predictive import log_predictive, split_heldout
 from repro.core.types import (Corpus, GlobalState, LDAConfig, Memo,
                               init_global_state)
+from repro.obs import NULL_TELEMETRY, as_telemetry
 
 # The canonical global-state constructor set lives in ``repro.core.types``;
 # these aliases keep the historical engine-level names working everywhere
@@ -262,10 +264,13 @@ class LDAEngine:
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
-                 bucket_by_length: bool = False):
+                 bucket_by_length: bool = False, telemetry=None):
         assert algo in ("mvi", "svi", "ivi", "sivi")
         self.cfg, self.algo = cfg, algo
         self.batch_size = batch_size
+        self.tel = as_telemetry(telemetry)
+        self._updates = 0            # host-side global-update counter
+        self._doc_tokens = None      # per-doc token totals (telemetry only)
         self.rng = np.random.default_rng(seed)
         self.state = init_engine_state(cfg, jax.random.key(seed))
         self.memo: Optional[MemoStore] = None
@@ -278,6 +283,10 @@ class LDAEngine:
             self.num_docs = corpus.num_docs
             max_unique = corpus.max_unique
             num_words = float(np.asarray(corpus.counts).sum())
+            if self.tel.enabled:
+                # per-doc token totals, precomputed once so the hot path's
+                # token counter is a host-side fancy-index + sum
+                self._doc_tokens = np.asarray(corpus.counts).sum(axis=1)
         else:
             from repro.data.stream import BatchPacker, is_doc_stream
             if not is_doc_stream(corpus):
@@ -297,8 +306,9 @@ class LDAEngine:
             self.num_docs = corpus.num_docs
             max_unique = corpus.max_unique
             num_words = float(corpus.num_words)
-            self._packer = BatchPacker(batch_size, max_width=max_unique,
-                                       vocab_size=cfg.vocab_size)
+            self._packer = BatchPacker(
+                batch_size, max_width=max_unique, vocab_size=cfg.vocab_size,
+                metrics=self.tel.metrics if self.tel.enabled else None)
             self._stream_cursor = 0          # docs pulled this epoch
             self._stream_iter = None
             self._stream_emitted: List = []  # flushed, not yet processed
@@ -428,21 +438,69 @@ class LDAEngine:
                       cnts: jax.Array) -> None:
         """One global update on a padded (B', W) batch — the shared core of
         the materialized (`run_minibatch`) and stream (`stream_step`)
-        paths; ``W`` is whatever width the batch was packed/sliced to."""
+        paths; ``W`` is whatever width the batch was packed/sliced to.
+
+        This is the instrumentation hot path: every telemetry touch is
+        gated on ``tel.enabled`` (``begin`` returns None otherwise), so
+        the disabled run executes the seed instruction sequence modulo
+        one branch per site — no recorder allocations, no syncs, and
+        therefore bit-identical trajectories (tests/test_obs.py).
+        """
+        tel = self.tel
+        on = tel.enabled
         width = ids.shape[1]
+        sp = tel.trace.begin("train/update", algo=self.algo,
+                             width=width, docs=len(rows)) if on else None
         if self.algo == "svi":
             self.state = svi_step(self.cfg, self.state, ids, cnts,
                                   jnp.asarray(float(self.num_docs)))
         elif self.algo in ("ivi", "sivi"):
+            g = tel.trace.begin("train/memo_gather", width=width) \
+                if on else None
             old_pi, visited = self.memo.gather(rows, width=width)
+            if g is not None:
+                tel.trace.end(g)
+            s = tel.trace.begin("train/solve", width=width) if on else None
             self.state, new_pi, eb = incremental_update(
                 self.cfg, self.algo == "sivi", self.state, ids, cnts,
                 old_pi, visited, self.num_words_total,
                 self.memo.pi_wire_dtype)
+            if s is not None:
+                tel.trace.end(s, sync=self.state.lam)
+            u = tel.trace.begin("train/memo_update", width=width) \
+                if on else None
             self.memo = self.memo.update(rows, new_pi, exp_elog_beta=eb)
+            if u is not None:
+                tel.trace.end(u)
         else:
             raise ValueError(self.algo)
         self.docs_seen += len(rows)
+        if sp is not None:
+            tel.trace.end(sp, sync=self.state.lam)
+            self._updates += 1
+            m = tel.metrics
+            m.inc("train.docs", len(rows))
+            m.inc("train.batches", width=width)
+            if self._doc_tokens is not None:
+                m.inc("train.tokens", float(self._doc_tokens[rows].sum()))
+            else:
+                m.inc("train.tokens", float(np.asarray(cnts).sum()))
+            if self.memo is not None:
+                m.set_gauge("train.memo_resident_bytes",
+                            self.memo.footprint_bytes())
+            wd = tel.watchdog
+            if (self.algo in ("ivi", "sivi") and wd.enabled
+                    and wd.should_check(self._updates)):
+                # O(corpus) memoized-bound read — priced by check_every
+                wd.observe(self.full_bound(), step=self._updates,
+                           armed=self._watchdog_armed())
+
+    def _watchdog_armed(self) -> bool:
+        """Whether the monotone-ELBO guarantee is in force: IVI (eq. 4 —
+        S-IVI's averaging forfeits it) after the random-init mass has
+        fully retired, i.e. the first complete pass is done."""
+        return (self.algo == "ivi"
+                and float(jax.device_get(self.state.init_frac)) == 0.0)
 
     # -- stream ingest -----------------------------------------------------
     def stream_step(self) -> bool:
@@ -503,6 +561,16 @@ class LDAEngine:
         else:
             out["elbo"] = self.full_bound()
             self.history.elbo.append(out["elbo"])
+            if (self.tel.enabled and self.tel.watchdog.enabled
+                    and self.algo in ("ivi", "sivi")):
+                # a bound computed anyway — feed it to the watchdog even
+                # at check_every=0 (the free cadence)
+                self.tel.watchdog.observe(out["elbo"], step=self._updates,
+                                          armed=self._watchdog_armed())
+        if self.tel.enabled:
+            self.tel.metrics.set_gauge(
+                "train.effective_topics",
+                float(effective_topics(np.asarray(self.state.lam))))
         self.history.docs_seen.append(self.docs_seen)
         self.history.wall.append(time.perf_counter() - self._t0)
         return out

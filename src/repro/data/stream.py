@@ -253,16 +253,23 @@ class BatchPacker:
     malformed document would otherwise train/serve on token V−1 instead
     of failing (the materialized path asserts this in
     ``corpus_from_docs``; the packer is the streaming equivalent).
+
+    ``metrics``: an optional ``repro.obs`` ``MetricsRegistry``; each
+    emitted batch updates ``pack.batches``/``pack.docs``/``pack.tokens``
+    counters (labelled by width) and the running per-width
+    ``pack.pad_frac`` gauge. ``None`` (the default) records nothing and
+    adds nothing to the packing path.
     """
 
     def __init__(self, batch_size: int, *, max_width: Optional[int] = None,
                  boundaries: Sequence[int] = WIDTH_BOUNDARIES,
-                 vocab_size: Optional[int] = None):
+                 vocab_size: Optional[int] = None, metrics=None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.batch_size = batch_size
         self.max_width = max_width
         self.vocab_size = vocab_size
+        self.metrics = metrics
         self.boundaries = tuple(boundaries)
         self._widths = (width_ladder(max_width, boundaries)
                         if max_width is not None else sorted(boundaries))
@@ -320,6 +327,14 @@ class BatchPacker:
             st.live_slots += len(ids)
         st.docs += b
         st.padded_slots += b * width
+        if self.metrics is not None:
+            m = self.metrics
+            m.inc("pack.batches", width=width)
+            m.inc("pack.docs", b, width=width)
+            m.inc("pack.tokens", float(out_cnt.sum()), width=width)
+            m.set_gauge("pack.pad_frac",
+                        1.0 - st.live_slots / max(st.padded_slots, 1),
+                        width=width)
         return PackedBatch(rows, out_ids, out_cnt, width)
 
     def flush(self) -> List[PackedBatch]:

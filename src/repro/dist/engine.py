@@ -23,6 +23,7 @@ from repro.core.types import Corpus, LDAConfig
 from repro.dist.divi import make_divi_round
 from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
                                  divi_round)
+from repro.obs import as_telemetry
 
 
 def shard_corpus(corpus: Corpus, num_workers: int,
@@ -65,8 +66,10 @@ class DIVIEngine:
 
     def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
                  seed: int = 0, mesh=None,
-                 data_axes: Optional[Tuple[str, ...]] = None):
+                 data_axes: Optional[Tuple[str, ...]] = None,
+                 telemetry=None):
         self.cfg, self.dcfg = cfg, dcfg
+        self.tel = as_telemetry(telemetry)
         self.rng = np.random.default_rng(seed)
         self.shard, self.docs_per_worker = shard_corpus(
             corpus, dcfg.num_workers, cfg.num_topics)
@@ -126,11 +129,22 @@ class DIVIEngine:
 
     def run_round(self) -> None:
         """One global round: S sub-rounds of P concurrent worker batches."""
+        tel = self.tel
+        sp = tel.trace.begin("divi/round", workers=self.dcfg.num_workers,
+                             staleness=self.dcfg.staleness) \
+            if tel.enabled else None
         idx, delay = self._sample_round()
         self.state, self.shard = self._round(
             self.state, self.shard, jnp.asarray(idx, jnp.int32),
             jnp.asarray(delay), self.num_words_total)
-        self.docs_seen += int(self.dcfg.batch_size * (~delay).sum())
+        docs = int(self.dcfg.batch_size * (~delay).sum())
+        self.docs_seen += docs
+        if sp is not None:
+            tel.trace.end(sp, sync=self.state.lam)
+            m = tel.metrics
+            m.inc("divi.rounds")
+            m.inc("divi.docs", docs)
+            m.inc("divi.dropped_batches", float(delay.sum()))
 
     # -- views -------------------------------------------------------------
     @property

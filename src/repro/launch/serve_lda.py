@@ -72,15 +72,6 @@ def run_serve_dryrun(batch: int = 256, widths=ARXIV_WIDTHS,
     return out
 
 
-def _percentiles(xs, ps=(50, 95, 99)):
-    """Latency percentiles; NaNs for a zero-request run (np.percentile
-    raises on an empty array — the caller skips the report row instead)."""
-    xs = np.asarray(xs, np.float64)
-    if xs.size == 0:
-        return {f"p{p}": float("nan") for p in ps}
-    return {f"p{p}": float(np.percentile(xs, p)) for p in ps}
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt", default=None,
@@ -106,6 +97,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dryrun", action="store_true",
                     help="Arxiv-scale serving lowering, no weights")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a repro.obs span trace of the serving run "
+                         "and write it as JSONL here (docs/observability.md)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the serving metrics-registry snapshot here")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -126,6 +122,13 @@ def main() -> None:
 
     from repro.data import PAPER_CORPORA, make_corpus
     from repro.lda import LDA
+    from repro.obs import MetricsRegistry, Telemetry
+
+    # the metrics registry IS the latency accounting now (real histogram
+    # percentiles replaced the old ad-hoc list); the full bundle (with a
+    # span recorder) is only built when a telemetry flag asks for it
+    tel = Telemetry() if (args.trace or args.metrics_json) else None
+    reg = tel.metrics if tel is not None else MetricsRegistry()
 
     spec = PAPER_CORPORA[args.corpus]
     test = make_corpus(spec, split="test", seed=args.seed, scale=args.scale)
@@ -143,7 +146,8 @@ def main() -> None:
         print(f"quick-trained ivi on {args.corpus}: "
               f"{args.warm_epochs} epoch(s), docs_seen={lda.docs_seen}")
 
-    inf = lda.inferencer(backend=args.backend, batch_size=args.batch)
+    inf = lda.inferencer(backend=args.backend, batch_size=args.batch,
+                         telemetry=tel)
     rng = np.random.default_rng(args.seed)
 
     if args.ragged:
@@ -163,17 +167,19 @@ def main() -> None:
     if args.requests:
         request(np.arange(test.num_docs))
 
-    lat = []
+    # the timed loop only — warmup latencies (compiles) stay out of the
+    # histogram, preserving the old steady-state report semantics
     t0 = time.perf_counter()
     for _ in range(args.requests):
         rows = rng.choice(test.num_docs, size=args.batch, replace=False)
         t1 = time.perf_counter()
         gamma = request(rows)
-        lat.append((time.perf_counter() - t1) * 1e3)
+        reg.observe("serve.request_ms", (time.perf_counter() - t1) * 1e3)
         assert gamma.shape == (args.batch, lda.cfg.num_topics)
     wall = time.perf_counter() - t0
 
-    pct = _percentiles(lat)
+    pct = reg.percentiles("serve.request_ms")   # NaNs on an empty run
+    lat = reg.histogram_values("serve.request_ms")
     docs = args.requests * args.batch
     mode = ("ragged" + ("" if args.no_double_buffer else "+double-buffer")
             if args.ragged else "padded")
@@ -189,6 +195,12 @@ def main() -> None:
     print(f"jit cache: {cache['jit_entries']} compiled widths "
           f"{cache['compiled_widths']} "
           f"(batches per width: {cache['batches_per_width']})")
+    if args.trace:
+        n = tel.trace.dump_jsonl(args.trace)
+        print(f"trace: wrote {n} records to {args.trace}")
+    if args.metrics_json:
+        reg.dump_json(args.metrics_json)
+        print(f"metrics: wrote {args.metrics_json}")
     if args.out:
         rec = {"mode": "serve", "backend": inf.cfg.estep_backend,
                "serve_mode": mode,

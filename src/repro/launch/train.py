@@ -41,6 +41,8 @@ def main_lda(args) -> None:
     from repro.dist import DIVIConfig
     from repro.lda import LDA
 
+    tel = _build_telemetry(args)
+
     spec = PAPER_CORPORA[args.corpus]
     test = make_corpus(spec, split="test", seed=args.seed, scale=args.scale)
     if args.stream:
@@ -75,7 +77,8 @@ def main_lda(args) -> None:
                     estep_backend=args.backend)
 
     if args.resume:
-        lda = LDA.load(args.resume).resume(train, test_corpus=test)
+        lda = LDA.load(args.resume, telemetry=tel).resume(train,
+                                                          test_corpus=test)
         print(f"resumed {args.resume}: algo={lda.algo} "
               f"docs_seen={lda.docs_seen}")
     elif args.algo == "divi":
@@ -84,12 +87,12 @@ def main_lda(args) -> None:
                                          batch_size=args.batch,
                                          staleness=args.staleness,
                                          delay_prob=args.delay_prob),
-                  seed=args.seed)
+                  seed=args.seed, telemetry=tel)
     else:
         lda = LDA(cfg, algo=args.algo, batch_size=args.batch,
                   seed=args.seed, memo_store=args.memo_store,
                   chunk_docs=args.chunk_docs,
-                  bucket_by_length=args.bucketed)
+                  bucket_by_length=args.bucketed, telemetry=tel)
 
     # bind the corpus without stepping so the memo footprint is reportable
     lda.partial_fit(train, steps=0, test_corpus=test)
@@ -120,8 +123,44 @@ def main_lda(args) -> None:
                   f"[{per}]")
         if args.bound:
             print("final exact bound:", lda.bound())
+    if tel is not None:
+        _report_telemetry(tel, args)
     if args.ckpt:
         print("saved", lda.save(args.ckpt))
+
+
+def _build_telemetry(args):
+    """Construct the run's ``repro.obs`` bundle from the CLI flags
+    (None when no telemetry flag is set — the true-no-op path)."""
+    if not (args.trace or args.metrics_json or args.watchdog != "off"):
+        return None
+    from repro.obs import ElboWatchdog, Telemetry
+    if args.watchdog != "off":
+        return Telemetry(watchdog=ElboWatchdog(
+            policy=args.watchdog, check_every=args.watchdog_every))
+    return Telemetry()
+
+
+def _report_telemetry(tel, args) -> None:
+    """End-of-run telemetry summary + the --trace/--metrics-json dumps."""
+    m, wd = tel.metrics, tel.watchdog
+    tokens = m.total("train.tokens")
+    wall = sum(r["dur_us"] for r in tel.trace.records
+               if r["type"] == "span" and r["name"] == "train/update") / 1e6
+    rate = f"{tokens / wall:,.0f} tok/s" if wall > 0 else "n/a"
+    st = wd.status()
+    wd_line = ("off" if not st["enabled"] else
+               f"{st['policy']} checks={st['checks']} "
+               f"violations={st['violations']} "
+               f"{'OK' if st['ok'] else 'VIOLATED'}")
+    print(f"telemetry: tokens={tokens:,.0f} update_time={wall:.2f}s "
+          f"({rate}) spans={tel.trace.num_records} watchdog={wd_line}")
+    if args.trace:
+        n = tel.trace.dump_jsonl(args.trace)
+        print(f"trace: wrote {n} records to {args.trace}")
+    if args.metrics_json:
+        m.dump_json(args.metrics_json)
+        print(f"metrics: wrote {args.metrics_json}")
 
 
 def main_lm(args) -> None:
@@ -235,6 +274,18 @@ def main() -> None:
                      help="resume from a --ckpt manifest (bit-equal "
                           "continuation); algo/store flags then come from "
                           "the checkpoint")
+    lda.add_argument("--trace", default=None, metavar="PATH",
+                     help="record a repro.obs span trace and write it as "
+                          "JSONL here (docs/observability.md)")
+    lda.add_argument("--metrics-json", default=None, metavar="PATH",
+                     help="write the run's metrics-registry snapshot here")
+    lda.add_argument("--watchdog", default="off",
+                     choices=["off", "warn", "raise"],
+                     help="ELBO-monotonicity watchdog policy on the "
+                          "incremental path (armed once init mass retires)")
+    lda.add_argument("--watchdog-every", type=int, default=0,
+                     help="check the memoized bound every N updates "
+                          "(O(corpus) each; 0 = only at evaluations)")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", required=True)

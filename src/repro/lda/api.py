@@ -38,6 +38,7 @@ from repro.core.types import Corpus, GlobalState, LDAConfig
 from repro.dist.protocol import DIVIConfig
 from repro.lda.infer import TopicInferencer
 from repro.lda.trainer import Trainer, make_trainer
+from repro.obs import as_telemetry
 
 _ALGOS = ("mvi", "svi", "ivi", "sivi", "divi")
 
@@ -59,6 +60,13 @@ class LDA:
         engines (``dense | chunked | gamma`` — `repro.core.memo`).
       bucket_by_length: length-bucketed epoch batching (`repro.data.bow`).
       mesh / data_axes: optional production mesh for the distributed path.
+      telemetry: run observability (`repro.obs`, `docs/observability.md`):
+        ``None``/``False`` = off (the default — a true no-op on the hot
+        paths), ``True`` = a default ``Telemetry`` bundle (span recorder +
+        metrics registry + evaluate-cadence ELBO watchdog), or a
+        pre-configured ``repro.obs.Telemetry``. Threaded through the
+        trainer, both engines, the batch packer and (by default) every
+        inferencer this estimator creates.
     """
 
     def __init__(self, cfg: Optional[LDAConfig] = None, *,
@@ -68,7 +76,7 @@ class LDA:
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False,
                  backend: Optional[str] = None,
-                 mesh=None, data_axes=None, **cfg_kwargs):
+                 mesh=None, data_axes=None, telemetry=None, **cfg_kwargs):
         if cfg is None:
             cfg = LDAConfig(**cfg_kwargs)
         elif cfg_kwargs:
@@ -92,6 +100,7 @@ class LDA:
         self.memo_store = memo_store
         self.chunk_docs = chunk_docs
         self.bucket_by_length = bucket_by_length
+        self.telemetry = as_telemetry(telemetry)
         self._mesh, self._data_axes = mesh, data_axes
         self.trainer: Optional[Trainer] = None
         self._corpus = None           # coerced Corpus | DocStream
@@ -167,7 +176,7 @@ class LDA:
             test_corpus=test_corpus, memo_store=self.memo_store,
             chunk_docs=self.chunk_docs,
             bucket_by_length=self.bucket_by_length, mesh=self._mesh,
-            data_axes=self._data_axes)
+            data_axes=self._data_axes, telemetry=self.telemetry)
         self._corpus = corpus
         self._corpus_raw = raw
         return self.trainer
@@ -243,11 +252,14 @@ class LDA:
     # ------------------------------------------------------------------
 
     def inferencer(self, *, backend: Optional[str] = None,
-                   batch_size: int = 256) -> TopicInferencer:
+                   batch_size: int = 256,
+                   telemetry=None) -> TopicInferencer:
         """A reusable serving handle over the current topics (λ is
-        preprocessed once; one jit entry per bucket width)."""
-        return TopicInferencer(self.cfg, self.lam, backend=backend,
-                               batch_size=batch_size)
+        preprocessed once; one jit entry per bucket width). Inherits the
+        estimator's telemetry bundle unless ``telemetry=`` overrides it."""
+        return TopicInferencer(
+            self.cfg, self.lam, backend=backend, batch_size=batch_size,
+            telemetry=self.telemetry if telemetry is None else telemetry)
 
     def transform(self, corpus: Corpus, *, backend: Optional[str] = None,
                   batch_size: int = 256) -> np.ndarray:
@@ -289,10 +301,37 @@ class LDA:
         """(K, k) token ids of each topic's most probable words."""
         return _top_words(self.lam, k)
 
+    def coherence(self, corpus: Corpus, *, k: int = 10) -> float:
+        """Mean NPMI topic coherence of the top-``k`` words per topic
+        under ``corpus``'s co-occurrence statistics
+        (`repro.core.metrics.npmi_coherence`, vectorized)."""
+        from repro.core.metrics import npmi_coherence
+        return npmi_coherence(self.lam, corpus, k=k)
+
+    def effective_topics(self) -> float:
+        """exp(entropy) of corpus-level topic usage — the topic-death
+        diagnostic the telemetry gauge ``train.effective_topics`` tracks."""
+        from repro.core.metrics import effective_topics
+        return effective_topics(self.lam)
+
     def bound(self) -> float:
         """Exact corpus ELBO (incremental engines: the memoized bound —
-        the objective IVI increases monotonically)."""
-        return self._require_trainer().full_bound()
+        the objective IVI increases monotonically).
+
+        A bound computed here was paid for anyway, so — like
+        ``evaluate()`` — it feeds the telemetry watchdog even at
+        ``check_every=0`` (the free cadence, `docs/observability.md`).
+        The distributed trainer skips this: D-IVI averages away the
+        guarantee, so its readings would never be armed.
+        """
+        tr = self._require_trainer()
+        b = tr.full_bound()
+        eng = getattr(tr, "eng", None)
+        if (eng is not None and eng.tel.enabled and eng.tel.watchdog.enabled
+                and eng.algo in ("ivi", "sivi")):
+            eng.tel.watchdog.observe(b, step=eng._updates,
+                                     armed=eng._watchdog_armed())
+        return b
 
     def evaluate(self) -> Dict[str, float]:
         """One History row: held-out LPP if a test corpus is bound, the
@@ -309,12 +348,16 @@ class LDA:
         return save_lda_checkpoint(path, self)
 
     @classmethod
-    def load(cls, path: str) -> "LDA":
+    def load(cls, path: str, *, telemetry=None) -> "LDA":
         """Load a checkpoint. Serving (``transform`` / ``top_words`` /
         ``score``) works immediately; call ``resume(corpus)`` before
-        continuing training."""
+        continuing training. ``telemetry`` attaches an observability
+        bundle to the loaded estimator (checkpoints never persist
+        telemetry — it is process state, not model state)."""
         from repro.lda.ckpt import load_lda_checkpoint
-        return load_lda_checkpoint(path)
+        lda = load_lda_checkpoint(path)
+        lda.telemetry = as_telemetry(telemetry)
+        return lda
 
     # ------------------------------------------------------------------
     # views

@@ -45,6 +45,7 @@ from repro.core.estep import estep
 from repro.core.math import exp_dirichlet_expectation, safe_normalize
 from repro.core.types import Corpus, LDAConfig
 from repro.data.stream import BatchPacker, as_ragged_doc, bucket_rows
+from repro.obs import as_telemetry
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -70,14 +71,21 @@ class TopicInferencer:
       batch_size: fixed request batch; shorter batches are padded with
         empty documents (zero counts — they converge to the γ prior in
         one sweep and are dropped before returning).
+      telemetry: a ``repro.obs`` bundle (None/False = off). Serving spans
+        (``serve/stage``, ``serve/solve``) never device-sync by default,
+        so tracing does not serialise the double-buffer overlap; counters
+        record docs/batches served, jit-cache hits vs misses per width,
+        and the double-buffer queue depth histogram.
     """
 
     def __init__(self, cfg: LDAConfig, lam: jax.Array, *,
-                 backend: Optional[str] = None, batch_size: int = 256):
+                 backend: Optional[str] = None, batch_size: int = 256,
+                 telemetry=None):
         if backend is not None and backend != cfg.estep_backend:
             cfg = dataclasses.replace(cfg, estep_backend=backend)
         self.cfg = cfg
         self.batch_size = batch_size
+        self.tel = as_telemetry(telemetry)
         self.exp_elog_beta = exp_dirichlet_expectation(jnp.asarray(lam),
                                                        axis=0)
         self._compiled_widths: Dict[int, int] = {}    # width → batches run
@@ -110,9 +118,22 @@ class TopicInferencer:
                 gamma = _posterior_batch(self.cfg, self.exp_elog_beta,
                                          jnp.asarray(ids), jnp.asarray(cnts))
                 out[rows] = np.asarray(gamma[: len(rows)])
-                self._compiled_widths[width] = \
-                    self._compiled_widths.get(width, 0) + 1
+                self._note_width(width, len(rows))
         return out
+
+    def _note_width(self, width: int, docs: int) -> None:
+        """Per-width serving bookkeeping; a width seen for the first time
+        is the batch that paid a jit compile (the cache holds one
+        executable per width — `cache_info`)."""
+        miss = width not in self._compiled_widths
+        self._compiled_widths[width] = \
+            self._compiled_widths.get(width, 0) + 1
+        if self.tel.enabled:
+            m = self.tel.metrics
+            m.inc("serve.jit_cache_misses" if miss
+                  else "serve.jit_cache_hits", width=width)
+            m.inc("serve.docs", docs)
+            m.inc("serve.batches", width=width)
 
     def transform(self, corpus: Corpus) -> np.ndarray:
         """θ̄ (D, K): the normalised topic posterior (matches the θ̄ that
@@ -124,14 +145,21 @@ class TopicInferencer:
     def _stage(self, batch) -> _Staged:
         """Pad a packed batch to the fixed ``batch_size`` and put it on
         device — the host half of the pipeline (runs on the packer
-        thread when double-buffered)."""
+        thread when double-buffered — the recorder is thread-safe and
+        tags spans with a per-thread tid)."""
+        tel = self.tel
+        sp = tel.trace.begin("serve/stage", width=batch.width,
+                             docs=len(batch.rows)) if tel.enabled else None
         n = len(batch.rows)
         ids = np.zeros((self.batch_size, batch.width), np.int32)
         cnts = np.zeros((self.batch_size, batch.width), np.float32)
         ids[:n] = batch.token_ids
         cnts[:n] = batch.counts
-        return (batch.rows, jnp.asarray(ids), jnp.asarray(cnts),
-                batch.width, n)
+        staged = (batch.rows, jnp.asarray(ids), jnp.asarray(cnts),
+                  batch.width, n)
+        if sp is not None:
+            tel.trace.end(sp)
+        return staged
 
     def _staged_batches(self, docs) -> Iterator[_Staged]:
         """Pack a ragged request iterable into staged device batches.
@@ -142,8 +170,9 @@ class TopicInferencer:
         """
         it = (docs.iter_from(0) if hasattr(docs, "iter_from")
               else (as_ragged_doc(d) for d in docs))
-        packer = BatchPacker(self.batch_size,
-                             vocab_size=self.cfg.vocab_size)
+        packer = BatchPacker(
+            self.batch_size, vocab_size=self.cfg.vocab_size,
+            metrics=self.tel.metrics if self.tel.enabled else None)
         pos = 0
         for ids, cnts in it:
             batch = packer.add(pos, ids, cnts)
@@ -209,6 +238,11 @@ class TopicInferencer:
                     staged = q.get()
                     if staged is None:
                         break
+                    if self.tel.enabled:
+                        # depth AFTER the take: 0 = consumer starved (pack
+                        # is the bottleneck), maxsize−1 = producer ahead
+                        self.tel.metrics.observe("serve.queue_depth",
+                                                 q.qsize())
                     results.append(self._dispatch(staged))
             finally:
                 abort.set()
@@ -227,10 +261,17 @@ class TopicInferencer:
         return out
 
     def _dispatch(self, staged: _Staged) -> Tuple[np.ndarray, jax.Array, int]:
+        tel = self.tel
         rows, ids, cnts, width, n = staged
+        # serve/solve is never device-synced: syncing here would serialise
+        # the double-buffer overlap the pipeline exists for, so the span
+        # measures dispatch (+ compile on a width's first batch)
+        sp = tel.trace.begin("serve/solve", width=width, docs=n) \
+            if tel.enabled else None
         gamma = _posterior_batch(self.cfg, self.exp_elog_beta, ids, cnts)
-        self._compiled_widths[width] = \
-            self._compiled_widths.get(width, 0) + 1
+        if sp is not None:
+            tel.trace.end(sp)
+        self._note_width(width, n)
         return rows, gamma, n
 
     def transform_docs(self, docs, *, double_buffer: bool = True

@@ -138,11 +138,12 @@ class SingleHostTrainer(Trainer):
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
-                 bucket_by_length: bool = False):
+                 bucket_by_length: bool = False, telemetry=None):
         self.eng = LDAEngine(cfg, corpus, algo=algo, batch_size=batch_size,
                              seed=seed, test_corpus=test_corpus,
                              memo_store=memo_store, chunk_docs=chunk_docs,
-                             bucket_by_length=bucket_by_length)
+                             bucket_by_length=bucket_by_length,
+                             telemetry=telemetry)
         self.algo = algo
         self._streamed = self.eng.stream is not None
         self._pending: List[Tuple[np.ndarray, Optional[int]]] = []
@@ -288,9 +289,10 @@ class SingleHostTrainer(Trainer):
         if self._streamed:
             from repro.data.stream import BatchPacker, PackedBatch
             grp = arrays.get("stream", {})
-            packer = BatchPacker(eng.batch_size,
-                                 max_width=eng.stream.max_unique,
-                                 vocab_size=eng.cfg.vocab_size)
+            packer = BatchPacker(
+                eng.batch_size, max_width=eng.stream.max_unique,
+                vocab_size=eng.cfg.vocab_size,
+                metrics=eng.tel.metrics if eng.tel.enabled else None)
             packer.load_pending([
                 (pos, grp[f"pend_{i:05d}_ids"], grp[f"pend_{i:05d}_cnts"])
                 for i, pos in enumerate(meta["stream_pending_pos"])])
@@ -321,11 +323,11 @@ class DIVITrainer(Trainer):
 
     def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
                  seed: int = 0, test_corpus: Optional[Corpus] = None,
-                 mesh=None, data_axes=None):
+                 mesh=None, data_axes=None, telemetry=None):
         self.cfg, self.dcfg = cfg, dcfg
         self.algo = "sivi"          # D-IVI is the eq. 5 protocol distributed
         self.eng = DIVIEngine(cfg, dcfg, corpus, seed=seed, mesh=mesh,
-                              data_axes=data_axes)
+                              data_axes=data_axes, telemetry=telemetry)
         self.history = History()
         self._t0 = time.perf_counter()
         if test_corpus is not None:
@@ -442,7 +444,7 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False, mesh=None,
-                 data_axes=None) -> Trainer:
+                 data_axes=None, telemetry=None) -> Trainer:
     """Bind a corpus (or ``DocStream``) to the right Trainer."""
     if distributed is not None:
         if not isinstance(corpus, Corpus):
@@ -452,8 +454,9 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                 "repro.data.stream.materialize(stream) first")
         return DIVITrainer(cfg, distributed, corpus, seed=seed,
                            test_corpus=test_corpus, mesh=mesh,
-                           data_axes=data_axes)
+                           data_axes=data_axes, telemetry=telemetry)
     return SingleHostTrainer(cfg, corpus, algo=algo, batch_size=batch_size,
                              seed=seed, test_corpus=test_corpus,
                              memo_store=memo_store, chunk_docs=chunk_docs,
-                             bucket_by_length=bucket_by_length)
+                             bucket_by_length=bucket_by_length,
+                             telemetry=telemetry)

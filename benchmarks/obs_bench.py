@@ -13,6 +13,13 @@ Three sections, all driven through the public ``repro.obs`` surface:
   and the agreement flag is informational; on a TPU the same record is
   the model-validation gate (docs/observability.md §roofline).
 
+* **roofline_csr** — the same join for the flat-token CSR layout
+  (``LDA(layout="csr")``): its ``train/solve`` spans are priced by
+  ``kernel_bench.modeled_estep_csr_hbm_bytes`` at the engine's
+  budget-sized stream shape, so the width-free path carries its own
+  measured-vs-modeled record (and ``proxy_regime`` flag) in
+  BENCH_obs.json alongside the padded one.
+
 * **overhead** — the telemetry cost contract. The same streaming
   training smoke runs telemetry-off and telemetry-on (default bundle:
   spans + metrics + evaluate-cadence watchdog), min-of-3 each. The CI
@@ -37,7 +44,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.kernel_bench import modeled_estep_hbm_bytes
+from benchmarks.kernel_bench import (modeled_estep_csr_hbm_bytes,
+                                     modeled_estep_hbm_bytes)
 from benchmarks.roofline import HW
 from repro.data import PAPER_CORPORA, make_corpus
 from repro.lda import LDA
@@ -77,6 +85,37 @@ def roofline_section(corpus_name: str = "tiny") -> tuple[dict, Telemetry]:
                       "sweeps": ESTEP_ITERS,
                       "platform": jax.devices()[0].platform}
     return check, tel
+
+
+def roofline_csr_section(corpus_name: str = "tiny") -> dict:
+    """The roofline join for the flat-token CSR layout: a short streaming
+    run with ``layout="csr"`` on the Pallas backend, its ``train/solve``
+    spans priced by the CSR HBM model at the engine's (token_budget,)
+    stream shape — every batch shares ONE compiled entry, so the span
+    population is homogeneous by construction."""
+    from repro.data.stream import CorpusDocStream
+
+    spec = PAPER_CORPORA[corpus_name]
+    corpus = make_corpus(spec, split="train", seed=0)
+    tel = Telemetry(trace=SpanRecorder(device_sync=True))
+    lda = LDA(num_topics=spec.num_topics, vocab_size=spec.vocab_size,
+              estep_max_iters=ESTEP_ITERS, estep_backend="pallas",
+              algo="ivi", batch_size=BATCH, layout="csr", seed=0,
+              telemetry=tel)
+    lda.fit(CorpusDocStream(corpus), epochs=2)   # epoch 2: warm entries
+    t = lda.trainer.eng.token_budget             # engine-resolved default
+    b, v, k = BATCH, spec.vocab_size, spec.num_topics
+    modeled = {
+        "train/solve": modeled_estep_csr_hbm_bytes(t, b, v, k,
+                                                   ESTEP_ITERS),
+    }
+    check = roofline_from_trace(
+        tel.trace.records, modeled, hbm_gbps=HW["hbm_bw"] / 1e9,
+        proxy_regime=_proxy_regime())
+    check["shape"] = {"T": t, "B": b, "V": v, "K": k,
+                      "sweeps": ESTEP_ITERS,
+                      "platform": jax.devices()[0].platform}
+    return check
 
 
 def _timed_stream_fit(telemetry) -> tuple[float, np.ndarray, object]:
@@ -151,6 +190,7 @@ def obs_report(json_path: str | None = None, *,
     roofline, tel = roofline_section()
     record = {
         "roofline": roofline,
+        "roofline_csr": roofline_csr_section(),
         "overhead": overhead_section(repeats=repeats),
         "trace_roundtrip": trace_roundtrip_section(
             tel, tempfile.mkdtemp(prefix="obs_bench_")),
@@ -170,13 +210,19 @@ if __name__ == "__main__":
     args = ap.parse_args()
     rec = obs_report(args.json, repeats=args.repeats)
     rl, ov, tr = rec["roofline"], rec["overhead"], rec["trace_roundtrip"]
-    r0 = rl["records"][0]
+    rc = rec["roofline_csr"]
+    r0, c0 = rl["records"][0], rc["records"][0]
     print(f"BENCH_obs -> {args.json}")
     print(f"  roofline : {rl['n_records']} record(s) on "
           f"{rl['shape']['platform']} (proxy_regime={rl['proxy_regime']}); "
           f"{r0['name']}: measured {r0['measured_s'] * 1e3:.2f}ms vs "
           f"modeled {r0['modeled_s'] * 1e3:.4f}ms "
           f"({r0['measured_vs_modeled']:.1f}x, {r0['verdict']})")
+    print(f"  roofline_csr : T={rc['shape']['T']} "
+          f"(proxy_regime={rc['proxy_regime']}); "
+          f"{c0['name']}: measured {c0['measured_s'] * 1e3:.2f}ms vs "
+          f"modeled {c0['modeled_s'] * 1e3:.4f}ms "
+          f"({c0['measured_vs_modeled']:.1f}x, {c0['verdict']})")
     print(f"  overhead : off {ov['telemetry_off_s']:.2f}s vs on "
           f"{ov['telemetry_on_s']:.2f}s -> {ov['overhead_pct']:+.2f}% "
           f"(lam bit-identical: {ov['lam_bit_identical']}, "
@@ -186,6 +232,8 @@ if __name__ == "__main__":
           f"(count_exact={tr['count_exact']})")
     assert rl["n_records"] >= 1 and not rl["missing_spans"], \
         "roofline join produced no measured-vs-modeled record"
+    assert rc["n_records"] >= 1 and not rc["missing_spans"], \
+        "CSR roofline join produced no measured-vs-modeled record"
     assert ov["lam_bit_identical"], \
         "telemetry-on run diverged from the telemetry-off trajectory"
     assert ov["overhead_pct"] <= 5.0, \

@@ -35,7 +35,7 @@ import numpy as np
 from repro.core.bound import (elbo_collapsed, elbo_collapsed_stream,
                               elbo_memoized_store, elbo_memoized_stream)
 from repro.core import estep as estep_mod
-from repro.core.estep import BowBatch, estep, get_backend
+from repro.core.estep import BowBatch, CSRTokenBatch, estep, get_backend
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.memo import MemoStore, make_memo_store
 from repro.core.metrics import effective_topics
@@ -96,6 +96,29 @@ def svi_step(cfg: LDAConfig, state: EngineState, ids: jax.Array,
     eb = exp_dirichlet_expectation(state.lam, axis=0)
     res = estep(cfg, eb, ids, cnts)
     scale = num_docs_total / ids.shape[0]
+    lam_hat = cfg.beta0 + scale * res.sstats
+    rho = cfg.rho(state.t + 1)
+    lam = (1.0 - rho) * state.lam + rho * lam_hat
+    return dataclasses.replace(state, lam=lam, t=state.t + 1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_docs"), donate_argnums=(1,))
+def svi_step_csr(cfg: LDAConfig, state: EngineState, ids: jax.Array,
+                 cnts: jax.Array, segs: jax.Array, batch_docs: jax.Array,
+                 num_docs_total: jax.Array, *,
+                 num_docs: int) -> EngineState:
+    """Eq. 3 on a flat CSR token batch.
+
+    ``num_docs`` is the static segment-id capacity (the engine pads it to
+    ``batch_size``, so every batch — full, pre-emit-short or epoch tail —
+    hits one compiled entry); ``batch_docs`` is the traced live-document
+    count the natural-gradient scale divides by. Phantom padding docs own
+    zero tokens, so they contribute exactly nothing to the sstats.
+    """
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+    res = get_backend(cfg.estep_backend).solve_tokens(
+        cfg, eb, CSRTokenBatch(ids, cnts, segs), num_docs=num_docs)
+    scale = num_docs_total / batch_docs
     lam_hat = cfg.beta0 + scale * res.sstats
     rho = cfg.rho(state.t + 1)
     lam = (1.0 - rho) * state.lam + rho * lam_hat
@@ -193,6 +216,63 @@ def incremental_update(cfg: LDAConfig, averaged: bool, state: EngineState,
     return state, res.pi, eb
 
 
+def _csr_gather_flat(old_pi: jax.Array, ix: jax.Array) -> jax.Array:
+    """Doc-aligned memo rows (B, W, K) → token-aligned (T, K) via the
+    host-built flat index; padding tokens carry the sentinel index B·W,
+    which lands on the appended zero row."""
+    b, w, k = old_pi.shape
+    flat = jnp.concatenate([old_pi.reshape(b * w, k),
+                            jnp.zeros((1, k), old_pi.dtype)])
+    return flat[ix]
+
+
+def _csr_scatter_flat(pi: jax.Array, ix: jax.Array, b: int,
+                      w: int) -> jax.Array:
+    """Inverse of ``_csr_gather_flat``: token-aligned π back onto the
+    (B, W, K) memo wire. Padding tokens all target the sentinel row,
+    which the slice drops; memo slots no token maps to stay zero —
+    inert, since every memo consumer weights π by the (zero) count."""
+    k = pi.shape[-1]
+    buf = jnp.zeros((b * w + 1, k), pi.dtype)
+    return buf.at[ix].set(pi)[: b * w].reshape(b, w, k)
+
+
+@partial(jax.jit, static_argnames=("cfg", "averaged", "pi_dtype"),
+         donate_argnums=(2,))
+def incremental_update_csr(cfg: LDAConfig, averaged: bool,
+                           state: EngineState, ids: jax.Array,
+                           cnts: jax.Array, segs: jax.Array, ix: jax.Array,
+                           old_pi: jax.Array, visited: jax.Array,
+                           num_words_total: jax.Array,
+                           pi_dtype: str = "float32"):
+    """``incremental_update`` on a flat CSR token batch.
+
+    Same eq. 4 / eq. 5 algebra, same quantize-then-rescatter memo wire —
+    only the (B, L) token axes are replaced by one (T,) stream plus the
+    flat index ``ix`` that maps each token slot onto its (doc, position)
+    memo cell. The memo stays doc-aligned (B, W, K): old π rows are
+    gathered through ``ix`` on the way in and the new π is scattered back
+    through it on the way out, so every ``MemoStore`` works unchanged.
+    """
+    b, w, _ = old_pi.shape
+    eb = exp_dirichlet_expectation(state.lam, axis=0)
+    old_flat = _csr_gather_flat(old_pi, ix)
+    corr, words_first, res = get_backend(
+        cfg.estep_backend).solve_correction_tokens(
+            cfg, eb, CSRTokenBatch(ids, cnts, segs), old_flat, visited,
+            pi_dtype)
+    frac = retire_init_frac(state.init_frac, words_first, num_words_total)
+    if averaged:
+        lam, m_vk = sivi_global_update(cfg, state, corr, frac)
+    else:
+        m_vk = state.m_vk + corr
+        lam = cfg.beta0 + m_vk + frac * state.init_mass
+    state = dataclasses.replace(state, lam=lam, m_vk=m_vk, init_frac=frac,
+                                t=state.t + 1)
+    new_pi = _csr_scatter_flat(res.pi, ix, b, w)
+    return state, new_pi, eb
+
+
 def _raw_memo_step(cfg: LDAConfig, averaged: bool, state: EngineState,
                    memo: Memo, ids: jax.Array, cnts: jax.Array,
                    doc_idx: jax.Array, num_words_total: jax.Array):
@@ -264,10 +344,21 @@ class LDAEngine:
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
-                 bucket_by_length: bool = False, telemetry=None):
+                 bucket_by_length: bool = False, layout: str = "padded",
+                 token_budget: Optional[int] = None, telemetry=None):
         assert algo in ("mvi", "svi", "ivi", "sivi")
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown layout {layout!r} "
+                             "(expected 'padded' or 'csr')")
         self.cfg, self.algo = cfg, algo
         self.batch_size = batch_size
+        self.layout = layout
+        if layout == "csr" and token_budget is None:
+            # default budget: enough flat slots that a full batch of
+            # median-length documents fits, capped so the token stream
+            # stays VMEM-resident in the CSR kernel's T-promotion regime
+            token_budget = min(batch_size * 64, 8192)
+        self.token_budget = token_budget if layout == "csr" else None
         self.tel = as_telemetry(telemetry)
         self._updates = 0            # host-side global-update counter
         self._doc_tokens = None      # per-doc token totals (telemetry only)
@@ -279,6 +370,11 @@ class LDAEngine:
         self.bucket_stats: Optional[dict] = None
         self.stream = None
         if isinstance(corpus, Corpus):
+            if layout == "csr":
+                raise ValueError(
+                    "layout='csr' is the flat-token stream path — feed a "
+                    "DocStream (data.stream.as_doc_stream(corpus)) instead "
+                    "of a padded Corpus")
             self.corpus: Optional[Corpus] = corpus
             self.num_docs = corpus.num_docs
             max_unique = corpus.max_unique
@@ -306,9 +402,7 @@ class LDAEngine:
             self.num_docs = corpus.num_docs
             max_unique = corpus.max_unique
             num_words = float(corpus.num_words)
-            self._packer = BatchPacker(
-                batch_size, max_width=max_unique, vocab_size=cfg.vocab_size,
-                metrics=self.tel.metrics if self.tel.enabled else None)
+            self._packer = self._make_packer()
             self._stream_cursor = 0          # docs pulled this epoch
             self._stream_iter = None
             self._stream_emitted: List = []  # flushed, not yet processed
@@ -345,6 +439,17 @@ class LDAEngine:
             self._obs, self._held = split_heldout(test_corpus, seed=seed)
         else:
             self._obs = self._held = None
+
+    def _make_packer(self):
+        """A fresh ``BatchPacker`` in this engine's configured layout —
+        used at construction and by the Trainer's mid-epoch restore, so
+        the two can never drift on packer parameters."""
+        from repro.data.stream import BatchPacker
+        return BatchPacker(
+            self.batch_size, max_width=self.stream.max_unique,
+            vocab_size=self.cfg.vocab_size, layout=self.layout,
+            token_budget=self.token_budget,
+            metrics=self.tel.metrics if self.tel.enabled else None)
 
     # -- batching ----------------------------------------------------------
     def _epoch_order(self) -> List[np.ndarray]:
@@ -535,8 +640,91 @@ class LDAEngine:
         return False
 
     def _run_packed(self, batch) -> None:
-        self._update_batch(batch.rows, jnp.asarray(batch.token_ids),
-                           jnp.asarray(batch.counts))
+        from repro.data.stream import CSRBatch
+        if isinstance(batch, CSRBatch):
+            self._update_batch_csr(batch)
+        else:
+            self._update_batch(batch.rows, jnp.asarray(batch.token_ids),
+                               jnp.asarray(batch.counts))
+
+    def _csr_flat_index(self, batch, width: int) -> np.ndarray:
+        """The token-slot → memo-cell map: ``ix[t] = seg_t·W + pos_in_doc``
+        for live tokens, sentinel ``B·W`` for padding slots. Host-built
+        from the batch's offsets — O(T) numpy, no device work."""
+        segs = batch.segments.astype(np.int64)
+        ix = segs * width + (np.arange(batch.token_budget, dtype=np.int64)
+                             - batch.offsets[segs])
+        ix[batch.live_tokens:] = self.batch_size * width
+        return ix
+
+    def _update_batch_csr(self, batch) -> None:
+        """One global update on a flat CSR batch (`stream_step`, csr
+        layout). The jit keys are (token_budget, batch_size, W): the flat
+        token arrays are always ``token_budget`` slots and the doc axis is
+        padded to ``batch_size`` (phantom docs own no tokens — inert in
+        every segment reduction), so W — the ladder rung covering the
+        batch's longest document, which sizes the memo wire — is the only
+        per-batch shape degree of freedom left.
+        """
+        tel = self.tel
+        on = tel.enabled
+        rows = batch.rows
+        b_real, b_pad = len(rows), self.batch_size
+        width = self._packer.width_for(
+            int(batch.doc_lengths.max()) if b_real else 1)
+        sp = tel.trace.begin("train/update", algo=self.algo, width=width,
+                             docs=b_real) if on else None
+        ids = jnp.asarray(batch.token_ids)
+        cnts = jnp.asarray(batch.counts)
+        segs = jnp.asarray(batch.segments)
+        if self.algo == "svi":
+            self.state = svi_step_csr(
+                self.cfg, self.state, ids, cnts, segs,
+                jnp.asarray(float(b_real)),
+                jnp.asarray(float(self.num_docs)), num_docs=b_pad)
+        elif self.algo in ("ivi", "sivi"):
+            # pad the doc axis by re-reading row 0: phantom docs own zero
+            # tokens, so their gathered memo rows are never touched and
+            # their visited flags contribute 0 to the first-visit count
+            rows_pad = np.concatenate(
+                [rows, np.zeros(b_pad - b_real, np.int64)])
+            g = tel.trace.begin("train/memo_gather", width=width) \
+                if on else None
+            old_pi, visited = self.memo.gather(rows_pad, width=width)
+            if g is not None:
+                tel.trace.end(g)
+            ix = jnp.asarray(self._csr_flat_index(batch, width))
+            s = tel.trace.begin("train/solve", width=width) if on else None
+            self.state, new_pi, eb = incremental_update_csr(
+                self.cfg, self.algo == "sivi", self.state, ids, cnts, segs,
+                ix, old_pi, visited, self.num_words_total,
+                self.memo.pi_wire_dtype)
+            if s is not None:
+                tel.trace.end(s, sync=self.state.lam)
+            u = tel.trace.begin("train/memo_update", width=width) \
+                if on else None
+            self.memo = self.memo.update(rows, new_pi[:b_real],
+                                         exp_elog_beta=eb)
+            if u is not None:
+                tel.trace.end(u)
+        else:
+            raise ValueError(self.algo)
+        self.docs_seen += b_real
+        if sp is not None:
+            tel.trace.end(sp, sync=self.state.lam)
+            self._updates += 1
+            m = tel.metrics
+            m.inc("train.docs", b_real)
+            m.inc("train.batches", width=width)
+            m.inc("train.tokens", float(batch.counts.sum()))
+            if self.memo is not None:
+                m.set_gauge("train.memo_resident_bytes",
+                            self.memo.footprint_bytes())
+            wd = tel.watchdog
+            if (self.algo in ("ivi", "sivi") and wd.enabled
+                    and wd.should_check(self._updates)):
+                wd.observe(self.full_bound(), step=self._updates,
+                           armed=self._watchdog_armed())
 
     def stream_padding_stats(self) -> dict:
         """Pad-waste accounting of everything packed so far (stream mode)."""

@@ -10,7 +10,7 @@ Every engine (MVI / SVI / IVI / S-IVI / D-IVI) consumes the E-step through
   Σ_d cnt·(π_new − π_old) scattered into (V, K), with γ warm-started from
   the memo for visited documents.
 
-Three backends:
+Four backends:
 
 * ``gather`` — token-aligned: gathers rows of exp(E[ln φ]) at the batch's
   token ids, shape (B, L, K). Memory-proportional to batch token count;
@@ -24,10 +24,21 @@ Three backends:
   from the segment-sum ``memo_delta`` pair — a token-π kernel tiling
   (B, L) and a V-chunk scatter — with no (B, L, K) jnp intermediates and
   no dense (nb, V, K) scatter partials.
+* ``csr`` — the width-free CSR kernels behind the padded contract (a
+  (B, L) batch flattens losslessly to a token stream), so the same
+  equivalence tests pin them against gather/dense.
+
+Every backend also implements the **flat-token contract**
+(``solve_tokens`` / ``solve_correction_tokens`` over a ``CSRTokenBatch``
+— a concatenated (T,) token stream with per-token segment ids): the jnp
+``segment_sum`` reference by default, the Pallas CSR kernels on the
+``pallas``/``csr`` backends. That is the path the CSR stream pipeline and
+ragged serving consume — zero padding, one compiled entry for every
+document-length mix.
 
 All backends return the converged document-topic parameter γ and the
-memoized responsibilities π in token layout (B, L, K) — the quantity IVI
-stores.
+memoized responsibilities π in token layout — (B, L, K) on the padded
+contract, (T, K) on the flat one; both are the quantity IVI stores.
 """
 from __future__ import annotations
 
@@ -50,9 +61,23 @@ class BowBatch(NamedTuple):
     counts: jax.Array
 
 
+class CSRTokenBatch(NamedTuple):
+    """A flat CSR mini-batch: every document's tokens concatenated.
+
+    ``segments[t]`` is the local document row owning token ``t``; padding
+    tokens carry segment 0 with count 0 (inert in every reduction). The
+    zero-padding twin of ``BowBatch`` — same fixed point, token layout
+    (T,) instead of (B, L)."""
+
+    token_ids: jax.Array  # (T,) int32
+    counts: jax.Array     # (T,) float32
+    segments: jax.Array   # (T,) int32 in [0, B)
+
+
 class EStepResult(NamedTuple):
     gamma: jax.Array      # (B, K)
     pi: jax.Array         # (B, L, K) token-aligned responsibilities
+                          # (flat-token paths: (T, K))
     sstats: jax.Array     # (V, K) Σ_d Σ_l cnt·π scattered at token ids
     iters: jax.Array      # () int32 fixed-point iterations used
 
@@ -102,6 +127,72 @@ def warm_start_gamma(cfg: LDAConfig, counts: jax.Array, old_pi: jax.Array,
     gamma_memo = cfg.alpha0 + jnp.einsum("blk,bl->bk", old_pi, counts)
     fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
     return jnp.where(visited[:, None], gamma_memo, fresh)
+
+
+# ---------------------------------------------------------------------------
+# flat-token (CSR) formulation
+# ---------------------------------------------------------------------------
+
+def segment_sum_docs(values: jax.Array, segments: jax.Array,
+                     num_docs: int) -> jax.Array:
+    """Σ over each document's tokens: (T, ...) → (num_docs, ...)."""
+    return jax.ops.segment_sum(values, segments, num_segments=num_docs)
+
+
+def scatter_sstats_flat(token_ids: jax.Array, weighted_pi: jax.Array,
+                        vocab_size: int) -> jax.Array:
+    """Scatter (T, K) flat weighted responsibilities into (V, K)."""
+    k = weighted_pi.shape[-1]
+    return jnp.zeros((vocab_size, k),
+                     weighted_pi.dtype).at[token_ids].add(weighted_pi)
+
+
+def warm_start_gamma_flat(cfg: LDAConfig, tok: CSRTokenBatch,
+                          old_pi: jax.Array, visited: jax.Array) -> jax.Array:
+    """``warm_start_gamma`` on the flat layout: the memo term is a segment
+    sum of cnt·π_old over each document's tokens."""
+    num_docs = visited.shape[0]
+    gamma_memo = cfg.alpha0 + segment_sum_docs(
+        tok.counts[:, None] * old_pi, tok.segments, num_docs)
+    fresh = jnp.full_like(gamma_memo, cfg.alpha0 + 1.0)
+    return jnp.where(visited[:, None], gamma_memo, fresh)
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_docs"))
+def estep_csr_ref(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                  token_ids: jax.Array, counts: jax.Array,
+                  segments: jax.Array, num_docs: int,
+                  gamma0: Optional[jax.Array] = None) -> EStepResult:
+    """jnp ``segment_sum`` reference for the CSR layout — the oracle the
+    Pallas CSR kernels are pinned against.
+
+    Same fixed point as ``estep_gather`` with the (B, L) einsums replaced
+    by per-token gathers + segment sums over the flat stream; zero-count
+    padding tokens (segment 0) are exact no-ops. Returns π in the FLAT
+    (T, K) layout.
+    """
+    eb_tok = exp_elog_beta[token_ids]                  # (T, K)
+    if gamma0 is None:
+        gamma0 = jnp.full((num_docs, cfg.num_topics), cfg.alpha0 + 1.0,
+                          jnp.float32)
+
+    def update(gamma):
+        etheta = exp_dirichlet_expectation(gamma)      # (B, K)
+        p = (etheta[segments] * eb_tok).sum(-1) + _EPS  # (T,)
+        acc = segment_sum_docs((counts / p)[:, None] * eb_tok,
+                               segments, num_docs)
+        return cfg.alpha0 + etheta * acc
+
+    gamma, iters = _fixed_point(cfg, update, gamma0)
+
+    etheta = exp_dirichlet_expectation(gamma)
+    et_tok = etheta[segments]                          # (T, K)
+    p = (et_tok * eb_tok).sum(-1) + _EPS
+    pi = et_tok * eb_tok / p[:, None]                  # (T, K)
+    pi = jnp.where(counts[:, None] > 0, pi, 0.0)
+    sstats = scatter_sstats_flat(token_ids, counts[:, None] * pi,
+                                 exp_elog_beta.shape[0])
+    return EStepResult(gamma=gamma, pi=pi, sstats=sstats, iters=iters)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -227,6 +318,43 @@ class EStepBackend:
         words_first = jnp.sum(jnp.where(~visited, cnts.sum(-1), 0.0))
         return correction, words_first, res
 
+    # -- flat-token (CSR) contract --------------------------------------
+    def solve_tokens(self, cfg: LDAConfig, exp_elog_beta: jax.Array,
+                     tok: CSRTokenBatch, num_docs: int,
+                     gamma0: Optional[jax.Array] = None) -> EStepResult:
+        """``solve`` on a flat CSR token stream; π comes back (T, K).
+
+        Default: the jnp ``segment_sum`` reference. The Pallas backends
+        override with the width-free CSR kernels.
+        """
+        return estep_csr_ref(cfg, exp_elog_beta, tok.token_ids, tok.counts,
+                             tok.segments, num_docs, gamma0)
+
+    def solve_correction_tokens(
+            self, cfg: LDAConfig, exp_elog_beta: jax.Array,
+            tok: CSRTokenBatch, old_pi: jax.Array, visited: jax.Array,
+            pi_dtype: str = "float32",
+    ) -> Tuple[jax.Array, jax.Array, EStepResult]:
+        """``solve_correction`` on the flat layout (old_pi is (T, K)).
+
+        Identical quantize-then-rescatter discipline as the padded
+        contract, with the (B, L) scatters replaced by flat ones.
+        """
+        num_docs = visited.shape[0]
+        gamma0 = warm_start_gamma_flat(cfg, tok, old_pi, visited)
+        res = self.solve_tokens(cfg, exp_elog_beta, tok, num_docs, gamma0)
+        pi = quantize_pi(res.pi, pi_dtype)
+        snew = scatter_sstats_flat(tok.token_ids, tok.counts[:, None] * pi,
+                                   cfg.vocab_size)
+        res = res._replace(pi=pi, sstats=snew)
+        sold = scatter_sstats_flat(tok.token_ids,
+                                   tok.counts[:, None] * old_pi,
+                                   cfg.vocab_size)
+        correction = snew - sold
+        doc_words = segment_sum_docs(tok.counts, tok.segments, num_docs)
+        words_first = jnp.sum(jnp.where(~visited, doc_words, 0.0))
+        return correction, words_first, res
+
 
 class GatherBackend(EStepBackend):
     name = "gather"
@@ -278,9 +406,62 @@ class PallasBackend(EStepBackend):
                                            pi_dtype=pi_dtype,
                                            delta_block_v=self.delta_block_v)
 
+    def solve_tokens(self, cfg, exp_elog_beta, tok, num_docs, gamma0=None):
+        from repro.kernels import ops as kops
+        return kops.estep_pallas_csr(cfg, exp_elog_beta, tok.token_ids,
+                                     tok.counts, tok.segments,
+                                     num_docs=num_docs, gamma0=gamma0,
+                                     delta_block_v=self.delta_block_v)
+
+    def solve_correction_tokens(self, cfg, exp_elog_beta, tok, old_pi,
+                                visited, pi_dtype="float32"):
+        from repro.kernels import ops as kops
+        return kops.memo_correction_pallas_csr(
+            cfg, exp_elog_beta, tok.token_ids, tok.counts, tok.segments,
+            old_pi, visited, pi_dtype=pi_dtype,
+            delta_block_v=self.delta_block_v)
+
+
+class CSRBackend(PallasBackend):
+    """The width-free CSR kernels behind the PADDED ``solve`` /
+    ``solve_correction`` contract.
+
+    A (B, L) batch flattens losslessly to a (B·L,) token stream whose
+    segment ids are the row indices — so this backend is the bridge that
+    lets the existing backend-equivalence tests pin the CSR kernels
+    against gather/dense on identical inputs. Flat-token callers (the
+    CSR stream path, ragged serving) use the inherited
+    ``solve_tokens``/``solve_correction_tokens`` directly.
+    """
+
+    name = "csr"
+
+    @staticmethod
+    def flatten(batch: BowBatch) -> CSRTokenBatch:
+        b, l = batch.token_ids.shape
+        segs = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None],
+                                (b, l))
+        return CSRTokenBatch(batch.token_ids.reshape(-1),
+                             batch.counts.reshape(-1), segs.reshape(-1))
+
+    def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
+        b, l = batch.token_ids.shape
+        res = self.solve_tokens(cfg, exp_elog_beta, self.flatten(batch),
+                                num_docs=b, gamma0=gamma0)
+        return res._replace(pi=res.pi.reshape(b, l, -1))
+
+    def solve_correction(self, cfg, exp_elog_beta, batch, old_pi, visited,
+                         pi_dtype="float32"):
+        b, l = batch.token_ids.shape
+        corr, words_first, res = self.solve_correction_tokens(
+            cfg, exp_elog_beta, self.flatten(batch),
+            old_pi.reshape(b * l, -1), visited, pi_dtype=pi_dtype)
+        return corr, words_first, res._replace(pi=res.pi.reshape(b, l, -1))
+
 
 _BACKENDS: Dict[str, EStepBackend] = {
-    b.name: b for b in (GatherBackend(), DenseBackend(), PallasBackend())
+    b.name: b for b in (GatherBackend(), DenseBackend(), PallasBackend(),
+                        CSRBackend())
 }
 
 

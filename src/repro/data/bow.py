@@ -80,19 +80,26 @@ def bucket_padding_stats(corpus: Corpus, buckets: LengthBuckets) -> dict:
     """Padding-waste accounting: slots touched per epoch, flat vs bucketed,
     plus the pad fraction inside each bucket (live slots vs padded slots —
     the number that exposes packing regressions)."""
+    from repro.data.stream import TOKEN_SLOT_BYTES
     d, l = corpus.num_docs, corpus.max_unique
     cnts = np.asarray(corpus.counts)
     flat = d * l
     per_bucket = []
     bucketed = 0
+    live_total = 0
     for rows, w in zip(buckets.doc_idx, buckets.widths):
         slots = len(rows) * w
         live = int((cnts[rows, :w] > 0).sum())
         bucketed += slots
+        live_total += live
         per_bucket.append({"width": int(w), "docs": len(rows),
-                           "pad_frac": 1.0 - live / max(slots, 1)})
+                           "pad_frac": 1.0 - live / max(slots, 1),
+                           "wasted_token_bytes":
+                               (slots - live) * TOKEN_SLOT_BYTES})
     return {"flat_slots": flat, "bucketed_slots": bucketed,
             "slot_ratio": bucketed / max(flat, 1),
+            "wasted_token_bytes":
+                (bucketed - live_total) * TOKEN_SLOT_BYTES,
             "per_bucket": per_bucket}
 
 

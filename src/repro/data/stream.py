@@ -226,11 +226,47 @@ class PackedBatch(NamedTuple):
     width: int
 
 
+class CSRBatch(NamedTuple):
+    """One flat CSR device batch: every document's tokens concatenated.
+
+    The zero-padding alternative to ``PackedBatch``: the flat arrays are
+    always exactly ``token_budget`` long (tail zero-count padded), so ONE
+    jit/kernel entry serves every document-length mix — no width ladder.
+    ``segments[t]`` is the local row (index into ``rows``) owning token
+    ``t``; padding tokens carry segment 0 with count 0, which every
+    segment reduction treats as an exact no-op. ``offsets`` are the
+    classic CSR row pointers into the live prefix (``offsets[-1]`` is the
+    live token count), kept host-side for unpacking per-doc results."""
+
+    rows: np.ndarray        # (B',) int64 — document positions
+    token_ids: np.ndarray   # (T,) int32 flat, zero-padded to token_budget
+    counts: np.ndarray      # (T,) float32, 0.0 on padding slots
+    segments: np.ndarray    # (T,) int32 — local doc index per token
+    offsets: np.ndarray     # (B'+1,) int64 — row offsets, offsets[-1]=live
+    token_budget: int
+
+    @property
+    def num_docs(self) -> int:
+        return len(self.rows)
+
+    @property
+    def live_tokens(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def doc_lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+
 @dataclasses.dataclass
 class _WidthStats:
     docs: int = 0
     live_slots: int = 0
     padded_slots: int = 0
+
+
+# one staged token slot = int32 id + float32 count
+TOKEN_SLOT_BYTES = 8
 
 
 class BatchPacker:
@@ -257,23 +293,44 @@ class BatchPacker:
     ``metrics``: an optional ``repro.obs`` ``MetricsRegistry``; each
     emitted batch updates ``pack.batches``/``pack.docs``/``pack.tokens``
     counters (labelled by width) and the running per-width
-    ``pack.pad_frac`` gauge. ``None`` (the default) records nothing and
-    adds nothing to the packing path.
+    ``pack.pad_frac`` / ``pack.wasted_token_bytes`` gauges. ``None`` (the
+    default) records nothing and adds nothing to the packing path.
+
+    ``layout="csr"`` switches the packer to the flat zero-padding mode:
+    documents are concatenated into one ``token_budget``-slot ``CSRBatch``
+    (doc boundaries carried via segment ids), emitted when the next
+    document would overflow the budget or when ``batch_size`` documents
+    are open — so a batch never splits a document and every token is
+    packed exactly once. The cursor/pending checkpoint contract is
+    identical to the padded mode.
     """
 
     def __init__(self, batch_size: int, *, max_width: Optional[int] = None,
                  boundaries: Sequence[int] = WIDTH_BOUNDARIES,
-                 vocab_size: Optional[int] = None, metrics=None):
+                 vocab_size: Optional[int] = None, metrics=None,
+                 layout: str = "padded", token_budget: Optional[int] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown packer layout {layout!r} "
+                             "(expected 'padded' or 'csr')")
+        if layout == "csr":
+            if token_budget is None:
+                raise ValueError("layout='csr' needs a token_budget")
+            if token_budget < 1:
+                raise ValueError("token_budget must be >= 1")
         self.batch_size = batch_size
         self.max_width = max_width
         self.vocab_size = vocab_size
         self.metrics = metrics
+        self.layout = layout
+        self.token_budget = int(token_budget) if token_budget else None
         self.boundaries = tuple(boundaries)
         self._widths = (width_ladder(max_width, boundaries)
                         if max_width is not None else sorted(boundaries))
         self._open: Dict[int, List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+        self._csr_open: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        self._csr_tokens = 0
         self._stats: Dict[int, _WidthStats] = {}
 
     # -- width policy ----------------------------------------------------
@@ -292,9 +349,11 @@ class BatchPacker:
         return w
 
     # -- packing ---------------------------------------------------------
-    def add(self, pos: int, ids: np.ndarray,
-            cnts: np.ndarray) -> Optional[PackedBatch]:
-        """File one ragged document; emit its bucket if it just filled."""
+    def add(self, pos: int, ids: np.ndarray, cnts: np.ndarray):
+        """File one ragged document; emit a batch the moment one fills.
+
+        Padded mode returns ``Optional[PackedBatch]``; CSR mode returns
+        ``Optional[CSRBatch]``."""
         ids = np.asarray(ids, np.int32).ravel()
         cnts = np.asarray(cnts, np.float32).ravel()
         if self.vocab_size is not None and len(ids) \
@@ -303,10 +362,16 @@ class BatchPacker:
             raise ValueError(
                 f"document {pos}: token ids in [{ids.min()}, {ids.max()}] "
                 f"fall outside the vocabulary [0, {self.vocab_size})")
-        if self.max_width is not None and len(ids) > self.max_width:
+        cap = self.max_width
+        if self.layout == "csr":
+            cap = (self.token_budget if cap is None
+                   else min(cap, self.token_budget))
+        if cap is not None and len(ids) > cap:
             # keep the most frequent tokens (the corpus_from_docs rule)
-            top = np.argsort(-cnts)[: self.max_width]
+            top = np.argsort(-cnts)[:cap]
             ids, cnts = ids[top], cnts[top]
+        if self.layout == "csr":
+            return self._add_csr(int(pos), ids, cnts)
         w = self.width_for(len(ids))
         bucket = self._open.setdefault(w, [])
         bucket.append((int(pos), ids, cnts))
@@ -335,10 +400,68 @@ class BatchPacker:
             m.set_gauge("pack.pad_frac",
                         1.0 - st.live_slots / max(st.padded_slots, 1),
                         width=width)
+            m.set_gauge("pack.wasted_token_bytes",
+                        (st.padded_slots - st.live_slots) * TOKEN_SLOT_BYTES,
+                        width=width)
         return PackedBatch(rows, out_ids, out_cnt, width)
 
-    def flush(self) -> List[PackedBatch]:
-        """Emit every partially-filled bucket, ascending widths."""
+    def _add_csr(self, pos: int, ids: np.ndarray,
+                 cnts: np.ndarray) -> Optional[CSRBatch]:
+        out = None
+        if self._csr_open and \
+                self._csr_tokens + len(ids) > self.token_budget:
+            # the new doc would overflow the flat budget: close the batch
+            # first, so no document ever splits across two batches
+            out = self._emit_csr()
+        self._csr_open.append((pos, ids, cnts))
+        self._csr_tokens += len(ids)
+        if len(self._csr_open) == self.batch_size:
+            # a pre-emit leaves exactly one open doc, and batch_size == 1
+            # never pre-emits (the open list is empty then) — so at most
+            # one of the two triggers fires per add
+            assert out is None
+            out = self._emit_csr()
+        return out
+
+    def _emit_csr(self) -> CSRBatch:
+        docs = self._csr_open
+        self._csr_open, self._csr_tokens = [], 0
+        t = self.token_budget
+        rows = np.asarray([p for p, _, _ in docs], np.int64)
+        out_ids = np.zeros(t, np.int32)
+        out_cnt = np.zeros(t, np.float32)
+        out_seg = np.zeros(t, np.int32)
+        offsets = np.zeros(len(docs) + 1, np.int64)
+        cur = 0
+        for r, (_, ids, cnts) in enumerate(docs):
+            n = len(ids)
+            out_ids[cur: cur + n] = ids
+            out_cnt[cur: cur + n] = cnts
+            out_seg[cur: cur + n] = r
+            cur += n
+            offsets[r + 1] = cur
+        st = self._stats.setdefault(t, _WidthStats())
+        st.docs += len(docs)
+        st.live_slots += cur
+        st.padded_slots += t
+        if self.metrics is not None:
+            m = self.metrics
+            m.inc("pack.batches", width=t)
+            m.inc("pack.docs", len(docs), width=t)
+            m.inc("pack.tokens", float(out_cnt.sum()), width=t)
+            m.set_gauge("pack.pad_frac",
+                        1.0 - st.live_slots / max(st.padded_slots, 1),
+                        width=t)
+            m.set_gauge("pack.wasted_token_bytes",
+                        (st.padded_slots - st.live_slots) * TOKEN_SLOT_BYTES,
+                        width=t)
+        return CSRBatch(rows, out_ids, out_cnt, out_seg, offsets, t)
+
+    def flush(self) -> list:
+        """Emit every partially-filled bucket (padded: ascending widths;
+        CSR: the single open tail batch)."""
+        if self.layout == "csr":
+            return [self._emit_csr()] if self._csr_open else []
         return [self._emit(w) for w in sorted(self._open) if self._open[w]]
 
     # -- checkpointing ---------------------------------------------------
@@ -346,6 +469,8 @@ class BatchPacker:
         """The open buckets' documents (< num_widths × batch_size of them),
         in an order whose replay through ``add`` reconstructs this exact
         packer state — the mid-epoch checkpoint payload."""
+        if self.layout == "csr":
+            return list(self._csr_open)
         out: List[Tuple[int, np.ndarray, np.ndarray]] = []
         for w in sorted(self._open):
             out.extend(self._open[w])
@@ -354,7 +479,7 @@ class BatchPacker:
     def load_pending(self,
                      docs: List[Tuple[int, np.ndarray, np.ndarray]]) -> None:
         """Restore ``pending_docs`` output into a fresh packer."""
-        if self._open:
+        if self._open or self._csr_open:
             raise ValueError("load_pending needs a fresh packer")
         for pos, ids, cnts in docs:
             if self.add(pos, ids, cnts) is not None:
@@ -364,17 +489,21 @@ class BatchPacker:
     # -- introspection ---------------------------------------------------
     def padding_stats(self) -> dict:
         """Pad-waste accounting over everything emitted so far: per-width
-        document counts and pad fractions, plus the overall slot ratio."""
+        document counts, pad fractions and wasted staged bytes, plus the
+        overall slot ratio. (CSR mode: one 'width' = the token budget.)"""
         per_width = [
             {"width": w, "docs": st.docs,
-             "pad_frac": 1.0 - st.live_slots / max(st.padded_slots, 1)}
+             "pad_frac": 1.0 - st.live_slots / max(st.padded_slots, 1),
+             "wasted_token_bytes":
+                 (st.padded_slots - st.live_slots) * TOKEN_SLOT_BYTES}
             for w, st in sorted(self._stats.items())
         ]
         live = sum(st.live_slots for st in self._stats.values())
         padded = sum(st.padded_slots for st in self._stats.values())
         return {"per_width": per_width,
                 "live_slots": live, "padded_slots": padded,
-                "pad_frac": 1.0 - live / max(padded, 1)}
+                "pad_frac": 1.0 - live / max(padded, 1),
+                "wasted_token_bytes": (padded - live) * TOKEN_SLOT_BYTES}
 
 
 # ---------------------------------------------------------------------------

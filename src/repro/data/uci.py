@@ -19,6 +19,7 @@ to exercise the loader.
 """
 from __future__ import annotations
 
+import bisect
 import gzip
 import os
 from typing import Iterator, List, Optional, Tuple
@@ -33,14 +34,28 @@ def _open(path: str):
     return gzip.open(path, "rt") if path.endswith(".gz") else open(path)
 
 
+def _open_binary(path: str):
+    """The docword parser reads BINARY lines: ``int()`` accepts bytes, and
+    binary ``tell``/``seek`` are cheap positions (text-mode tell is an
+    opaque cookie with real per-call cost) — the resume index depends on
+    them."""
+    return (gzip.open(path, "rb") if path.endswith(".gz")
+            else open(path, "rb"))
+
+
 class UCIDocStream(DocStream):
     """Lazy ``DocStream`` over a UCI docword file (see module docstring).
 
     Only the 3-line header is read at construction. ``num_words`` and
     ``max_unique`` need one pass over the file; it runs lazily on first
-    access and is cached. ``iter_from(cursor)`` re-reads from the top and
-    skips ``cursor`` documents — resuming costs one sequential scan of the
-    prefix, never any resident state.
+    access and is cached. That same pass records a byte-offset **resume
+    index** — the file position of one docID group start every
+    ``index_every`` documents — so ``iter_from(cursor)`` seeks to the
+    nearest indexed group at or below the cursor and parses O(index_every)
+    documents instead of re-reading the whole prefix: a deep mid-epoch
+    resume (the distributed-streaming restart path) touches O(1) leading
+    bytes of an uncompressed file. (Gzip members still decompress their
+    prefix on seek — that is a property of the format, not the parser.)
 
     Quirks mirrored from the materialized loader for exact equivalence:
     docIDs absent from the file (empty documents) yield the placeholder
@@ -49,9 +64,10 @@ class UCIDocStream(DocStream):
     """
 
     def __init__(self, docword_path: str, *, max_docs: Optional[int] = None,
-                 max_unique: Optional[int] = None):
+                 max_unique: Optional[int] = None, index_every: int = 1000):
         self.path = docword_path
         self.max_unique_cap = max_unique
+        self.index_every = max(1, int(index_every))
         with _open(docword_path) as f:
             d = int(f.readline())
             w = int(f.readline())
@@ -59,6 +75,7 @@ class UCIDocStream(DocStream):
         self.vocab_size = w
         self._num_docs = min(d, max_docs) if max_docs else d
         self._stats: Optional[Tuple[float, int]] = None   # (words, max_uniq)
+        self._index: Optional[List[Tuple[int, int]]] = None  # (doc, offset)
 
     # -- DocStream contract ---------------------------------------------
     @property
@@ -74,21 +91,47 @@ class UCIDocStream(DocStream):
         return self._scan_stats()[1]
 
     def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
-        for pos, doc in enumerate(self._iter_docs()):
+        if cursor <= 0:
+            yield from self._iter_docs()
+            return
+        # the resume index rides the stats scan — which every training
+        # run pays anyway (num_words/max_unique) and is cached, so
+        # forcing it here keeps deep resumes O(index_every), not O(cursor)
+        self._scan_stats()
+        start, offset = 0, None
+        if self._index:
+            i = bisect.bisect_right([d for d, _ in self._index], cursor) - 1
+            if i >= 0:
+                start, offset = self._index[i]
+        it = self._iter_docs(next_doc=start, offset=offset)
+        for pos, doc in enumerate(it, start=start):
             if pos >= cursor:
                 yield doc
 
     # -- internals -------------------------------------------------------
-    def _iter_docs(self) -> Iterator[RaggedDoc]:
-        """All documents 0..num_docs-1 in order, clipping applied."""
+    def _iter_docs(self, next_doc: int = 0, offset: Optional[int] = None,
+                   track=None) -> Iterator[RaggedDoc]:
+        """Documents ``next_doc``..num_docs-1 in order, clipping applied.
+
+        ``offset``: byte position of the first line of docID group
+        ``next_doc`` (from the resume index); None starts past the header.
+        ``track(doc, cookie)``: called with the byte offset of each docID
+        group's first line — the stats scan's hook that builds the index.
+        """
         empty = (np.asarray([0], np.int32), np.asarray([1.0], np.float32))
-        next_doc = 0                     # next docID (0-based) to emit
         words: List[int] = []
         cnts: List[int] = []
-        with _open(self.path) as f:
-            for _ in range(3):
-                f.readline()
-            for line in f:
+        with _open_binary(self.path) as f:
+            if offset is None:
+                for _ in range(3):
+                    f.readline()
+            else:
+                f.seek(offset)
+            while True:
+                cookie = f.tell() if track is not None else None
+                line = f.readline()
+                if not line:
+                    break
                 parts = line.split()
                 if len(parts) != 3:
                     continue
@@ -111,6 +154,8 @@ class UCIDocStream(DocStream):
                 while next_doc < doc:    # gap in docIDs: empty documents
                     yield empty
                     next_doc += 1
+                if track is not None and not words:
+                    track(doc, cookie)   # first line of this docID group
                 words.append(word)
                 cnts.append(cnt)
         if words:
@@ -140,10 +185,17 @@ class UCIDocStream(DocStream):
     def _scan_stats(self) -> Tuple[float, int]:
         if self._stats is None:
             words, maxu = 0.0, 1
-            for ids, cnts in self._iter_docs():
+            index: List[Tuple[int, int]] = []
+
+            def track(doc: int, cookie: int) -> None:
+                if not index or doc >= index[-1][0] + self.index_every:
+                    index.append((doc, cookie))
+
+            for ids, cnts in self._iter_docs(track=track):
                 words += float(cnts.sum())
                 maxu = max(maxu, len(ids))
             self._stats = (words, maxu)
+            self._index = index
         return self._stats
 
 

@@ -418,6 +418,259 @@ def memo_delta(token_ids: jax.Array, counts: jax.Array, eb_tok: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# CSR ragged E-step: the γ fixed point over a FLAT token stream
+# ---------------------------------------------------------------------------
+#
+# The padded fixed point streams a dense (B, V) count matrix; the CSR
+# kernels stream only the live tokens. A batch is the flat triplet
+# (counts (T,), segment ids (T,), Eφ token rows (T, K)) — doc boundaries
+# are carried arithmetically by the segment ids, exactly the PR-4 scatter
+# trick run in reverse: a (B, block_t) selector `iota == segs` is both the
+# per-token Eθ gather (selᵀ·Eθ on the MXU) and the segment-reduced γ
+# accumulator (sel·weights · Eφ_tok). One compiled kernel therefore serves
+# every document-length distribution: no (B, W) padding, no width ladder.
+
+def _csr_fixed_point_kernel(alpha0: float, tol: float, k_real: int,
+                            b_real: int, num_t: int, num_j: int,
+                            cnts_ref, segs_ref, ebtok_ref, g0_ref,
+                            gamma_ref, et_ref, iters_ref,
+                            gamma_s, et_s, acc_s, flags):
+    t = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((t == 0) & (j == 0))
+    def _start():
+        gamma_s[...] = g0_ref[...]
+        flags[0] = 0                                   # converged flag
+        flags[1] = 0                                   # sweeps run
+
+    live = flags[0] == 0
+
+    @pl.when(live & (j == 0))
+    def _sweep_start():
+        et_s[...] = _exp_elog_theta(gamma_s[...], k_real)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    @pl.when(live)
+    def _accumulate():
+        et = et_s[...]                                 # (Bp, K)
+        ebt = ebtok_ref[...].astype(jnp.float32)       # (bT, K)
+        segs = segs_ref[...]                           # (1, bT)
+        cnts = cnts_ref[...].astype(jnp.float32)       # (1, bT)
+        bp = et.shape[0]
+        bt = ebt.shape[0]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bp, bt), 0)
+        sel = rows == segs                             # owner-doc selector
+        # φnorm per token = the selected row of Eθ·Eφ_tokᵀ — computed for
+        # every (doc, token) pair on the MXU and masked down, which keeps
+        # the kernel gather-free (the trade for zero padding)
+        p = jax.lax.dot_general(et, ebt, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pnorm = jnp.where(sel, p, 0.0).sum(0, keepdims=True) + _EPS
+        w = jnp.where(sel, cnts / pnorm, 0.0)          # (Bp, bT)
+        acc_s[...] += jax.lax.dot(w, ebt,
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(live & (j == num_j - 1))
+    def _sweep_end():
+        g_old = gamma_s[...]
+        mask = jax.lax.broadcasted_iota(jnp.int32, g_old.shape, 1) < k_real
+        g_new = jnp.where(mask, alpha0 + et_s[...] * acc_s[...], alpha0)
+        # token-free rows (doc padding) hold γ = α₀ exactly; mask them out
+        # of the convergence mean like the fused kernel masks padded rows
+        delta = jnp.abs(g_new - g_old).sum() / (b_real * k_real)
+        gamma_s[...] = g_new
+        flags[1] += 1
+        flags[0] = jnp.where(delta <= tol, 1, 0).astype(jnp.int32)
+
+    @pl.when((t == num_t - 1) & (j == num_j - 1))
+    def _finish():
+        g = gamma_s[...]
+        gamma_ref[...] = g
+        et_ref[...] = _exp_elog_theta(g, k_real)
+        iters_ref[0, 0] = flags[1]
+
+
+def estep_fixed_point_csr(cnts: jax.Array, segs: jax.Array,
+                          eb_tok: jax.Array, gamma0: jax.Array,
+                          alpha0: float, tol: float, max_iters: int,
+                          k_real: int, b_real: int | None = None, *,
+                          block_t: int = 512,
+                          interpret: bool | None = None):
+    """The whole CSR γ fixed point as ONE pallas_call.
+
+    Shapes: cnts/segs (T,) flat token stream, eb_tok (T, K) = Eφ gathered
+    at the flat token ids, gamma0 (B, K) → (γ (B, K), Eθ (B, K), sweep
+    count (1, 1) int32). γ/Eθ and the sweep accumulator stay resident in
+    VMEM for the whole batch (no B tiling — a CSR batch's doc count is
+    bounded by ``batch_size``); the token axis is the inner grid axis, so
+    eb_tok streams HBM→VMEM once per sweep, or exactly once when the
+    wrapper promotes ``block_t`` to the whole (budget-sized) stream.
+    K is pre-padded to a lane multiple by the wrapper; T is padded here
+    (zero-count tail tokens are inert in every reduction); padding tokens
+    must carry segment 0 and count 0. eb_tok may be bf16 (fp32 accum).
+    """
+    b, k = gamma0.shape
+    t = cnts.shape[0]
+    b_real = b if b_real is None else b_real
+    interpret = _default_interpret(interpret)
+    block_t = min(block_t, _round_up(t, 128))
+    tp = _round_up(t, block_t)
+    if tp != t:
+        cnts = jnp.pad(cnts, (0, tp - t))
+        segs = jnp.pad(segs, (0, tp - t))
+        eb_tok = jnp.pad(eb_tok, ((0, tp - t), (0, 0)))
+    nj = tp // block_t
+    cnts2 = cnts.reshape(nj, block_t)
+    segs2 = segs.reshape(nj, block_t)
+    grid = (max(int(max_iters), 1), nj)
+    gamma, et, iters = pl.pallas_call(
+        functools.partial(_csr_fixed_point_kernel, alpha0, tol, k_real,
+                          b_real, grid[0], nj),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda t, j: (j, 0)),
+            pl.BlockSpec((1, block_t), lambda t, j: (j, 0)),
+            pl.BlockSpec((block_t, k), lambda t, j: (j, 0)),
+            pl.BlockSpec((b, k), lambda t, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda t, j: (0, 0)),
+            pl.BlockSpec((b, k), lambda t, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.VMEM((b, k), jnp.float32),
+            pltpu.SMEM((2,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cnts2, segs2, eb_tok, gamma0)
+    return gamma, et, iters
+
+
+def _csr_token_pi_kernel(quantize: bool, cnts_ref, segs_ref, ebtok_ref,
+                         et_ref, pi_ref):
+    """π = Eθ[seg]⊙Eφ_tok/φnorm for one flat token tile, gather-free.
+
+    The per-token Eθ gather is the selector matmul selᵀ·Eθ folded into the
+    count/φnorm weighting, so the whole tile is two MXU matmuls.
+    """
+    et = et_ref[...]                                   # (Bp, K)
+    ebt = ebtok_ref[...].astype(jnp.float32)           # (bT, K)
+    segs = segs_ref[...]                               # (1, bT)
+    cnts = cnts_ref[...]                               # (1, bT)
+    bp = et.shape[0]
+    bt = ebt.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bp, bt), 0)
+    sel = rows == segs
+    p = jax.lax.dot_general(et, ebt, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    pnorm = jnp.where(sel, p, 0.0).sum(0, keepdims=True) + _EPS
+    selw = jnp.where(sel & (cnts > 0), 1.0 / pnorm, 0.0)
+    pi = jax.lax.dot_general(selw, et, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * ebt
+    if quantize:
+        # round through the memo wire dtype BEFORE the scatter, so ⟨m_vk⟩
+        # adds exactly what the store will later subtract
+        pi = pi.astype(jnp.bfloat16).astype(jnp.float32)
+    pi_ref[...] = pi
+
+
+def memo_delta_csr(token_ids: jax.Array, counts: jax.Array,
+                   segs: jax.Array, eb_tok: jax.Array, etheta: jax.Array,
+                   vocab_size: int, old_pi: jax.Array | None = None, *,
+                   quantize: bool = False, block_t_pi: int = 512,
+                   block_v: int | None = None, block_t: int = 128,
+                   interpret: bool | None = None):
+    """Flat-token π plus segment-summed new/old masses — two kernels.
+
+    The CSR twin of ``memo_delta``: token_ids/counts/segs are the flat
+    (T,) stream, eb_tok (T, K) the Eφ token gather, old_pi the memoized π
+    in the SAME flat layout. Returns (π (T, K), S_new (V, K)[, S_old]).
+    The scatter is the unchanged ``_segment_scatter_kernel`` — it always
+    operated on flattened token rows, so the CSR layout is its native
+    input and the (B, L) reshape simply disappears.
+    """
+    t = token_ids.shape[0]
+    k = etheta.shape[1]
+    has_old = old_pi is not None
+    interpret = _default_interpret(interpret)
+
+    # -- kernel 1: token-aligned π over the flat token grid -------------
+    bt = min(block_t_pi, _round_up(t, 128))
+    tp = _round_up(t, bt)
+
+    def _pad_t(x):
+        if tp == t:
+            return x
+        pad = ((0, tp - t),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, pad)
+
+    ids_p, cnts_p = _pad_t(token_ids), _pad_t(counts)
+    segs_p, ebt_p = _pad_t(segs), _pad_t(eb_tok)
+    nj = tp // bt
+    pi_pad = pl.pallas_call(
+        functools.partial(_csr_token_pi_kernel, quantize),
+        grid=(nj,),
+        in_specs=[
+            pl.BlockSpec((1, bt), lambda j: (j, 0)),
+            pl.BlockSpec((1, bt), lambda j: (j, 0)),
+            pl.BlockSpec((bt, k), lambda j: (j, 0)),
+            pl.BlockSpec(etheta.shape, lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, k), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, k), jnp.float32),
+        interpret=interpret,
+    )(cnts_p.reshape(nj, bt), segs_p.reshape(nj, bt), ebt_p, etheta)
+
+    # -- kernel 2: the SAME segment-sum scatter as the padded path ------
+    vc, tb = segment_scatter_blocks(k, vocab_size, has_old,
+                                    block_v=block_v, block_t=block_t)
+    tb = min(tb, tp)
+    rows_p = _round_up(tp, tb)
+
+    def _scatter_rows(x):
+        if rows_p == tp:
+            return x
+        pad = ((0, rows_p - tp),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, pad)
+
+    nt = rows_p // tb
+    ids2 = _scatter_rows(ids_p).reshape(nt, tb)
+    cnts2 = _scatter_rows(cnts_p).reshape(nt, tb)
+    inputs = [ids2, cnts2, _scatter_rows(pi_pad)]
+    if has_old:
+        inputs.append(_scatter_rows(_pad_t(old_pi)))
+
+    vp = _round_up(vocab_size, vc)
+    row_spec = pl.BlockSpec((1, tb), lambda j, t: (t, 0))
+    w_spec = pl.BlockSpec((tb, k), lambda j, t: (t, 0))
+    acc_spec = pl.BlockSpec((vc, k), lambda j, t: (j, 0))
+    n_out = 2 if has_old else 1
+    outs = pl.pallas_call(
+        functools.partial(_segment_scatter_kernel, has_old),
+        grid=(vp // vc, nt),
+        in_specs=[row_spec, row_spec, w_spec] + [w_spec] * (n_out - 1),
+        out_specs=[acc_spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((vp, k), jnp.float32)] * n_out,
+        interpret=interpret,
+    )(*inputs)
+
+    pi = pi_pad if tp == t else pi_pad[:t]
+    snew = outs[0][:vocab_size]
+    if has_old:
+        return pi, snew, outs[1][:vocab_size]
+    return pi, snew
+
+
+# ---------------------------------------------------------------------------
 # legacy one-hot memo-correction kernel (benchmark baseline)
 # ---------------------------------------------------------------------------
 

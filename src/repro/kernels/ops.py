@@ -28,7 +28,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.estep import EStepResult, densify, warm_start_gamma
+from repro.core.estep import (CSRTokenBatch, EStepResult, densify,
+                              segment_sum_docs, warm_start_gamma,
+                              warm_start_gamma_flat)
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.types import LDAConfig
 from repro.kernels import lda_estep
@@ -184,6 +186,119 @@ def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
     correction = snew - sold
     words_first = jnp.sum(jnp.where(~visited, counts.sum(-1), 0.0))
     res = EStepResult(gamma=gamma, pi=pi[:bsz], sstats=snew, iters=iters)
+    return correction, words_first, res
+
+
+# ---------------------------------------------------------------------------
+# CSR ragged path: the width-free flat-token E-step
+# ---------------------------------------------------------------------------
+
+def csr_effective_block_t(t: int, k: int, stream_bytes: int = 4,
+                          block_t: int = 512) -> int:
+    """The token tile the CSR fixed point actually runs.
+
+    Mirrors the ``_V_RESIDENT_BYTES`` promotion of the dense path: when
+    the whole (T, K) Eφ token stream fits the resident budget it becomes
+    ONE tile, so the pipeline fetches it once per call instead of once
+    per sweep — the default token budgets are chosen to sit inside this
+    regime. Exposed so the BENCH_estep HBM model counts the same grid.
+    """
+    t_aligned = _round_up(t, 128)
+    kp = _round_up(k, 128)
+    if t_aligned * kp * stream_bytes <= _V_RESIDENT_BYTES:
+        return t_aligned
+    return min(block_t, t_aligned)
+
+
+def _run_fixed_point_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                         token_ids: jax.Array, counts: jax.Array,
+                         segments: jax.Array, num_docs: int,
+                         gamma0: Optional[jax.Array], block_t: int):
+    """K-pad → Eφ token gather → fused CSR kernel. Returns real-shape γ/Eθ
+    plus the (T, Kp) Eφ token gather the memo pair re-uses."""
+    k = exp_elog_beta.shape[1]
+    kp = _round_up(k, 128)
+    t = token_ids.shape[0]
+    stream_bytes = 2 if cfg.estep_stream_dtype == "bfloat16" else 4
+    block_t = csr_effective_block_t(t, k, stream_bytes, block_t)
+    ebp = jnp.pad(exp_elog_beta, ((0, 0), (0, kp - k)))  # padded topics → 0
+    eb_tok = ebp[token_ids]                              # (T, Kp) kernel feed
+    if gamma0 is None:
+        gamma0 = jnp.full((num_docs, cfg.num_topics), cfg.alpha0 + 1.0,
+                          jnp.float32)
+    bp = _round_up(num_docs, 8)
+    # pad γ topics/rows with α₀: token-free rows and zero-Eφ topics keep
+    # exactly α₀ through every sweep (their update is a no-op)
+    gpad = jnp.pad(gamma0, ((0, bp - num_docs), (0, kp - k)),
+                   constant_values=cfg.alpha0)
+    gamma, et, iters = lda_estep.estep_fixed_point_csr(
+        counts, segments, _stream_cast(cfg, eb_tok), gpad,
+        cfg.alpha0, cfg.estep_tol, cfg.estep_max_iters, k_real=k,
+        b_real=num_docs, block_t=block_t)
+    return gamma[:num_docs, :k], et[:num_docs, :k], eb_tok, iters.max()
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_docs", "block_t",
+                                   "delta_block_v"))
+def estep_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                     token_ids: jax.Array, counts: jax.Array,
+                     segments: jax.Array,
+                     gamma0: Optional[jax.Array] = None, *,
+                     num_docs: int, block_t: int = 512,
+                     delta_block_v: Optional[int] = None) -> EStepResult:
+    """Width-free flat-token E-step: CSR fixed point + CSR memo_delta.
+
+    token_ids/counts/segments are the flat (T,) stream (zero-count
+    padding tokens carry segment 0); π comes back in the same flat
+    (T, K) layout. One compiled entry serves every document-length mix
+    with the same (T, B) shape — no width in the jit key.
+    """
+    gamma, et, eb_tok, iters = _run_fixed_point_csr(
+        cfg, exp_elog_beta, token_ids, counts, segments, num_docs,
+        gamma0, block_t)
+    k = exp_elog_beta.shape[1]
+    pi, snew = lda_estep.memo_delta_csr(
+        token_ids, counts, segments, eb_tok[:, :k], et,
+        exp_elog_beta.shape[0], block_v=delta_block_v)
+    return EStepResult(gamma=gamma, pi=pi, sstats=snew, iters=iters)
+
+
+@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "block_t",
+                                   "delta_block_v"))
+def memo_correction_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                               token_ids: jax.Array, counts: jax.Array,
+                               segments: jax.Array, old_pi: jax.Array,
+                               visited: jax.Array, *,
+                               pi_dtype: str = "float32",
+                               block_t: int = 512,
+                               delta_block_v: Optional[int] = None
+                               ) -> Tuple[jax.Array, jax.Array, EStepResult]:
+    """Fused CSR IVI hot path: flat E-step + subtract-old/add-new.
+
+    The flat twin of ``memo_correction_pallas``: old_pi is (T, K) in the
+    SAME flat token layout, and the correction comes from the unchanged
+    ``_segment_scatter_kernel`` — flat token rows are its native input.
+    """
+    if pi_dtype not in ("float32", "bfloat16"):
+        # the in-kernel quantize only implements the bf16 wire; refuse
+        # rather than silently skip the round-trip and drift ⟨m_vk⟩
+        raise ValueError(f"pallas memo correction supports pi_dtype "
+                         f"float32|bfloat16, got {pi_dtype!r}")
+    num_docs = visited.shape[0]
+    tok = CSRTokenBatch(token_ids, counts, segments)
+    gamma0 = warm_start_gamma_flat(cfg, tok, old_pi, visited)
+    gamma, et, eb_tok, iters = _run_fixed_point_csr(
+        cfg, exp_elog_beta, token_ids, counts, segments, num_docs,
+        gamma0, block_t)
+    k = exp_elog_beta.shape[1]
+    pi, snew, sold = lda_estep.memo_delta_csr(
+        token_ids, counts, segments, eb_tok[:, :k], et,
+        exp_elog_beta.shape[0], old_pi=old_pi,
+        quantize=(pi_dtype == "bfloat16"), block_v=delta_block_v)
+    correction = snew - sold
+    doc_words = segment_sum_docs(counts, segments, num_docs)
+    words_first = jnp.sum(jnp.where(~visited, doc_words, 0.0))
+    res = EStepResult(gamma=gamma, pi=pi, sstats=snew, iters=iters)
     return correction, words_first, res
 
 

@@ -87,6 +87,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=32,
                     help="request batch size (also the jit pad width)")
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--layout", default=None, choices=[None, "padded", "csr"],
+                    help="serving batch layout: padded width buckets or "
+                         "the flat CSR token stream (one jit entry total); "
+                         "default: the estimator's training layout")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="with --layout csr: flat slots per batch")
     ap.add_argument("--ragged", action="store_true",
                     help="serve ragged requests through posterior_docs "
                          "(no padded Corpus; double-buffered by default)")
@@ -147,6 +153,7 @@ def main() -> None:
               f"{args.warm_epochs} epoch(s), docs_seen={lda.docs_seen}")
 
     inf = lda.inferencer(backend=args.backend, batch_size=args.batch,
+                         layout=args.layout, token_budget=args.token_budget,
                          telemetry=tel)
     rng = np.random.default_rng(args.seed)
 
@@ -182,13 +189,19 @@ def main() -> None:
     lat = reg.histogram_values("serve.request_ms")
     docs = args.requests * args.batch
     mode = ("ragged" + ("" if args.no_double_buffer else "+double-buffer")
-            if args.ragged else "padded")
+            if args.ragged else "corpus")
+    mode = f"{inf.layout}/{mode}"
     if lat:
         print(f"served {args.requests} requests × {args.batch} docs "
               f"backend={inf.cfg.estep_backend} [{mode}]: "
               f"{docs / wall:.1f} docs/s")
         print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
               f"p99={pct['p99']:.1f} max={max(lat):.1f}")
+        pad = inf.padding_stats()
+        print(f"padding: frac={pad['pad_frac']:.3f} "
+              f"wasted={pad['wasted_token_bytes'] / 1e3:.1f}kB staged "
+              f"({pad['padded_slots'] - pad['live_slots']} of "
+              f"{pad['padded_slots']} slots dead)")
     else:
         print("served 0 requests — skipping the latency report")
     cache = inf.cache_info()
@@ -208,7 +221,9 @@ def main() -> None:
                "docs_per_s": docs / wall if lat else 0.0,
                "latency_ms": pct,
                "jit_widths": cache["compiled_widths"],
-               "batches_per_width": cache["batches_per_width"], "ok": True}
+               "batches_per_width": cache["batches_per_width"],
+               "layout": inf.layout,
+               "padding": inf.padding_stats(), "ok": True}
         with open(args.out, "a") as f:
             f.write(json.dumps(rec) + "\n")
 

@@ -75,7 +75,8 @@ class LDA:
                  batch_size: int = 64, seed: int = 0,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False,
-                 backend: Optional[str] = None,
+                 backend: Optional[str] = None, layout: str = "padded",
+                 token_budget: Optional[int] = None,
                  mesh=None, data_axes=None, telemetry=None, **cfg_kwargs):
         if cfg is None:
             cfg = LDAConfig(**cfg_kwargs)
@@ -86,6 +87,13 @@ class LDA:
             cfg = dataclasses.replace(cfg, estep_backend=backend)
         if algo not in _ALGOS:
             raise ValueError(f"unknown algo {algo!r} (have {_ALGOS})")
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown layout {layout!r} "
+                             "(expected 'padded' or 'csr')")
+        if layout == "csr" and bucket_by_length:
+            raise ValueError("bucket_by_length is the padded layout's "
+                             "padding mitigation; layout='csr' has no "
+                             "width buckets to begin with")
         if algo == "divi" and distributed is None:
             distributed = DIVIConfig()
         if distributed is not None and algo not in ("sivi", "divi"):
@@ -100,6 +108,8 @@ class LDA:
         self.memo_store = memo_store
         self.chunk_docs = chunk_docs
         self.bucket_by_length = bucket_by_length
+        self.layout = layout
+        self.token_budget = token_budget if layout == "csr" else None
         self.telemetry = as_telemetry(telemetry)
         self._mesh, self._data_axes = mesh, data_axes
         self.trainer: Optional[Trainer] = None
@@ -121,7 +131,14 @@ class LDA:
         path), ``DocStream`` (ragged stream ingest — no (D, L) corpus ever
         resident) or any plain iterable of documents (token arrays or
         ``(ids, counts)`` pairs — wrapped as a host-resident stream)."""
-        if data is None or isinstance(data, Corpus):
+        if data is None:
+            return data
+        if isinstance(data, Corpus):
+            if self.layout == "csr":
+                # the flat layout trains through stream ingest: wrap the
+                # padded corpus as a resident stream (zero-copy row views)
+                from repro.data.stream import CorpusDocStream
+                return CorpusDocStream(data)
             return data
         from repro.data.stream import ListDocStream, is_doc_stream
         if is_doc_stream(data):
@@ -175,7 +192,8 @@ class LDA:
             batch_size=self.batch_size, seed=self.seed,
             test_corpus=test_corpus, memo_store=self.memo_store,
             chunk_docs=self.chunk_docs,
-            bucket_by_length=self.bucket_by_length, mesh=self._mesh,
+            bucket_by_length=self.bucket_by_length, layout=self.layout,
+            token_budget=self.token_budget, mesh=self._mesh,
             data_axes=self._data_axes, telemetry=self.telemetry)
         self._corpus = corpus
         self._corpus_raw = raw
@@ -252,13 +270,19 @@ class LDA:
     # ------------------------------------------------------------------
 
     def inferencer(self, *, backend: Optional[str] = None,
-                   batch_size: int = 256,
+                   batch_size: int = 256, layout: Optional[str] = None,
+                   token_budget: Optional[int] = None,
                    telemetry=None) -> TopicInferencer:
         """A reusable serving handle over the current topics (λ is
-        preprocessed once; one jit entry per bucket width). Inherits the
-        estimator's telemetry bundle unless ``telemetry=`` overrides it."""
+        preprocessed once; one jit entry per bucket width — or exactly ONE
+        entry total under ``layout='csr'``). Layout defaults to the
+        estimator's training layout; telemetry to its bundle."""
+        layout = self.layout if layout is None else layout
+        if token_budget is None and layout == self.layout:
+            token_budget = self.token_budget
         return TopicInferencer(
             self.cfg, self.lam, backend=backend, batch_size=batch_size,
+            layout=layout, token_budget=token_budget,
             telemetry=self.telemetry if telemetry is None else telemetry)
 
     def transform(self, corpus: Corpus, *, backend: Optional[str] = None,

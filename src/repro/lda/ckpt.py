@@ -60,6 +60,8 @@ def save_lda_checkpoint(path: str, lda) -> str:
             "memo_store": lda.memo_store,
             "chunk_docs": lda.chunk_docs,
             "bucket_by_length": lda.bucket_by_length,
+            "layout": lda.layout,
+            "token_budget": lda.token_budget,
         },
         "trainer": trainer_meta,
     }
@@ -95,7 +97,9 @@ def load_lda_checkpoint(path: str):
     lda = LDA(LDAConfig(**ctor["cfg"]), algo=ctor["algo"], distributed=dist,
               batch_size=ctor["batch_size"], seed=ctor["seed"],
               memo_store=ctor["memo_store"], chunk_docs=ctor["chunk_docs"],
-              bucket_by_length=ctor["bucket_by_length"])
+              bucket_by_length=ctor["bucket_by_length"],
+              layout=ctor.get("layout", "padded"),
+              token_budget=ctor.get("token_budget"))
     lda._state_view = _state_view(arrays)
     lda._pending_restore = (meta["trainer"], arrays)
     return lda

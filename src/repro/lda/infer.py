@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.estep import estep
+from repro.core.estep import CSRTokenBatch, estep, get_backend
 from repro.core.math import exp_dirichlet_expectation, safe_normalize
 from repro.core.types import Corpus, LDAConfig
 from repro.data.stream import BatchPacker, as_ragged_doc, bucket_rows
@@ -55,9 +55,21 @@ def _posterior_batch(cfg: LDAConfig, exp_elog_beta: jax.Array,
     return estep(cfg, exp_elog_beta, token_ids, counts).gamma
 
 
+@partial(jax.jit, static_argnames=("cfg", "num_docs"))
+def _posterior_batch_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
+                         token_ids: jax.Array, counts: jax.Array,
+                         segments: jax.Array, *,
+                         num_docs: int) -> jax.Array:
+    """γ for one flat CSR token batch — every request length distribution
+    shares this single (token_budget,)-shaped entry."""
+    return get_backend(cfg.estep_backend).solve_tokens(
+        cfg, exp_elog_beta, CSRTokenBatch(token_ids, counts, segments),
+        num_docs=num_docs).gamma
+
+
 # one staged request batch: (request positions, device ids, device counts,
-# bucket width, live row count)
-_Staged = Tuple[np.ndarray, jax.Array, jax.Array, int, int]
+# bucket width — padded — or device segments — csr —, live row count)
+_Staged = Tuple[np.ndarray, jax.Array, jax.Array, object, int]
 
 
 class TopicInferencer:
@@ -80,15 +92,25 @@ class TopicInferencer:
 
     def __init__(self, cfg: LDAConfig, lam: jax.Array, *,
                  backend: Optional[str] = None, batch_size: int = 256,
+                 layout: str = "padded", token_budget: Optional[int] = None,
                  telemetry=None):
         if backend is not None and backend != cfg.estep_backend:
             cfg = dataclasses.replace(cfg, estep_backend=backend)
+        if layout not in ("padded", "csr"):
+            raise ValueError(f"unknown layout {layout!r} "
+                             "(expected 'padded' or 'csr')")
         self.cfg = cfg
         self.batch_size = batch_size
+        self.layout = layout
+        if layout == "csr" and token_budget is None:
+            token_budget = min(batch_size * 64, 8192)
+        self.token_budget = token_budget if layout == "csr" else None
         self.tel = as_telemetry(telemetry)
         self.exp_elog_beta = exp_dirichlet_expectation(jnp.asarray(lam),
                                                        axis=0)
         self._compiled_widths: Dict[int, int] = {}    # width → batches run
+        self._live_slots = 0          # staged token slots actually live
+        self._padded_slots = 0        # staged token slots incl. padding
 
     # -- padded-corpus requests -----------------------------------------
     def posterior(self, corpus: Corpus) -> np.ndarray:
@@ -100,6 +122,11 @@ class TopicInferencer:
         result can be the all-zero vector ``transform`` would fail to
         normalise.
         """
+        if self.layout == "csr":
+            # the flat layout has no width buckets: route padded-corpus
+            # requests through the same single-entry ragged path
+            from repro.data.stream import CorpusDocStream
+            return self.posterior_docs(CorpusDocStream(corpus))
         d = corpus.num_docs
         out = np.zeros((d, self.cfg.num_topics), np.float32)
         ids_all = np.asarray(corpus.token_ids)
@@ -115,6 +142,7 @@ class TopicInferencer:
                 cnts = np.zeros((b, width), np.float32)
                 ids[: len(rows)] = ids_all[rows, :width]
                 cnts[: len(rows)] = cnts_all[rows, :width]
+                self._note_padding(int((cnts > 0).sum()), cnts.size)
                 gamma = _posterior_batch(self.cfg, self.exp_elog_beta,
                                          jnp.asarray(ids), jnp.asarray(cnts))
                 out[rows] = np.asarray(gamma[: len(rows)])
@@ -148,13 +176,26 @@ class TopicInferencer:
         thread when double-buffered — the recorder is thread-safe and
         tags spans with a per-thread tid)."""
         tel = self.tel
+        n = len(batch.rows)
+        if self.layout == "csr":
+            # flat arrays are already exactly token_budget slots — nothing
+            # to pad; phantom docs exist only as unused segment ids
+            sp = tel.trace.begin("serve/stage", width=batch.token_budget,
+                                 docs=n) if tel.enabled else None
+            self._note_padding(batch.live_tokens, batch.token_budget)
+            staged = (batch.rows, jnp.asarray(batch.token_ids),
+                      jnp.asarray(batch.counts),
+                      jnp.asarray(batch.segments), n)
+            if sp is not None:
+                tel.trace.end(sp)
+            return staged
         sp = tel.trace.begin("serve/stage", width=batch.width,
                              docs=len(batch.rows)) if tel.enabled else None
-        n = len(batch.rows)
         ids = np.zeros((self.batch_size, batch.width), np.int32)
         cnts = np.zeros((self.batch_size, batch.width), np.float32)
         ids[:n] = batch.token_ids
         cnts[:n] = batch.counts
+        self._note_padding(int((cnts > 0).sum()), cnts.size)
         staged = (batch.rows, jnp.asarray(ids), jnp.asarray(cnts),
                   batch.width, n)
         if sp is not None:
@@ -172,6 +213,7 @@ class TopicInferencer:
               else (as_ragged_doc(d) for d in docs))
         packer = BatchPacker(
             self.batch_size, vocab_size=self.cfg.vocab_size,
+            layout=self.layout, token_budget=self.token_budget,
             metrics=self.tel.metrics if self.tel.enabled else None)
         pos = 0
         for ids, cnts in it:
@@ -262,13 +304,22 @@ class TopicInferencer:
 
     def _dispatch(self, staged: _Staged) -> Tuple[np.ndarray, jax.Array, int]:
         tel = self.tel
-        rows, ids, cnts, width, n = staged
+        rows, ids, cnts, aux, n = staged
         # serve/solve is never device-synced: syncing here would serialise
         # the double-buffer overlap the pipeline exists for, so the span
         # measures dispatch (+ compile on a width's first batch)
-        sp = tel.trace.begin("serve/solve", width=width, docs=n) \
-            if tel.enabled else None
-        gamma = _posterior_batch(self.cfg, self.exp_elog_beta, ids, cnts)
+        if self.layout == "csr":
+            width = self.token_budget
+            sp = tel.trace.begin("serve/solve", width=width, docs=n) \
+                if tel.enabled else None
+            gamma = _posterior_batch_csr(self.cfg, self.exp_elog_beta,
+                                         ids, cnts, aux,
+                                         num_docs=self.batch_size)
+        else:
+            width = aux
+            sp = tel.trace.begin("serve/solve", width=width, docs=n) \
+                if tel.enabled else None
+            gamma = _posterior_batch(self.cfg, self.exp_elog_beta, ids, cnts)
         if sp is not None:
             tel.trace.end(sp)
         self._note_width(width, n)
@@ -280,6 +331,24 @@ class TopicInferencer:
         normalised)."""
         gamma = self.posterior_docs(docs, double_buffer=double_buffer)
         return np.asarray(safe_normalize(jnp.asarray(gamma), axis=-1))
+
+    def _note_padding(self, live: int, padded: int) -> None:
+        self._live_slots += int(live)
+        self._padded_slots += int(padded)
+
+    def padding_stats(self) -> Dict[str, object]:
+        """Pad-waste accounting of everything staged so far: live vs
+        total staged token slots and the bytes the padding cost on the
+        host→device wire (`repro.data.stream.TOKEN_SLOT_BYTES` per slot).
+        Under ``layout='csr'`` the only padding left is the flat batch
+        tail below ``token_budget``."""
+        from repro.data.stream import TOKEN_SLOT_BYTES
+        wasted = self._padded_slots - self._live_slots
+        return {"live_slots": self._live_slots,
+                "padded_slots": self._padded_slots,
+                "pad_frac": 1.0 - self._live_slots
+                    / max(self._padded_slots, 1),
+                "wasted_token_bytes": wasted * TOKEN_SLOT_BYTES}
 
     # -- introspection ---------------------------------------------------
     def cache_info(self) -> Dict[str, object]:

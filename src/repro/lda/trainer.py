@@ -138,11 +138,13 @@ class SingleHostTrainer(Trainer):
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
-                 bucket_by_length: bool = False, telemetry=None):
+                 bucket_by_length: bool = False, layout: str = "padded",
+                 token_budget: Optional[int] = None, telemetry=None):
         self.eng = LDAEngine(cfg, corpus, algo=algo, batch_size=batch_size,
                              seed=seed, test_corpus=test_corpus,
                              memo_store=memo_store, chunk_docs=chunk_docs,
                              bucket_by_length=bucket_by_length,
+                             layout=layout, token_budget=token_budget,
                              telemetry=telemetry)
         self.algo = algo
         self._streamed = self.eng.stream is not None
@@ -236,9 +238,12 @@ class SingleHostTrainer(Trainer):
             # batches not yet processed — the full mid-epoch stream state
             pend = eng._packer.pending_docs()
             meta["stream_cursor"] = int(eng._stream_cursor)
+            meta["stream_layout"] = eng.layout
             meta["stream_pending_pos"] = [int(p) for p, _, _ in pend]
-            meta["stream_emitted_widths"] = [int(b.width)
-                                             for b in eng._stream_emitted]
+            # per-batch shape key: padded width, or the CSR token budget
+            meta["stream_emitted_widths"] = [
+                int(b.token_budget if eng.layout == "csr" else b.width)
+                for b in eng._stream_emitted]
             grp: Dict[str, np.ndarray] = {}
             for i, (_pos, ids, cnts) in enumerate(pend):
                 grp[f"pend_{i:05d}_ids"] = np.asarray(ids, np.int32)
@@ -247,6 +252,9 @@ class SingleHostTrainer(Trainer):
                 grp[f"emit_{i:05d}_rows"] = np.asarray(b.rows, np.int64)
                 grp[f"emit_{i:05d}_ids"] = np.asarray(b.token_ids)
                 grp[f"emit_{i:05d}_cnts"] = np.asarray(b.counts)
+                if eng.layout == "csr":
+                    grp[f"emit_{i:05d}_segs"] = np.asarray(b.segments)
+                    grp[f"emit_{i:05d}_offs"] = np.asarray(b.offsets)
             arrays["stream"] = grp
         if eng.memo is not None:
             meta["memo_kind"] = eng.memo.kind
@@ -287,23 +295,36 @@ class SingleHostTrainer(Trainer):
              None if w is None else int(w))
             for i, w in enumerate(widths)]
         if self._streamed:
-            from repro.data.stream import BatchPacker, PackedBatch
+            from repro.data.stream import CSRBatch, PackedBatch
+            ck_layout = meta.get("stream_layout", "padded")
+            if ck_layout != eng.layout:
+                raise ValueError(
+                    f"checkpoint packs the stream in {ck_layout!r} layout "
+                    f"!= configured {eng.layout!r} — the emission schedule "
+                    "differs between layouts, so a mid-epoch resume cannot "
+                    "switch them")
             grp = arrays.get("stream", {})
-            packer = BatchPacker(
-                eng.batch_size, max_width=eng.stream.max_unique,
-                vocab_size=eng.cfg.vocab_size,
-                metrics=eng.tel.metrics if eng.tel.enabled else None)
+            packer = eng._make_packer()
             packer.load_pending([
                 (pos, grp[f"pend_{i:05d}_ids"], grp[f"pend_{i:05d}_cnts"])
                 for i, pos in enumerate(meta["stream_pending_pos"])])
             eng._packer = packer
             eng._stream_cursor = int(meta["stream_cursor"])
             eng._stream_iter = None          # re-seated lazily at the cursor
-            eng._stream_emitted = [
-                PackedBatch(grp[f"emit_{i:05d}_rows"],
-                            grp[f"emit_{i:05d}_ids"],
-                            grp[f"emit_{i:05d}_cnts"], int(w))
-                for i, w in enumerate(meta["stream_emitted_widths"])]
+            if eng.layout == "csr":
+                eng._stream_emitted = [
+                    CSRBatch(grp[f"emit_{i:05d}_rows"],
+                             grp[f"emit_{i:05d}_ids"],
+                             grp[f"emit_{i:05d}_cnts"],
+                             grp[f"emit_{i:05d}_segs"],
+                             grp[f"emit_{i:05d}_offs"], int(w))
+                    for i, w in enumerate(meta["stream_emitted_widths"])]
+            else:
+                eng._stream_emitted = [
+                    PackedBatch(grp[f"emit_{i:05d}_rows"],
+                                grp[f"emit_{i:05d}_ids"],
+                                grp[f"emit_{i:05d}_cnts"], int(w))
+                    for i, w in enumerate(meta["stream_emitted_widths"])]
 
 
 # ---------------------------------------------------------------------------
@@ -443,7 +464,8 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                  batch_size: int = 64, seed: int = 0,
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
-                 bucket_by_length: bool = False, mesh=None,
+                 bucket_by_length: bool = False, layout: str = "padded",
+                 token_budget: Optional[int] = None, mesh=None,
                  data_axes=None, telemetry=None) -> Trainer:
     """Bind a corpus (or ``DocStream``) to the right Trainer."""
     if distributed is not None:
@@ -452,6 +474,9 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                 "D-IVI shards a materialized corpus across workers — "
                 "stream ingest is single-host only; use "
                 "repro.data.stream.materialize(stream) first")
+        if layout != "padded":
+            raise ValueError("distributed training packs padded worker "
+                             "batches; layout='csr' is single-host only")
         return DIVITrainer(cfg, distributed, corpus, seed=seed,
                            test_corpus=test_corpus, mesh=mesh,
                            data_axes=data_axes, telemetry=telemetry)
@@ -459,4 +484,5 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                              seed=seed, test_corpus=test_corpus,
                              memo_store=memo_store, chunk_docs=chunk_docs,
                              bucket_by_length=bucket_by_length,
+                             layout=layout, token_budget=token_budget,
                              telemetry=telemetry)

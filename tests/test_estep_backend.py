@@ -28,7 +28,7 @@ from repro.core.types import Corpus
 from repro.data.bow import bucket_corpus, bucket_padding_stats, corpus_from_docs
 from repro.launch.hlo_analysis import dense_vocab_cubes, pallas_call_sites
 
-BACKENDS = ("gather", "dense", "pallas")
+BACKENDS = ("gather", "dense", "pallas", "csr")
 
 
 def _ragged_batch(seed, b=12, vocab=200, k=7, mean_len=25):

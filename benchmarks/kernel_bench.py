@@ -416,7 +416,7 @@ def csr_report(json_path: str | None = None, *,
     shape. Modeled tokens/s divides the same live-token total by each
     path's modeled HBM time. Merged into BENCH_estep.json as ``"csr"``.
     """
-    from benchmarks.roofline import HW
+    from repro.obs.roofline import HW
     from repro.data.stream import BatchPacker
 
     d, k, batch, cap = 4096, 128, 64, 512

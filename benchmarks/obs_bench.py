@@ -7,7 +7,8 @@ Three sections, all driven through the public ``repro.obs`` surface:
   ``train/solve`` spans (`SpanRecorder(device_sync=True)`); their min
   wall time joins against the kernels' structural HBM-byte model
   (`kernel_bench.modeled_estep_hbm_bytes`) under the seed roofline
-  harness's hardware table (`benchmarks.roofline.HW`) via
+  hardware table (`repro.obs.roofline.HW`, re-exported by the
+  seed harness) via
   ``repro.obs.roofline_from_trace``. On this CPU container the kernels
   run in interpret mode, so the record carries ``proxy_regime: true``
   and the agreement flag is informational; on a TPU the same record is
@@ -46,7 +47,7 @@ import numpy as np
 
 from benchmarks.kernel_bench import (modeled_estep_csr_hbm_bytes,
                                      modeled_estep_hbm_bytes)
-from benchmarks.roofline import HW
+from repro.obs.roofline import HW
 from repro.data import PAPER_CORPORA, make_corpus
 from repro.lda import LDA
 from repro.obs import (SpanRecorder, Telemetry, chrome_trace_from_jsonl,

@@ -1,9 +1,18 @@
-"""Deliverable (g): roofline table from the dry-run sweep results.
+"""Roofline tables: the dry-run sweep AND the LDA measured-vs-modeled join.
 
-Reads results/dryrun.jsonl (produced by ``python -m repro.launch.dryrun
---all --mesh both --out results/dryrun.jsonl``) and renders the
-per-(arch × shape × mesh) roofline terms, dominant bottleneck, MODEL_FLOPS
-ratio, and memory fit — the §Roofline content of EXPERIMENTS.md.
+Two sections share ONE hardware table (``repro.obs.roofline.HW`` — this
+module re-exports it for the older callers):
+
+* the seed transformer dry-run renderer: reads results/dryrun.jsonl
+  (``python -m repro.launch.dryrun --all --mesh both --out
+  results/dryrun.jsonl``) and renders per-(arch × shape × mesh) roofline
+  terms, dominant bottleneck, MODEL_FLOPS ratio, and memory fit;
+* the LDA stack's roofline records: reads ``BENCH_obs.json`` (written by
+  ``python -m benchmarks.obs_bench --json BENCH_obs.json``) and renders
+  the measured-vs-modeled kernel verdicts of
+  ``repro.obs.roofline.roofline_from_trace`` — the join that flags a
+  kernel whose modeled HBM bytes say memory-bound but whose measured
+  time disagrees (`docs/observability.md`).
 """
 from __future__ import annotations
 
@@ -13,9 +22,10 @@ import os
 from typing import Dict, List, Optional
 
 from repro.configs import ARCHS, get_shape
+from repro.obs.roofline import HBM_GB, HW  # the canonical hardware table
 
-HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
-HBM_GB = 16.0   # v5e
+__all__ = ["HW", "HBM_GB", "load", "render", "rows", "render_lda",
+           "load_obs", "count_params", "active_params", "model_flops"]
 
 
 def count_params(cfg) -> float:
@@ -92,8 +102,44 @@ def render(path: str = "results/dryrun.jsonl",
     return lines
 
 
+def load_obs(path: str = "BENCH_obs.json") -> List[dict]:
+    """The LDA stack's roofline-check sections from ``BENCH_obs.json``:
+    ``[(section name, roofline_from_trace output)]`` flattened to dicts.
+    Empty when the bench has not run (the renderer prints a hint)."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rec = json.load(f)
+    out = []
+    for section in ("roofline", "roofline_csr"):
+        chk = rec.get(section)
+        if chk and chk.get("records"):
+            out.append({"section": section, **chk})
+    return out
+
+
+def render_lda(path: str = "BENCH_obs.json") -> List[str]:
+    """Markdown table of the LDA kernels' measured-vs-modeled verdicts
+    (`repro.obs.roofline.roofline_check` output semantics)."""
+    checks = load_obs(path)
+    if not checks:
+        return [f"(no LDA roofline records — run `python -m "
+                f"benchmarks.obs_bench --json {path}` first)"]
+    lines = ["| section | kernel | measured_s | modeled_s | ratio | "
+             "verdict | proxy |", "|" + "---|" * 7]
+    for chk in checks:
+        proxy = "interpret" if chk.get("proxy_regime") else "device"
+        for r in chk["records"]:
+            lines.append(
+                f"| {chk['section']} | {r['name']} | "
+                f"{r['measured_s']:.2e} | {r['modeled_s']:.2e} | "
+                f"{r['measured_vs_modeled']:.2f} | {r['verdict']} | "
+                f"{proxy} |")
+    return lines
+
+
 def rows():
-    """CSV rows for benchmarks/run.py."""
+    """CSV rows for benchmarks/run.py (dry-run sweep + LDA join)."""
     out = []
     for mesh in ("single", "multi"):
         data = [r for r in load() if r["mesh"] == mesh
@@ -111,6 +157,12 @@ def rows():
             out.append((f"roofline/{mesh}/{r['arch']}/{r['shape']}",
                         max(terms.values()) * 1e6,
                         f"bottleneck={dom} temp_gb={r['memory']['temp_gb']:.2f}"))
+    for chk in load_obs():
+        for r in chk["records"]:
+            out.append((f"roofline/lda/{chk['section']}/{r['name']}",
+                        r["measured_s"] * 1e6,
+                        f"ratio={r['measured_vs_modeled']:.2f} "
+                        f"verdict={r['verdict']}"))
     return out
 
 
@@ -119,3 +171,6 @@ if __name__ == "__main__":
         print(f"\n## Roofline — {mesh} pod\n")
         for line in render(mesh=mesh):
             print(line)
+    print("\n## Roofline — LDA kernels (measured vs modeled)\n")
+    for line in render_lda():
+        print(line)

@@ -1,17 +1,28 @@
-"""LDA serving launcher: batched topic-posterior requests, latency report.
+"""LDA serving launcher — a thin client of the ``repro.serve`` service.
 
-Serves ``LDA.transform``-style traffic through `repro.lda.infer`: each
-request is a batch of unseen documents; the server groups them into length
-buckets, pads to one fixed batch size (one compiled executable per bucket
-width — the jit cache is enumerable, see the report) and runs the E-step
-through the configured backend (``pallas`` = the fused fixed-point kernel,
-the production path).
+Drives the ``ServingService`` (`docs/serving.md`) with scheduled request
+traffic: admission control forms batches over the serving width ladder /
+CSR token budget, partial batches flush on timeout, every response
+records the model version that served it, and the latency report comes
+from the service's SLO accounting (``repro.serve.slo/v1``).
+
+Traffic shapes (``--traffic``): ``replay`` (the legacy fixed-replay mode
+as a schedule — ``--requests × --batch`` single-document requests, all at
+t=0, or spaced at ``--rate``), ``poisson`` and ``onoff`` (the synthetic
+open-stream generators, seeded). ``--online`` runs the background
+incremental learner on the served documents and publishes λ through the
+atomic snapshot swap.
+
+Legacy flags: ``--requests``/``--batch`` keep their old meaning as the
+replay volume (N requests of B docs ⇒ N·B single-doc requests);
+``--ragged`` and ``--no-double-buffer`` are DEPRECATED no-ops — the
+service always consumes ragged requests through the admission packer.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve_lda --corpus small \
       --requests 64 --batch 32 --backend gather
-  PYTHONPATH=src python -m repro.launch.serve_lda --ckpt ckpts/run1 \
-      --backend pallas
+  PYTHONPATH=src python -m repro.launch.serve_lda --corpus small \
+      --traffic poisson --rate 200 --requests 16 --online
   # Arxiv-scale serving dry-run (lowering + memory, no weights needed):
   PYTHONPATH=src python -m repro.launch.serve_lda --dryrun
 """
@@ -94,10 +105,32 @@ def main() -> None:
     ap.add_argument("--token-budget", type=int, default=None,
                     help="with --layout csr: flat slots per batch")
     ap.add_argument("--ragged", action="store_true",
-                    help="serve ragged requests through posterior_docs "
-                         "(no padded Corpus; double-buffered by default)")
+                    help="DEPRECATED no-op: the service always serves "
+                         "ragged requests through the admission packer")
     ap.add_argument("--no-double-buffer", action="store_true",
-                    help="with --ragged: the synchronous reference path")
+                    help="DEPRECATED no-op: batching/overlap policy now "
+                         "lives in the service loop")
+    ap.add_argument("--traffic", default="replay",
+                    choices=["replay", "poisson", "onoff"],
+                    help="arrival schedule: replay (--requests×--batch "
+                         "docs, burst or --rate-spaced), poisson, or "
+                         "bursty ON-OFF")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate, docs/s (replay: None = all at "
+                         "t=0; poisson/onoff default 200)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget; admission sheds "
+                         "requests that already blew it (default: none)")
+    ap.add_argument("--flush-timeout-ms", type=float, default=20.0,
+                    help="partial-batch flush timeout")
+    ap.add_argument("--slo-p95-ms", type=float, default=None,
+                    help="p95 latency SLO target for the report")
+    ap.add_argument("--online", action="store_true",
+                    help="train the background incremental learner on "
+                         "served documents and publish λ via atomic "
+                         "snapshot swaps")
+    ap.add_argument("--cadence-s", type=float, default=0.25,
+                    help="with --online: background update period")
     ap.add_argument("--warm-epochs", type=int, default=1,
                     help="quick-train epochs when no --ckpt is given")
     ap.add_argument("--seed", type=int, default=0)
@@ -152,51 +185,75 @@ def main() -> None:
         print(f"quick-trained ivi on {args.corpus}: "
               f"{args.warm_epochs} epoch(s), docs_seen={lda.docs_seen}")
 
+    if args.ragged or args.no_double_buffer:
+        print("note: --ragged/--no-double-buffer are deprecated no-ops — "
+              "the service always serves ragged requests through the "
+              "admission packer (docs/serving.md)")
+
+    from repro.data.stream import CorpusDocStream
+    from repro.serve import (OnlineLearner, ServiceConfig, ServingService,
+                             SnapshotStore, onoff_arrivals, poisson_arrivals,
+                             replay_arrivals, requests_from_docs)
+
     inf = lda.inferencer(backend=args.backend, batch_size=args.batch,
                          layout=args.layout, token_budget=args.token_budget,
                          telemetry=tel)
-    rng = np.random.default_rng(args.seed)
-
-    if args.ragged:
-        # ragged request traffic — no padded Corpus built per request; the
-        # double-buffered pipeline packs batch t+1 while batch t runs
-        from repro.data.stream import CorpusDocStream
-        ragged_docs = list(CorpusDocStream(test).iter_from(0))
-        serve = lambda docs: inf.posterior_docs(   # noqa: E731
-            docs, double_buffer=not args.no_double_buffer)
-        request = lambda rows: serve([ragged_docs[r] for r in rows])  # noqa: E731
-    else:
-        request = lambda rows: inf.posterior(      # noqa: E731
-            test.take(jnp.asarray(rows)))
+    ragged_docs = list(CorpusDocStream(test).iter_from(0))
 
     # warmup: serve the whole test corpus once — every bucket width
-    # compiles here, so the timed loop measures steady-state latency
+    # compiles here, so the service run measures steady-state latency
     if args.requests:
-        request(np.arange(test.num_docs))
+        inf.posterior_docs(ragged_docs)
 
-    # the timed loop only — warmup latencies (compiles) stay out of the
-    # histogram, preserving the old steady-state report semantics
+    n = args.requests * args.batch        # legacy volume: N requests × B
+    rng = np.random.default_rng(args.seed)
+    doc_order = [ragged_docs[i] for i in
+                 rng.choice(len(ragged_docs), size=max(n, 1))]
+    if args.traffic == "poisson":
+        arrivals = poisson_arrivals(n, args.rate or 200.0, seed=args.seed)
+    elif args.traffic == "onoff":
+        r = args.rate or 200.0
+        arrivals = onoff_arrivals(n, r, on_s=max(8.0 / r, 1e-3),
+                                  off_s=max(8.0 / r, 1e-3), seed=args.seed)
+    else:
+        arrivals = replay_arrivals(n, args.rate)
+    deadline = (args.deadline_ms / 1e3 if args.deadline_ms is not None
+                else float("inf"))
+    requests = requests_from_docs(doc_order, arrivals, deadline_s=deadline)
+
+    slo = {"p95": args.slo_p95_ms} if args.slo_p95_ms else None
+    svc = ServingService(inf, config=ServiceConfig(
+        flush_timeout_s=args.flush_timeout_ms / 1e3,
+        slo_ms=slo), telemetry=tel)
+    learner = None
+    if args.online:
+        store = SnapshotStore(inf, metrics=svc.metrics)
+        learner = OnlineLearner(lda.cfg, store, lam0=np.asarray(lda.lam),
+                                cadence_s=args.cadence_s, seed=args.seed)
+        svc.learner = learner
+        learner.start()
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        rows = rng.choice(test.num_docs, size=args.batch, replace=False)
-        t1 = time.perf_counter()
-        gamma = request(rows)
-        reg.observe("serve.request_ms", (time.perf_counter() - t1) * 1e3)
-        assert gamma.shape == (args.batch, lda.cfg.num_topics)
+    try:
+        svc.run(requests)
+    finally:
+        if learner is not None:
+            learner.stop()
+    if learner is not None:
+        learner.drain()
     wall = time.perf_counter() - t0
 
-    pct = reg.percentiles("serve.request_ms")   # NaNs on an empty run
-    lat = reg.histogram_values("serve.request_ms")
-    docs = args.requests * args.batch
-    mode = ("ragged" + ("" if args.no_double_buffer else "+double-buffer")
-            if args.ragged else "corpus")
-    mode = f"{inf.layout}/{mode}"
-    if lat:
-        print(f"served {args.requests} requests × {args.batch} docs "
-              f"backend={inf.cfg.estep_backend} [{mode}]: "
-              f"{docs / wall:.1f} docs/s")
+    rep = svc.slo_report()
+    pct = rep["latency_ms"]
+    mode = f"{inf.layout}/service/{args.traffic}"
+    if rep["served"]:
+        print(f"served {rep['served']}/{rep['offered']} docs "
+              f"({rep['shed']} shed) backend={inf.cfg.estep_backend} "
+              f"[{mode}]: {rep['throughput_docs_s']:.1f} docs/s "
+              f"(wall {wall:.2f}s)")
         print(f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
-              f"p99={pct['p99']:.1f} max={max(lat):.1f}")
+              f"p99={pct['p99']:.1f} max={pct['max']:.1f}")
+        print(f"model versions served: {rep['model_versions']}"
+              + (f" ({learner.updates} online updates)" if learner else ""))
         pad = inf.padding_stats()
         print(f"padding: frac={pad['pad_frac']:.3f} "
               f"wasted={pad['wasted_token_bytes'] / 1e3:.1f}kB staged "
@@ -204,25 +261,31 @@ def main() -> None:
               f"{pad['padded_slots']} slots dead)")
     else:
         print("served 0 requests — skipping the latency report")
+    for name, s in rep["slo"].items():
+        print(f"SLO {name}: target {s['target_ms']:.0f}ms observed "
+              f"{s['observed_ms']:.1f}ms -> "
+              f"{'ATTAINED' if s['attained'] else 'MISSED'}")
     cache = inf.cache_info()
     print(f"jit cache: {cache['jit_entries']} compiled widths "
           f"{cache['compiled_widths']} "
           f"(batches per width: {cache['batches_per_width']})")
     if args.trace:
-        n = tel.trace.dump_jsonl(args.trace)
-        print(f"trace: wrote {n} records to {args.trace}")
+        n_rec = tel.trace.dump_jsonl(args.trace)
+        print(f"trace: wrote {n_rec} records to {args.trace}")
     if args.metrics_json:
         reg.dump_json(args.metrics_json)
         print(f"metrics: wrote {args.metrics_json}")
     if args.out:
         rec = {"mode": "serve", "backend": inf.cfg.estep_backend,
-               "serve_mode": mode,
+               "serve_mode": mode, "traffic": args.traffic,
                "batch": args.batch, "requests": args.requests,
-               "docs_per_s": docs / wall if lat else 0.0,
+               "docs_per_s": rep["throughput_docs_s"],
                "latency_ms": pct,
+               "slo_report": rep,
                "jit_widths": cache["compiled_widths"],
                "batches_per_width": cache["batches_per_width"],
                "layout": inf.layout,
+               "online": bool(learner),
                "padding": inf.padding_stats(), "ok": True}
         with open(args.out, "a") as f:
             f.write(json.dumps(rec) + "\n")

@@ -234,6 +234,46 @@ class LDA:
             tr.run_step()
         return self
 
+    def warm_start(self, lam) -> "LDA":
+        """Seed an UNTRAINED bound trainer's topics from a pretrained λ.
+
+        The paper's Alg. 1 line 1 structure, with the pretrained model
+        playing the random initialisation's role: λ ← λ₀ with the carried
+        mass booked as ``init_mass = λ₀ − β₀`` at ``init_frac = 1`` and an
+        EMPTY accumulator (⟨m_vk⟩ = 0, t = 0). Each document's pro-rata
+        share of the carried mass retires on its first visit — exactly how
+        the random init retires — so after one full pass λ = β₀ + ⟨m_vk⟩
+        holds and the memoized bound is monotone from then on. (The
+        alternative — folding λ₀ − β₀ into ⟨m_vk⟩ — would break eq. 4's
+        coordinate-ascent argmax and with it the monotone bound.)
+
+        This is the online-learning handoff (`repro.serve.online`): a
+        frozen serving model warm-starts a learner over live traffic.
+        Bind a corpus first without training: ``lda.fit(stream, epochs=0)``.
+        """
+        tr = self._require_trainer()
+        eng = getattr(tr, "eng", None)
+        if tr.kind != "single" or eng is None:
+            raise ValueError("warm_start drives the single-host incremental "
+                             "engines; seed a distributed run by "
+                             "checkpointing instead")
+        if int(jax.device_get(tr.state.t)) != 0 or tr.docs_seen:
+            raise ValueError(
+                "warm_start needs an untrained estimator — this one has "
+                f"already run {tr.docs_seen} docs (t="
+                f"{int(jax.device_get(tr.state.t))}); its memo/accumulator "
+                "bookkeeping would no longer match the swapped λ")
+        import jax.numpy as jnp
+        lam0 = jnp.asarray(lam, jnp.float32)
+        if lam0.shape != tr.state.lam.shape:
+            raise ValueError(f"λ shape {tuple(lam0.shape)} != model "
+                             f"{tuple(tr.state.lam.shape)}")
+        eng.state = dataclasses.replace(
+            eng.state, lam=lam0, m_vk=jnp.zeros_like(lam0),
+            init_mass=lam0 - self.cfg.beta0,
+            init_frac=jnp.ones(()), t=jnp.zeros((), jnp.int32))
+        return self
+
     def resume(self, corpus, *,
                test_corpus: Optional[Corpus] = None, mesh=None,
                data_axes=None) -> "LDA":

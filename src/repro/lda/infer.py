@@ -23,7 +23,13 @@ scoring). This module packages that E-step for request traffic:
   ``benchmarks/serve_bench.py``);
 * the E-step dispatches through ``cfg.estep_backend`` — with ``pallas``
   this is the fused fixed-point kernel (`docs/estep.md`), the production
-  serving configuration.
+  serving configuration;
+* topics are held as an atomic **versioned model snapshot**: a single
+  ``(version, exp_elog_beta)`` tuple attribute. ``swap_model`` publishes
+  a new λ with one reference assignment, every dispatched batch reads the
+  tuple exactly once, so an online learner can republish topics under
+  live traffic with no torn reads — an in-flight batch completes entirely
+  on the snapshot it started with (`docs/serving.md`).
 
 ``TopicInferencer`` is the reusable handle (λ is preprocessed to
 exp(E[ln φ]) once); ``topic_posterior`` is the one-shot convenience the
@@ -71,6 +77,10 @@ def _posterior_batch_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
 # bucket width — padded — or device segments — csr —, live row count)
 _Staged = Tuple[np.ndarray, jax.Array, jax.Array, object, int]
 
+# one dispatched result: (request positions, device γ, live rows, the
+# model version whose snapshot solved the batch)
+_Result = Tuple[np.ndarray, jax.Array, int, int]
+
 
 class TopicInferencer:
     """Frozen-topics E-step server (see module docstring).
@@ -106,11 +116,64 @@ class TopicInferencer:
             token_budget = min(batch_size * 64, 8192)
         self.token_budget = token_budget if layout == "csr" else None
         self.tel = as_telemetry(telemetry)
-        self.exp_elog_beta = exp_dirichlet_expectation(jnp.asarray(lam),
-                                                       axis=0)
+        # the model snapshot is ONE tuple attribute: readers take a local
+        # reference once per batch, swap_model replaces the whole tuple in
+        # a single assignment — no lock on the read path, no torn
+        # (version, topics) pairs under concurrent republish
+        self._model: Tuple[int, jax.Array] = (
+            0, exp_dirichlet_expectation(jnp.asarray(lam), axis=0))
+        self._swap_lock = threading.Lock()
         self._compiled_widths: Dict[int, int] = {}    # width → batches run
         self._live_slots = 0          # staged token slots actually live
         self._padded_slots = 0        # staged token slots incl. padding
+
+    # -- model snapshot ---------------------------------------------------
+    @property
+    def exp_elog_beta(self) -> jax.Array:
+        """The current snapshot's exp(E[ln φ]) (V, K)."""
+        return self._model[1]
+
+    @property
+    def model_version(self) -> int:
+        """Monotone counter of published snapshots (0 = the constructor's)."""
+        return self._model[0]
+
+    def swap_model(self, lam: Optional[jax.Array] = None, *,
+                   exp_elog_beta: Optional[jax.Array] = None,
+                   version: Optional[int] = None) -> int:
+        """Atomically publish new topics; returns the new version.
+
+        Thread-safe against concurrent requests AND concurrent swappers:
+        the expensive exp(E[ln φ]) preprocessing runs outside the lock
+        (on the caller's thread — an online learner pays it, serving does
+        not), and the critical section is a single tuple assignment. A
+        batch dispatched before the swap completes on the OLD snapshot —
+        ``_dispatch`` reads the tuple exactly once — and its response
+        reports the old version; the next batch serves the new one.
+
+        Pass ``lam`` (a (V, K) topic-word parameter, preprocessed here) or
+        a precomputed ``exp_elog_beta`` directly. ``version`` overrides
+        the auto-incremented counter (it must advance monotonically).
+        """
+        if (lam is None) == (exp_elog_beta is None):
+            raise ValueError("pass exactly one of lam / exp_elog_beta")
+        eb = (exp_dirichlet_expectation(jnp.asarray(lam), axis=0)
+              if lam is not None else jnp.asarray(exp_elog_beta))
+        if eb.shape != self._model[1].shape:
+            raise ValueError(
+                f"snapshot shape {tuple(eb.shape)} != serving "
+                f"{tuple(self._model[1].shape)} — a swap cannot change "
+                "the (V, K) geometry")
+        with self._swap_lock:
+            cur = self._model[0]
+            v = cur + 1 if version is None else int(version)
+            if v <= cur:
+                raise ValueError(f"version must advance: {v} <= {cur}")
+            self._model = (v, eb)
+        if self.tel.enabled:
+            self.tel.metrics.inc("serve.model_swaps")
+            self.tel.metrics.set_gauge("serve.model_version", v)
+        return v
 
     # -- padded-corpus requests -----------------------------------------
     def posterior(self, corpus: Corpus) -> np.ndarray:
@@ -244,7 +307,7 @@ class TopicInferencer:
         against). Both paths run identical batches through the same jit
         entries, so their results are bit-identical.
         """
-        results: List[Tuple[np.ndarray, jax.Array, int]] = []
+        results: List[_Result] = []
         if double_buffer:
             q: "queue.Queue" = queue.Queue(maxsize=2)
             abort = threading.Event()
@@ -293,18 +356,22 @@ class TopicInferencer:
                 raise err[0]
         else:
             for staged in self._staged_batches(docs):
-                rows, gamma, n = self._dispatch(staged)
-                gamma.block_until_ready()     # the synchronous baseline
-                results.append((rows, gamma, n))
-        total = sum(n for _, _, n in results)
+                res = self._dispatch(staged)
+                res[1].block_until_ready()    # the synchronous baseline
+                results.append(res)
+        total = sum(n for _, _, n, _ in results)
         out = np.zeros((total, self.cfg.num_topics), np.float32)
-        for rows, gamma, n in results:
+        for rows, gamma, n, _ in results:
             out[rows] = np.asarray(gamma[:n])
         return out
 
-    def _dispatch(self, staged: _Staged) -> Tuple[np.ndarray, jax.Array, int]:
+    def _dispatch(self, staged: _Staged) -> _Result:
         tel = self.tel
         rows, ids, cnts, aux, n = staged
+        # ONE read of the snapshot tuple: the whole batch — and the version
+        # its response reports — belongs to a single published model even
+        # if swap_model lands mid-dispatch
+        version, eb = self._model
         # serve/solve is never device-synced: syncing here would serialise
         # the double-buffer overlap the pipeline exists for, so the span
         # measures dispatch (+ compile on a width's first batch)
@@ -312,18 +379,40 @@ class TopicInferencer:
             width = self.token_budget
             sp = tel.trace.begin("serve/solve", width=width, docs=n) \
                 if tel.enabled else None
-            gamma = _posterior_batch_csr(self.cfg, self.exp_elog_beta,
-                                         ids, cnts, aux,
+            gamma = _posterior_batch_csr(self.cfg, eb, ids, cnts, aux,
                                          num_docs=self.batch_size)
         else:
             width = aux
             sp = tel.trace.begin("serve/solve", width=width, docs=n) \
                 if tel.enabled else None
-            gamma = _posterior_batch(self.cfg, self.exp_elog_beta, ids, cnts)
+            gamma = _posterior_batch(self.cfg, eb, ids, cnts)
         if sp is not None:
             tel.trace.end(sp)
         self._note_width(width, n)
-        return rows, gamma, n
+        return rows, gamma, n, version
+
+    def posterior_packed(self, batch) -> _Result:
+        """γ for ONE pre-packed batch — the serving-service entry point.
+
+        ``batch``: a ``PackedBatch``/``CSRBatch`` from a ``BatchPacker``
+        configured like this inferencer (`repro.serve.admission` builds
+        one from ``packer_kwargs``). Returns ``(rows, gamma_device, n,
+        model_version)`` — γ stays on device (callers block when they
+        need honest latency), rows are the packer positions, and the
+        version identifies the snapshot that solved the batch. Packing
+        and staging are identical to ``posterior_docs``'s, so the served
+        γ is bit-equal to the offline path on the same document sequence.
+        """
+        return self._dispatch(self._stage(batch))
+
+    def packer_kwargs(self) -> Dict[str, object]:
+        """The ``BatchPacker`` construction kwargs matching this
+        inferencer's serving configuration — external batch formation
+        (the admission controller) must pack exactly like
+        ``_staged_batches`` to stay bit-equal with ``posterior_docs``."""
+        return dict(batch_size=self.batch_size,
+                    vocab_size=self.cfg.vocab_size, layout=self.layout,
+                    token_budget=self.token_budget)
 
     def transform_docs(self, docs, *, double_buffer: bool = True
                        ) -> np.ndarray:

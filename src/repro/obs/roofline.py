@@ -29,14 +29,23 @@ agrees with it — this module is the join:
   becomes the model-validation gate.
 
 ``benchmarks/obs_bench.py`` drives this against the E-step kernels'
-``modeled_estep_hbm_bytes`` and emits ``BENCH_obs.json``; the hardware
-constants come from ``benchmarks/roofline.py``'s ``HW`` table — the seed
-roofline harness this check finally wires into the LDA stack.
+``modeled_estep_hbm_bytes`` and emits ``BENCH_obs.json``. The hardware
+table lives HERE (``HW`` / ``HBM_GB`` — v5e figures): this module is the
+canonical home the seed roofline harness (``benchmarks/roofline.py``)
+now re-exports from, closing the "seed roofline.py is unused" loop — the
+seed harness renders the dry-run sweep AND these checks' BENCH_obs.json
+records through one table.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# v5e hardware constants — the ONE table every roofline consumer shares
+# (the seed dry-run renderer, obs_bench's measured-vs-modeled join, and
+# kernel_bench's modeled stream rates all import from here).
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+HBM_GB = 16.0   # v5e per-chip HBM
 
 
 def spans_by_name(records: Iterable[dict]) -> Dict[str, dict]:

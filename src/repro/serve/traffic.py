@@ -1,0 +1,91 @@
+"""Synthetic request-arrival processes — seeded, reproducible.
+
+The serving loop (`repro.serve.service`) consumes requests with
+*scheduled* arrival times; this module generates the schedules:
+
+* ``poisson_arrivals`` — the classic open-loop load model: exponential
+  inter-arrival gaps at a constant ``rate``;
+* ``onoff_arrivals`` — bursty traffic as an ON/OFF (interrupted Poisson)
+  process: arrivals stream at ``rate`` during ``on_s``-long bursts
+  separated by ``off_s``-long silences. Same mean in-burst rate, much
+  heavier tail behaviour at the batcher — the shape that stresses
+  timeout-based partial flushes;
+* ``replay_arrivals`` — the launcher's fixed-replay mode as a schedule:
+  ``n`` arrivals evenly spaced at ``rate`` (or all at t=0 — the
+  closed-loop burst the old ``serve_lda --requests`` behaviour maps to).
+
+All generators take an explicit ``seed`` and return absolute arrival
+times in seconds from the schedule origin, non-decreasing. Pair a
+schedule with documents via ``requests_from_docs``.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.admission import Request
+
+
+def poisson_arrivals(n: int, rate: float, *, seed: int = 0,
+                     t0: float = 0.0) -> np.ndarray:
+    """``n`` absolute arrival times of a Poisson process at ``rate``/s."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    rng = np.random.default_rng(seed)
+    return t0 + np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def onoff_arrivals(n: int, rate: float, *, on_s: float, off_s: float,
+                   seed: int = 0, t0: float = 0.0) -> np.ndarray:
+    """``n`` arrivals of an ON/OFF (interrupted Poisson) process.
+
+    Arrivals are generated as a rate-``rate`` Poisson process in *busy
+    time*, then mapped onto the wall clock by inserting an ``off_s``
+    silence after every ``on_s`` of busy time — bursts of in-rate
+    traffic separated by dead air, with the same seeded reproducibility
+    as ``poisson_arrivals``.
+    """
+    if on_s <= 0 or off_s < 0:
+        raise ValueError("need on_s > 0 and off_s >= 0")
+    busy = poisson_arrivals(n, rate, seed=seed)        # busy-time stamps
+    return t0 + busy + np.floor(busy / on_s) * off_s
+
+
+def replay_arrivals(n: int, rate: Optional[float] = None, *,
+                    t0: float = 0.0) -> np.ndarray:
+    """Fixed-replay schedule: ``n`` arrivals evenly spaced at ``rate``/s,
+    or ALL at ``t0`` when ``rate`` is None (the burst replay the legacy
+    ``serve_lda --requests N`` loop corresponds to)."""
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    if rate is None:
+        return np.full(n, t0)
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    return t0 + np.arange(n) / rate
+
+
+def requests_from_docs(docs: Sequence, arrivals: np.ndarray, *,
+                       deadline_s: float = math.inf,
+                       start_id: int = 0) -> List[Request]:
+    """Zip documents with an arrival schedule into ``Request`` objects.
+
+    ``docs``: ragged documents (anything ``as_ragged_doc`` accepts);
+    cycled if shorter than the schedule. ``deadline_s`` is a per-request
+    latency budget — each request's absolute deadline is its arrival plus
+    the budget (inf = never sheddable).
+    """
+    from repro.data.stream import as_ragged_doc
+    if len(docs) == 0 and len(arrivals):
+        raise ValueError("no documents to build requests from")
+    out = []
+    for i, t in enumerate(np.asarray(arrivals, np.float64)):
+        ids, cnts = as_ragged_doc(docs[i % len(docs)])
+        out.append(Request(rid=start_id + i, ids=ids, cnts=cnts,
+                           arrival_s=float(t),
+                           deadline_s=float(t) + deadline_s))
+    return out

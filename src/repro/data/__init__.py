@@ -2,9 +2,10 @@ from repro.data.synthetic import SyntheticSpec, make_corpus, PAPER_CORPORA
 from repro.data.bow import (LengthBuckets, bucket_corpus,
                             bucket_padding_stats, corpus_from_docs,
                             pad_corpus)
-from repro.data.stream import (TOKEN_SLOT_BYTES, WIDTH_BOUNDARIES,
-                               BatchPacker, CorpusDocStream, CSRBatch,
-                               DocStream, ListDocStream, PackedBatch,
+from repro.data.stream import (SHARD_PARTITIONERS, TOKEN_SLOT_BYTES,
+                               WIDTH_BOUNDARIES, BatchPacker, CorpusDocStream,
+                               CSRBatch, DocStream, ListDocStream, PackedBatch,
+                               ShardDocStream, ShardedDocStream,
                                as_doc_stream, as_ragged_doc, bucket_rows,
                                is_doc_stream, iter_padded_chunks, materialize,
                                width_ladder)

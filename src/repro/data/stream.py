@@ -317,6 +317,221 @@ def as_doc_stream(data, vocab_size: Optional[int] = None) -> DocStream:
 
 
 # ---------------------------------------------------------------------------
+# sharding: one stream, P worker views
+# ---------------------------------------------------------------------------
+
+_U64 = np.uint64
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer — the stable position hash behind
+    ``partitioner='hash'``. Pure integer mixing: no floats, no platform
+    dependence, so a shard assignment is reproducible anywhere."""
+    with np.errstate(over="ignore"):
+        x = (x + _U64(0x9E3779B97F4A7C15)) & _U64(0xFFFFFFFFFFFFFFFF)
+        x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+        return x ^ (x >> _U64(31))
+
+
+SHARD_PARTITIONERS = ("range", "hash")
+
+
+class ShardDocStream(DocStream):
+    """One worker's view of a partitioned base stream — itself a full
+    ``DocStream``: local cursors, its own ``BatchPacker`` (padded or csr via
+    ``make_packer``), resumable independently of every sibling shard.
+
+    ``iter_from(local_cursor)`` opens the base stream at the shard's
+    ``local_cursor``-th member position and walks forward, yielding only
+    member documents — ONE forward pass over the underlying file for both
+    partitioners (member positions are kept ascending), so a range shard
+    reads a contiguous slice and a hash shard reads-and-skips.
+    """
+
+    def __init__(self, base: DocStream, positions: np.ndarray,
+                 shard_index: int):
+        self.base = base
+        self.shard_index = int(shard_index)
+        self._positions = np.asarray(positions, np.int64)
+        self.vocab_size = base.vocab_size
+        self._words: Optional[float] = None
+
+    @property
+    def positions(self) -> np.ndarray:
+        """Global base-stream positions of this shard's documents
+        (ascending; local position i ↔ global ``positions[i]``)."""
+        return self._positions
+
+    @property
+    def num_docs(self) -> int:
+        return len(self._positions)
+
+    @property
+    def num_words(self) -> float:
+        if self._words is None:
+            self._words = sum(float(c.sum()) for _, c in self.iter_from(0))
+        return self._words
+
+    @property
+    def max_unique(self) -> int:
+        return self.base.max_unique
+
+    def iter_from(self, cursor: int = 0) -> Iterator[RaggedDoc]:
+        pos = self._positions
+        n = len(pos)
+        if cursor >= n:
+            return
+        k = cursor
+        g = int(pos[k])                       # global position of next yield
+        for doc in self.base.iter_from(g):
+            if g == pos[k]:
+                yield doc
+                k += 1
+                if k == n:
+                    return
+            g += 1
+
+    def make_packer(self, batch_size: int, *, layout: str = "padded",
+                    token_budget: Optional[int] = None, boundaries=None,
+                    metrics=None) -> "BatchPacker":
+        """A ``BatchPacker`` bound to this shard's geometry (ladder capped
+        at the base stream's ``max_unique``, vocab checked). ``boundaries``
+        defaults to the standard ladder; pass ``()`` for the single-rung
+        uniform-width packing the distributed round consumes."""
+        return BatchPacker(
+            batch_size, max_width=self.base.max_unique,
+            boundaries=WIDTH_BOUNDARIES if boundaries is None else boundaries,
+            vocab_size=self.vocab_size, layout=layout,
+            token_budget=token_budget, metrics=metrics)
+
+
+class ShardedDocStream:
+    """Partition any ``DocStream`` into ``num_shards`` per-worker views.
+
+    The distributed ingest primitive (`docs/divi.md` §streaming shards):
+    instead of materializing a corpus and slicing it, the document
+    *positions* of the base stream are dealt to shards once, host-side,
+    and each worker pulls ragged documents through its own
+    ``ShardDocStream`` + packer + cursor.
+
+    Partitioners (both: every document in exactly ONE shard, shard sizes
+    balanced to within one document, member positions ascending):
+
+    * ``"range"`` — contiguous position blocks (``np.array_split`` order).
+      Workers sharing one file read disjoint byte ranges; with one shard
+      the view IS the base stream in order — what keeps the P=1 engine
+      comparable to single-host S-IVI.
+    * ``"hash"``  — documents dealt round-robin by the rank of their
+      splitmix64-hashed position (seeded). Decorrelates shard content
+      from file order (e.g. docword files sorted by source or date), at
+      the cost of each worker scanning-and-skipping the full file.
+
+    The assignment is a pure function of ``(num_docs, num_shards,
+    partitioner, seed)`` — ``signature()`` captures exactly that tuple, and
+    a restored manifest refuses a mismatch rather than silently training
+    workers on the wrong documents.
+    """
+
+    def __init__(self, base: DocStream, num_shards: int, *,
+                 partitioner: str = "range", seed: int = 0):
+        if partitioner not in SHARD_PARTITIONERS:
+            raise ValueError(f"unknown partitioner {partitioner!r} "
+                             f"(have {SHARD_PARTITIONERS})")
+        d = int(base.num_docs)
+        if not 1 <= int(num_shards) <= d:
+            raise ValueError(
+                f"cannot deal {d} documents to {num_shards} shards — need "
+                f"1 <= num_shards <= num_docs (every worker must own at "
+                "least one document)")
+        self.base = base
+        self.num_shards = int(num_shards)
+        self.partitioner = partitioner
+        self.seed = int(seed)
+        if partitioner == "range":
+            parts = np.array_split(np.arange(d, dtype=np.int64),
+                                   self.num_shards)
+        else:
+            h = _splitmix64(np.arange(d, dtype=_U64)
+                            + _splitmix64(np.asarray(self.seed, _U64)))
+            order = np.argsort(h, kind="stable")     # rank by hash, stable
+            shard_of = np.empty(d, np.int64)
+            shard_of[order] = np.arange(d) % self.num_shards  # deal by rank
+            parts = [np.nonzero(shard_of == w)[0].astype(np.int64)
+                     for w in range(self.num_shards)]
+        self._positions: List[np.ndarray] = parts
+        self._shards: Dict[int, ShardDocStream] = {}
+
+    # -- views -----------------------------------------------------------
+    @property
+    def vocab_size(self) -> int:
+        return self.base.vocab_size
+
+    @property
+    def num_docs(self) -> int:
+        return self.base.num_docs
+
+    @property
+    def max_unique(self) -> int:
+        return self.base.max_unique
+
+    @property
+    def shard_sizes(self) -> List[int]:
+        return [len(p) for p in self._positions]
+
+    def positions(self, shard: int) -> np.ndarray:
+        """Global positions owned by ``shard`` (ascending)."""
+        return self._positions[shard]
+
+    def shard(self, shard: int) -> ShardDocStream:
+        if not 0 <= shard < self.num_shards:
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self.num_shards})")
+        if shard not in self._shards:
+            self._shards[shard] = ShardDocStream(
+                self.base, self._positions[shard], shard)
+        return self._shards[shard]
+
+    def shards(self) -> List[ShardDocStream]:
+        return [self.shard(w) for w in range(self.num_shards)]
+
+    # -- durable identity -------------------------------------------------
+    def signature(self) -> Dict[str, object]:
+        """The manifest-persisted identity of this shard assignment. Two
+        sharded streams with equal signatures deal every document to the
+        same shard at the same local position — the precondition for a
+        multi-worker resume to be bit-equal."""
+        return {"partitioner": self.partitioner,
+                "num_shards": self.num_shards,
+                "seed": self.seed,
+                "num_docs": int(self.base.num_docs)}
+
+    def check_signature(self, saved: Dict[str, object]) -> None:
+        """Refuse (ValueError) when ``saved`` (a manifest's ``sharding``
+        meta) does not describe THIS assignment — resuming across a
+        mismatch would hand workers the wrong documents with stale memo
+        rows, a silent wrong answer."""
+        live = self.signature()
+        if saved == live:
+            return
+        if int(saved.get("num_shards", -1)) != live["num_shards"]:
+            raise ValueError(
+                f"checkpoint was taken with {saved.get('num_shards')} "
+                f"worker shards but this run has {live['num_shards']} — "
+                "the per-worker cursors/memos only make sense under the "
+                "shard count that produced them; resume with "
+                f"num_workers={saved.get('num_shards')}")
+        diffs = {k: (saved.get(k), live[k]) for k in live
+                 if saved.get(k) != live[k]}
+        raise ValueError(
+            "checkpoint shard assignment does not match this stream's: "
+            + ", ".join(f"{k}: saved={s!r} != live={l!r}"
+                        for k, (s, l) in sorted(diffs.items()))
+            + " — a mismatched partition would hand workers the wrong "
+            "documents; rebuild the engine with the saved settings")
+
+
+# ---------------------------------------------------------------------------
 # the packer
 # ---------------------------------------------------------------------------
 

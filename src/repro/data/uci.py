@@ -57,17 +57,30 @@ class UCIDocStream(DocStream):
     bytes of an uncompressed file. (Gzip members still decompress their
     prefix on seek — that is a property of the format, not the parser.)
 
+    The stats scan persists its result to a sidecar ``<path>.idx.npz``
+    (atomic tmp+rename, best-effort — a read-only directory just skips the
+    cache). N workers sharing one docword file — the ``ShardedDocStream``
+    deployment — then pay the O(corpus) scan ONCE: every later stream over
+    the same file loads stats + index from the sidecar, which is
+    invalidated on any mtime/size mismatch with the docword file (and on a
+    differing ``max_docs`` / ``max_unique`` / ``index_every``, which change
+    what the scan would have produced). ``use_index_cache=False`` opts out.
+
     Quirks mirrored from the materialized loader for exact equivalence:
     docIDs absent from the file (empty documents) yield the placeholder
     ``([0], [1.0])`` that ``load_uci`` has always produced for them, and
     ``max_unique``/per-doc clipping keep the most frequent tokens.
     """
 
+    _IDX_VERSION = 1
+
     def __init__(self, docword_path: str, *, max_docs: Optional[int] = None,
-                 max_unique: Optional[int] = None, index_every: int = 1000):
+                 max_unique: Optional[int] = None, index_every: int = 1000,
+                 use_index_cache: bool = True):
         self.path = docword_path
         self.max_unique_cap = max_unique
         self.index_every = max(1, int(index_every))
+        self.use_index_cache = bool(use_index_cache)
         with _open(docword_path) as f:
             d = int(f.readline())
             w = int(f.readline())
@@ -184,6 +197,8 @@ class UCIDocStream(DocStream):
 
     def _scan_stats(self) -> Tuple[float, int]:
         if self._stats is None:
+            if self.use_index_cache and self._load_sidecar():
+                return self._stats
             words, maxu = 0.0, 1
             index: List[Tuple[int, int]] = []
 
@@ -196,7 +211,58 @@ class UCIDocStream(DocStream):
                 maxu = max(maxu, len(ids))
             self._stats = (words, maxu)
             self._index = index
+            if self.use_index_cache:
+                self._save_sidecar()
         return self._stats
+
+    # -- sidecar stats/index cache ---------------------------------------
+    @property
+    def index_path(self) -> str:
+        return self.path + ".idx.npz"
+
+    def _sidecar_key(self) -> np.ndarray:
+        """The validity key: docword identity (mtime ns + size) plus every
+        knob that changes what the scan produces."""
+        st = os.stat(self.path)
+        return np.asarray([self._IDX_VERSION, st.st_mtime_ns, st.st_size,
+                           self._num_docs,
+                           -1 if self.max_unique_cap is None
+                           else self.max_unique_cap,
+                           self.index_every], np.int64)
+
+    def _load_sidecar(self) -> bool:
+        """True iff a valid sidecar filled ``_stats``/``_index``. A stale
+        sidecar (docword rewritten, different knobs) is simply ignored —
+        the scan reruns and overwrites it."""
+        try:
+            with np.load(self.index_path) as z:
+                if not np.array_equal(z["key"], self._sidecar_key()):
+                    return False
+                self._stats = (float(z["words"]), int(z["max_unique"]))
+                self._index = [(int(d), int(o)) for d, o in z["index"]]
+            return True
+        except (OSError, KeyError, ValueError):
+            return False
+
+    def _save_sidecar(self) -> None:
+        """Best-effort atomic write (tmp + rename); failure to persist —
+        read-only dir, races with a sibling worker — never fails the scan
+        (the rename makes concurrent writers last-wins, both valid)."""
+        tmp = f"{self.index_path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:       # handle, not name: np.savez
+                np.savez(f, key=self._sidecar_key(),  # appends .npz to names
+                         words=np.asarray(self._stats[0]),
+                         max_unique=np.asarray(self._stats[1]),
+                         index=np.asarray(self._index or
+                                          np.empty((0, 2)), np.int64)
+                         .reshape(-1, 2))
+            os.replace(tmp, self.index_path)
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
 
 
 def load_vocab(vocab_path: Optional[str]) -> List[str]:

@@ -2,20 +2,24 @@
 
 Two bit-comparable execution paths for the same master/worker protocol:
 
-* ``repro.dist.protocol`` — round semantics + the single-device
-  vmap-over-workers simulation (delay/staleness experiments, tests);
+* ``repro.dist.protocol`` — round semantics, per-worker stream ingest
+  (``WorkerIngest``) + the single-device vmap-over-workers simulation
+  (delay/staleness experiments, tests);
 * ``repro.dist.divi`` — the shard_map production path on a
   ``("data", "model")`` device mesh;
-* ``repro.dist.engine`` — the host driver (sharding, sampling, timing).
+* ``repro.dist.engine`` — the host driver (stream sharding, round ingest,
+  drop sampling, timing).
 
-See ``docs/divi.md`` for the protocol write-up.
+Documents reach workers as shard views of one ``DocStream``
+(``repro.data.stream.ShardedDocStream``) — there is no materialize-then-
+slice step. See ``docs/divi.md`` for the protocol write-up.
 """
-from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
-                                 divi_round, master_update,
+from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerIngest,
+                                 WorkerShard, divi_round, master_update,
                                  worker_correction)
 from repro.dist.divi import make_divi_round
-from repro.dist.engine import DIVIEngine, shard_corpus
+from repro.dist.engine import DIVIEngine
 
-__all__ = ["DIVIConfig", "DIVIState", "WorkerShard", "DIVIEngine",
-           "divi_round", "make_divi_round", "master_update",
-           "worker_correction", "shard_corpus"]
+__all__ = ["DIVIConfig", "DIVIState", "WorkerIngest", "WorkerShard",
+           "DIVIEngine", "divi_round", "make_divi_round", "master_update",
+           "worker_correction"]

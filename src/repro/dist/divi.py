@@ -6,8 +6,12 @@ Sharding layout on a ``("data", "model")`` (optionally ``("pod", "data",
 * **master state** λ / ⟨m_vk⟩ / init_mass: model-sharded on V
   (``P("model", None)``) — the master is itself distributed over the model
   axis; scalars (init_frac, t) replicated;
-* **worker shards** (token_ids / counts / π-memo / visited) and the
-  per-round inputs (idx, delay): data-sharded on the leading worker axis;
+* **worker state** (the π-memo shards) and the per-round inputs (the
+  streamed token_ids/counts batches, idx, delay): data-sharded on the
+  leading worker axis. The corpus is NOT device state — each worker's
+  ``WorkerIngest`` streams one ``(S, B, L)`` slab of documents into the
+  round, so the argument footprint is per-round batches, not a resident
+  ``(W, D_w, L)`` corpus;
 * each sub-round reduces the (V, K) corrections with **one psum over the
   data axes** — the same single message the paper's workers send to the
   master — and the λ fetch is one all-gather of the model-sharded rows.
@@ -50,12 +54,13 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
                     data_axes) -> jax.stages.Wrapped:
     """Build the jitted shard_map round for ``mesh``.
 
-    Returns a callable/lowerable ``round(state, shard, idx, delay,
-    num_words_total) -> (state, shard)`` with
+    Returns a callable/lowerable ``round(state, shard, token_ids, counts,
+    idx, delay, num_words_total) -> (state, shard)`` with
 
       state: DIVIState — (V, K) leaves sharded ``P("model", None)``;
       shard: WorkerShard — leading worker axis sharded over ``data_axes``;
-      idx:   (W, S, B) int32, delay: (W, S) bool, same data sharding;
+      token_ids/counts: (W, S, B, L) streamed batches, idx: (W, S, B)
+      int32, delay: (W, S) bool — all data-sharded on the worker axis;
       num_words_total: () float32, replicated.
     """
     data_axes = tuple(data_axes)
@@ -74,15 +79,18 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
     state_specs = DIVIState(lam=mrow, m_vk=mrow, init_mass=mrow,
                             init_frac=P(), t=P())
     shard_specs = WorkerShard(
-        token_ids=P(data_axes, None, None),
-        counts=P(data_axes, None, None),
         memo=DenseMemoStore(pi=P(data_axes, None, None, None),
                             visited=P(data_axes, None)))
-    in_specs = (state_specs, shard_specs, P(data_axes, None, None),
-                P(data_axes, None), P())
+    in_specs = (state_specs, shard_specs,
+                P(data_axes, None, None, None),      # token_ids (W, S, B, L)
+                P(data_axes, None, None, None),      # counts    (W, S, B, L)
+                P(data_axes, None, None),            # idx       (W, S, B)
+                P(data_axes, None),                  # delay     (W, S)
+                P())
     out_specs = (state_specs, shard_specs)
 
-    def round_body(state, shard, idx, delay, num_words_total):
+    def round_body(state, shard, token_ids, counts, idx, delay,
+                   num_words_total):
         # "fetch λ from the master": all-gather the model-sharded rows, then
         # compute exp(E[ln φ]) exactly as the simulation does on the full λ.
         lam_full = (jax.lax.all_gather(state.lam, model, axis=0, tiled=True)
@@ -93,10 +101,10 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
 
         def substep(carry, xs):
             st, memo = carry
-            idx_s, delay_s = xs                      # (W_loc, B), (W_loc,)
-            corr_w, words_w, memo = jax.vmap(
+            ids_s, cnts_s, idx_s, delay_s = xs   # (W_loc, B, L) ×2, (W_loc,
+            corr_w, words_w, memo = jax.vmap(    # B), (W_loc,)
                 partial(worker_correction, cfg, eb))(
-                    shard.token_ids, shard.counts, memo, idx_s, delay_s)
+                    ids_s, cnts_s, memo, idx_s, delay_s)
             # "send the correction to the master": the round's one message.
             corr = corr_w.sum(0)
             words = words_w.sum()
@@ -110,9 +118,9 @@ def make_divi_round(cfg: LDAConfig, dcfg: DIVIConfig, mesh,
 
         (state, memo), _ = jax.lax.scan(
             substep, (state, shard.memo),
-            (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
-        return state, WorkerShard(token_ids=shard.token_ids,
-                                  counts=shard.counts, memo=memo)
+            (token_ids.swapaxes(0, 1), counts.swapaxes(0, 1),
+             idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
+        return state, WorkerShard(memo=memo)
 
     fn = shard_map(round_body, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)

@@ -1,16 +1,22 @@
-"""Host driver for D-IVI: corpus sharding, round sampling, path selection.
+"""Host driver for D-IVI: stream sharding, round ingest, path selection.
 
 The engine owns everything that is host-side in the paper's system — the
-assignment of documents to workers, the per-round mini-batch sampling and
-the Bernoulli sleep/drop coin flips — and hands the resulting index arrays
-to the jitted round. Both execution paths (single-device vmap simulation
-and mesh shard_map) therefore consume bit-identical inputs from the same
-seeded generator, which is what makes them comparable array-for-array.
+assignment of documents to workers (`data.stream.ShardedDocStream`: each
+worker owns a shard VIEW of the corpus ``DocStream``, never a resident
+corpus slice), the per-round batch pulling/packing through each worker's
+``WorkerIngest``, and the Bernoulli sleep/drop coin flips — and hands the
+resulting batch arrays to the jitted round. Both execution paths
+(single-device vmap simulation and mesh shard_map) therefore consume
+bit-identical inputs from the same seeded generator and the same shard
+cursors, which is what makes them comparable array-for-array. For the same
+reason a stream-fed engine is bit-equal to one fed the materialized corpus:
+packing is bit-transparent and the shard assignment is a pure function of
+``(num_docs, num_workers, partitioner, seed)``.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,75 +25,77 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.engines import init_engine_state
 from repro.core.memo import DenseMemoStore
-from repro.core.types import Corpus, LDAConfig
+from repro.core.types import LDAConfig
+from repro.data.stream import ShardedDocStream, as_doc_stream
 from repro.dist.divi import make_divi_round
-from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerShard,
-                                 divi_round)
+from repro.dist.protocol import (DIVIConfig, DIVIState, WorkerIngest,
+                                 WorkerShard, divi_round)
 from repro.obs import as_telemetry
-
-
-def shard_corpus(corpus: Corpus, num_workers: int,
-                 num_topics: int) -> Tuple[WorkerShard, int]:
-    """Split the corpus into ``num_workers`` contiguous document shards.
-
-    The trailing ``num_docs % num_workers`` documents are dropped (every
-    worker must hold the same shard shape for vmap/shard_map); with one
-    worker the shard is the corpus in its original order, which is what
-    makes the P=1 engine comparable to the single-host S-IVI step.
-    """
-    d = corpus.num_docs
-    dw = d // num_workers
-    if dw == 0:
-        raise ValueError(f"corpus of {d} docs cannot feed "
-                         f"{num_workers} workers")
-    n = num_workers * dw
-    ids = jnp.asarray(np.asarray(corpus.token_ids)[:n], jnp.int32)
-    cnts = jnp.asarray(np.asarray(corpus.counts)[:n], jnp.float32)
-    l = corpus.max_unique
-    shard = WorkerShard(
-        token_ids=ids.reshape(num_workers, dw, l),
-        counts=cnts.reshape(num_workers, dw, l),
-        # per-worker MemoStore shards: the dense device store with a
-        # leading worker axis (vmap/shard_map peel it off)
-        memo=DenseMemoStore(
-            pi=jnp.zeros((num_workers, dw, l, num_topics), jnp.float32),
-            visited=jnp.zeros((num_workers, dw), bool)),
-    )
-    return shard, dw
 
 
 class DIVIEngine:
     """Paper §4 driver: P workers, staleness S, Bernoulli round-dropping.
+
+    ``data`` is anything ``as_doc_stream`` accepts — a padded ``Corpus``,
+    any ``DocStream`` (lazy UCI files included: beyond-host-RAM corpora
+    stream straight into the distributed path), or a pre-built
+    ``ShardedDocStream`` whose shard count must equal ``num_workers``.
 
     ``mesh=None`` runs the single-device vmap simulation; passing a mesh
     with a data axis (and optionally a ``"model"`` axis sharding V) runs the
     shard_map production path — same protocol, same numbers.
     """
 
-    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
+    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, data, *,
                  seed: int = 0, mesh=None,
                  data_axes: Optional[Tuple[str, ...]] = None,
                  telemetry=None):
         self.cfg, self.dcfg = cfg, dcfg
         self.tel = as_telemetry(telemetry)
         self.rng = np.random.default_rng(seed)
-        self.shard, self.docs_per_worker = shard_corpus(
-            corpus, dcfg.num_workers, cfg.num_topics)
-        if dcfg.batch_size > self.docs_per_worker:
-            # sampling with replacement would put a document into a batch
-            # twice, double-applying its memo delta — refuse instead
+        if isinstance(data, ShardedDocStream):
+            if data.num_shards != dcfg.num_workers:
+                raise ValueError(
+                    f"ShardedDocStream deals {data.num_shards} shards but "
+                    f"DIVIConfig asks for {dcfg.num_workers} workers — the "
+                    "assignment must be one shard per worker")
+            self.sharded = data
+        else:
+            self.sharded = ShardedDocStream(
+                as_doc_stream(data), dcfg.num_workers,
+                partitioner=dcfg.partitioner, seed=dcfg.partition_seed)
+        metrics = self.tel.metrics if self.tel.enabled else None
+        self.ingest: List[WorkerIngest] = [
+            WorkerIngest(self.sharded.shard(w), dcfg.batch_size,
+                         metrics=metrics)
+            for w in range(dcfg.num_workers)]
+        sizes = self.sharded.shard_sizes
+        if dcfg.batch_size > min(sizes):
+            # a batch wider than its shard would wrap the cyclic shard
+            # stream onto itself and put a document into the batch twice,
+            # double-applying its memo delta — refuse instead
             raise ValueError(
-                f"batch_size={dcfg.batch_size} exceeds the "
-                f"{self.docs_per_worker} documents each of the "
-                f"{dcfg.num_workers} workers holds; shrink the batch or the "
-                f"worker count")
+                f"batch_size={dcfg.batch_size} exceeds the {min(sizes)} "
+                f"documents the smallest of the {dcfg.num_workers} worker "
+                "shards holds; shrink the batch or the worker count")
+        self.max_unique = int(self.sharded.max_unique)
+        # memo rows = the LARGEST shard (shards differ by at most one doc;
+        # smaller shards never touch their trailing row) — no document is
+        # dropped to equalize worker shapes
+        self.docs_per_worker = max(sizes)
         # identical λ₀ to the single-host engines at the same seed —
         # DIVIState IS the canonical GlobalState, one constructor for both
         self.state = init_engine_state(cfg, jax.random.key(seed))
-        # retire init mass against the sharded corpus' word total so the
-        # retirement completes exactly after every shard is visited
-        self.num_words_total = jnp.asarray(
-            float(np.asarray(self.shard.counts).sum()), jnp.float32)
+        self.shard = WorkerShard(memo=DenseMemoStore(
+            pi=jnp.zeros((dcfg.num_workers, self.docs_per_worker,
+                          self.max_unique, cfg.num_topics), jnp.float32),
+            visited=jnp.zeros((dcfg.num_workers, self.docs_per_worker),
+                              bool)))
+        # retire init mass against the FULL stream's word total — every
+        # document lands in exactly one shard, so retirement completes
+        # exactly when every shard is covered
+        self.num_words_total = jnp.asarray(float(self.sharded.base.num_words),
+                                           jnp.float32)
         self.mesh = mesh
         if mesh is None:
             self._round = jax.jit(partial(divi_round, cfg, dcfg),
@@ -106,26 +114,35 @@ class DIVIEngine:
                 init_frac=jax.device_put(self.state.init_frac, rep),
                 t=jax.device_put(self.state.t, rep))
             dsh = lambda *rest: NamedSharding(mesh, P(tuple(data_axes), *rest))
-            self.shard = WorkerShard(
-                token_ids=jax.device_put(self.shard.token_ids,
-                                         dsh(None, None)),
-                counts=jax.device_put(self.shard.counts, dsh(None, None)),
-                memo=DenseMemoStore(
-                    pi=jax.device_put(self.shard.pi, dsh(None, None, None)),
-                    visited=jax.device_put(self.shard.visited, dsh(None))))
+            self.shard = WorkerShard(memo=DenseMemoStore(
+                pi=jax.device_put(self.shard.pi, dsh(None, None, None)),
+                visited=jax.device_put(self.shard.visited, dsh(None))))
         self.docs_seen = 0
 
     # -- rounds ------------------------------------------------------------
-    def _sample_round(self) -> Tuple[np.ndarray, np.ndarray]:
+    def _ingest_round(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+        """Flip the drop coins, then pull one packed batch per LIVE
+        (worker, sub-round) slot from the worker's shard stream —
+        sub-round-major, so worker w's batches arrive in its own stream
+        order. Dropped slots stay zero-filled (an exact no-op in the
+        round: zero counts contribute zero to every reduction and the
+        masked memo write-back restores the gathered rows)."""
         w, s, b = (self.dcfg.num_workers, self.dcfg.staleness,
                    self.dcfg.batch_size)
-        dw = self.docs_per_worker
-        idx = np.empty((w, s, b), np.int64)
-        for i in range(w):
-            for j in range(s):
-                idx[i, j] = self.rng.choice(dw, size=b, replace=False)
+        l = self.max_unique
         delay = self.rng.random((w, s)) < self.dcfg.delay_prob
-        return idx, delay
+        ids = np.zeros((w, s, b, l), np.int32)
+        cnts = np.zeros((w, s, b, l), np.float32)
+        idx = np.zeros((w, s, b), np.int64)
+        for j in range(s):
+            for i in range(w):
+                if delay[i, j]:
+                    continue      # a sleeping worker pulls nothing
+                batch = self.ingest[i].next_batch()
+                ids[i, j], cnts[i, j] = batch.token_ids, batch.counts
+                idx[i, j] = batch.rows
+        return ids, cnts, idx, delay
 
     def run_round(self) -> None:
         """One global round: S sub-rounds of P concurrent worker batches."""
@@ -133,10 +150,11 @@ class DIVIEngine:
         sp = tel.trace.begin("divi/round", workers=self.dcfg.num_workers,
                              staleness=self.dcfg.staleness) \
             if tel.enabled else None
-        idx, delay = self._sample_round()
+        ids, cnts, idx, delay = self._ingest_round()
         self.state, self.shard = self._round(
-            self.state, self.shard, jnp.asarray(idx, jnp.int32),
-            jnp.asarray(delay), self.num_words_total)
+            self.state, self.shard, jnp.asarray(ids), jnp.asarray(cnts),
+            jnp.asarray(idx, jnp.int32), jnp.asarray(delay),
+            self.num_words_total)
         docs = int(self.dcfg.batch_size * (~delay).sum())
         self.docs_seen += docs
         if sp is not None:

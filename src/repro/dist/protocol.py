@@ -16,11 +16,18 @@ fold them in *in any order and at any lag* and ⟨m_vk⟩ stays a faithful
 protocol correct where gradient-based schemes need care. The master folds
 each reduced correction into the S-IVI Robbins–Monro update (eq. 5).
 
-Workers go through the same two interfaces as the single-host engines:
-the E-step via ``repro.core.estep`` backends (`memo_correction`) and the
-π-memo via a ``MemoStore`` shard — each worker owns a ``DenseMemoStore``
-whose pure ``gather``/``updated`` trace under vmap (simulation) and
-shard_map (production) alike.
+Worker state splits host/device along the streaming-ingest line:
+
+* ``WorkerIngest`` (host) — one worker's shard view of the corpus
+  ``DocStream`` (`data.stream.ShardedDocStream`), its single-rung
+  ``BatchPacker`` and its pass cursor. Documents are pulled and packed
+  per sub-round; no worker ever holds its corpus slice as a resident
+  array. Cursor + open packer docs are the checkpointable ingest state.
+* ``WorkerShard`` (device) — the per-worker π-memo shards only: a
+  ``DenseMemoStore`` with a leading (W,) worker axis whose pure
+  ``gather``/``updated`` trace under vmap (simulation) and shard_map
+  (production) alike. Memo rows are shard-local document positions — the
+  same positions the ingest stamps on packed batches.
 
 Round structure used here (identical in the vmap simulation and the
 shard_map production path, see ``repro.dist.divi``):
@@ -32,11 +39,13 @@ shard_map production path, see ``repro.dist.divi``):
   the paper's sleep/μ staleness model;
 * each worker independently *drops* a sub-round with probability
   ``delay_prob`` (the paper's Fig. 5 sleep experiments): a dropped worker
-  contributes no correction and leaves its memo untouched;
+  pulls no documents, contributes no correction and leaves its memo
+  untouched (its batch slot is zero-filled — zero counts contribute exact
+  zeros to every reduction, and the masked memo write-back is a no-op);
 * a worker's own memo is never stale — workers own their documents, only
   the master parameters lag.
 
-Host-side sampling (mini-batch indices, drop coin-flips) lives in
+Host-side work (batch pulling/packing, drop coin-flips) lives in
 ``DIVIEngine`` and is passed in as arrays, so the two execution paths are
 driven by bit-identical inputs.
 """
@@ -44,26 +53,37 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engines import (memo_correction, retire_init_frac,
                                 sivi_global_update)
 from repro.core.math import exp_dirichlet_expectation
 from repro.core.memo import DenseMemoStore
 from repro.core.types import GlobalState, LDAConfig
+from repro.data.stream import BatchPacker, PackedBatch, ShardDocStream
 
 
 @dataclasses.dataclass(frozen=True)
 class DIVIConfig:
-    """Distribution hyper-parameters (hashable: usable as a jit static)."""
+    """Distribution hyper-parameters (hashable: usable as a jit static).
+
+    ``partitioner`` / ``partition_seed`` select how the corpus stream is
+    dealt to workers (`data.stream.ShardedDocStream`): ``"range"`` =
+    contiguous position blocks, ``"hash"`` = seeded round-robin by hashed
+    position. They matter only when the engine builds the sharding itself
+    (passing a pre-built ``ShardedDocStream`` overrides them).
+    """
 
     num_workers: int = 4
     batch_size: int = 64
     delay_prob: float = 0.0   # P(worker drops a sub-round) — Fig. 5
     staleness: int = 1        # sub-rounds per global round (parameter lag)
+    partitioner: str = "range"
+    partition_seed: int = 0
 
 
 # The master state IS the canonical engine state — one constructor set for
@@ -76,15 +96,17 @@ DIVIState = GlobalState
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class WorkerShard:
-    """Per-worker corpus shards and memo stores, leading axis = worker.
+    """Per-worker π-memo stores, leading axis = worker.
 
     ``memo`` is a ``DenseMemoStore`` whose leaves carry a leading (W,)
     worker axis — vmap/shard_map peel it off, so inside a worker the store
-    methods see the plain per-worker (D_w, L, K) layout.
+    methods see the plain per-worker (D_w, L, K) layout. Rows are
+    shard-LOCAL document positions (``WorkerIngest`` batch rows); workers
+    whose shard is smaller than the common D_w simply never touch the
+    trailing rows. The corpus itself is not device state any more — it
+    streams through ``WorkerIngest`` one mini-batch at a time.
     """
 
-    token_ids: jax.Array        # (W, D_w, L) int32 padded unique-token ids
-    counts: jax.Array           # (W, D_w, L) float32 counts, 0 on padding
     memo: DenseMemoStore        # pi (W, D_w, L, K), visited (W, D_w)
 
     @property
@@ -96,6 +118,101 @@ class WorkerShard:
         return self.memo.visited
 
 
+class WorkerIngest:
+    """Host-side ingest state of ONE worker: shard stream + packer + cursor.
+
+    The packer is single-rung (``boundaries=()`` → one width = the memo's
+    L): every emitted batch is a full ``(batch_size, L)`` ``PackedBatch``,
+    which is what lets the W workers' batches stack into the uniform
+    ``(W, S, B, L)`` arrays the vmap/shard_map round consumes. Emission is
+    therefore exactly one batch per ``batch_size`` documents pulled, in
+    shard-stream order; at shard exhaustion the cursor wraps (``passes``
+    increments) and the packer keeps filling across the boundary — a batch
+    never contains the same document twice as long as
+    ``batch_size <= shard.num_docs`` (the engine enforces this).
+
+    ``capture()``/``restore()`` persist the cursor, the pass counter and
+    the open (not-yet-emitted) packer documents — the full mid-pass ingest
+    state, mirroring the single-host stream checkpoint contract.
+    """
+
+    def __init__(self, stream: ShardDocStream, batch_size: int, *,
+                 metrics=None):
+        self.stream = stream
+        self.batch_size = int(batch_size)
+        self.width = int(stream.max_unique)
+        self.cursor = 0             # documents pulled in the current pass
+        self.passes = 0
+        self.docs_pulled = 0        # lifetime counters (telemetry/bench)
+        self.tokens_pulled = 0.0
+        self._metrics = metrics
+        self._packer = self._make_packer()
+        self._iter = None
+
+    def _make_packer(self) -> BatchPacker:
+        return self.stream.make_packer(self.batch_size, boundaries=(),
+                                       metrics=self._metrics)
+
+    # -- pulling ---------------------------------------------------------
+    def pull_doc(self) -> Optional[PackedBatch]:
+        """Pull ONE document from the shard into the packer; returns the
+        emitted batch when this document completes one, else None."""
+        if self._iter is None:
+            self._iter = self.stream.iter_from(self.cursor)
+        try:
+            ids, cnts = next(self._iter)
+        except StopIteration:
+            # pass boundary: the distributed round samples forever, so the
+            # shard cycles — next pass revisits from local position 0
+            self.cursor = 0
+            self.passes += 1
+            self._iter = self.stream.iter_from(0)
+            ids, cnts = next(self._iter)
+        pos = self.cursor
+        self.cursor += 1
+        self.docs_pulled += 1
+        self.tokens_pulled += float(np.sum(cnts))
+        return self._packer.add(pos, ids, cnts)
+
+    def next_batch(self) -> PackedBatch:
+        """Pull documents until one ``(batch_size, L)`` batch emits."""
+        while True:
+            batch = self.pull_doc()
+            if batch is not None:
+                return batch
+
+    # -- checkpointing ---------------------------------------------------
+    def capture(self) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """(json-able meta, ragged pending arrays) — everything needed to
+        reconstruct this exact ingest state."""
+        pend = self._packer.pending_docs()
+        meta: Dict[str, Any] = {
+            "cursor": int(self.cursor),
+            "passes": int(self.passes),
+            "docs_pulled": int(self.docs_pulled),
+            "tokens_pulled": float(self.tokens_pulled),
+            "pending_pos": [int(p) for p, _, _ in pend],
+        }
+        arrays: Dict[str, np.ndarray] = {}
+        for i, (_pos, ids, cnts) in enumerate(pend):
+            arrays[f"pend_{i:05d}_ids"] = np.asarray(ids, np.int32)
+            arrays[f"pend_{i:05d}_cnts"] = np.asarray(cnts, np.float32)
+        return meta, arrays
+
+    def restore(self, meta: Dict[str, Any],
+                arrays: Dict[str, np.ndarray]) -> None:
+        packer = self._make_packer()
+        packer.load_pending([
+            (pos, arrays[f"pend_{i:05d}_ids"], arrays[f"pend_{i:05d}_cnts"])
+            for i, pos in enumerate(meta["pending_pos"])])
+        self._packer = packer
+        self.cursor = int(meta["cursor"])
+        self.passes = int(meta["passes"])
+        self.docs_pulled = int(meta["docs_pulled"])
+        self.tokens_pulled = float(meta["tokens_pulled"])
+        self._iter = None            # re-seated lazily at the cursor
+
+
 def worker_correction(cfg: LDAConfig, eb: jax.Array, token_ids: jax.Array,
                       counts: jax.Array, memo: DenseMemoStore,
                       idx: jax.Array, delayed: jax.Array):
@@ -103,18 +220,21 @@ def worker_correction(cfg: LDAConfig, eb: jax.Array, token_ids: jax.Array,
 
     Args:
       eb: (V, K) exp(E[ln φ]) computed from the *round-start* λ.
-      token_ids/counts/memo: this worker's full shard (no W axis).
-      idx: (B,) local document indices into the shard — duplicate-free
-        (a document appearing twice would double-apply its memo delta;
-        ``DIVIEngine`` enforces batch_size ≤ docs-per-worker for this).
+      token_ids/counts: (B, L) the worker's packed mini-batch (streamed in
+        by ``WorkerIngest`` — the corpus is not device state).
+      memo: this worker's memo shard (no W axis).
+      idx: (B,) shard-local document positions of the batch rows —
+        duplicate-free (a document appearing twice would double-apply its
+        memo delta; ``DIVIEngine`` enforces batch_size <= shard size, which
+        bounds any batch to one wrap of the cyclic shard stream).
       delayed: () bool — this worker dropped the sub-round: it contributes
-        nothing and its memo stays untouched (paper's sleep model).
+        nothing and its memo stays untouched (paper's sleep model; the
+        zero-filled placeholder batch makes the masked write-back exact).
 
     Returns (correction (V, K), first-visit word count, new memo store).
     """
-    ids, cnts = token_ids[idx], counts[idx]
     old_pi, visited_rows = memo.gather(idx)
-    corr, words, res = memo_correction(cfg, eb, ids, cnts, old_pi,
+    corr, words, res = memo_correction(cfg, eb, token_ids, counts, old_pi,
                                        visited_rows)
 
     live = ~delayed
@@ -141,12 +261,15 @@ def master_update(cfg: LDAConfig, state: DIVIState, corr: jax.Array,
 
 
 def divi_round(cfg: LDAConfig, dcfg: DIVIConfig, state: DIVIState,
-               shard: WorkerShard, idx: jax.Array, delay: jax.Array,
+               shard: WorkerShard, token_ids: jax.Array, counts: jax.Array,
+               idx: jax.Array, delay: jax.Array,
                num_words_total: jax.Array) -> Tuple[DIVIState, WorkerShard]:
     """One D-IVI global round — single-device vmap-over-workers simulation.
 
     Args:
-      idx: (W, S, B) int32 per-worker local document indices.
+      token_ids/counts: (W, S, B, L) the round's streamed worker batches
+        (zero-filled in dropped (w, s) slots).
+      idx: (W, S, B) int32 shard-local document positions per batch row.
       delay: (W, S) bool dropped-sub-round flags.
 
     All workers' E-steps use the round-start λ (``eb`` below); the master
@@ -157,16 +280,16 @@ def divi_round(cfg: LDAConfig, dcfg: DIVIConfig, state: DIVIState,
 
     def substep(carry, xs):
         st, memo = carry
-        idx_s, delay_s = xs                                  # (W, B), (W,)
+        ids_s, cnts_s, idx_s, delay_s = xs       # (W, B, L) ×2, (W, B), (W,)
         corr_w, words_w, memo = jax.vmap(
             partial(worker_correction, cfg, eb))(
-                shard.token_ids, shard.counts, memo, idx_s, delay_s)
+                ids_s, cnts_s, memo, idx_s, delay_s)
         st = master_update(cfg, st, corr_w.sum(0), words_w.sum(),
                            num_words_total)
         return (st, memo), None
 
     (state, memo), _ = jax.lax.scan(
         substep, (state, shard.memo),
-        (idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
-    return state, WorkerShard(token_ids=shard.token_ids, counts=shard.counts,
-                              memo=memo)
+        (token_ids.swapaxes(0, 1), counts.swapaxes(0, 1),
+         idx.swapaxes(0, 1), delay.swapaxes(0, 1)))
+    return state, WorkerShard(memo=memo)

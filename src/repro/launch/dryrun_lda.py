@@ -7,9 +7,9 @@ Table 1 (V=141,927; K=100 padded to 128; 782k documents).
 Three modes:
 
 * ``divi`` — one D-IVI global round on the production mesh: λ / ⟨m_vk⟩
-  model-sharded on V (DESIGN.md §5); per-worker corpus shards and memo
-  stores data-sharded. Reports memory + roofline terms like the
-  transformer dry-run.
+  model-sharded on V (DESIGN.md §5); per-worker memo stores and the
+  streamed (W, S, B, L) batch slabs data-sharded — no corpus is device
+  state. Reports memory + roofline terms like the transformer dry-run.
 * ``ivi`` — the single-host IVI hot step (`engines.incremental_update`)
   lowered with the fused Pallas E-step backend, plus the MemoStore
   footprint math: the device program only ever sees one mini-batch of the
@@ -76,21 +76,23 @@ def lower_round(mesh, batch: int, staleness: int):
     )
     from repro.core.memo import DenseMemoStore
     shard = WorkerShard(
-        token_ids=sds((n_workers, docs_per_worker, L), jnp.int32,
-                      P(data_axes, None, None)),
-        counts=sds((n_workers, docs_per_worker, L), jnp.float32,
-                   P(data_axes, None, None)),
         memo=DenseMemoStore(
             pi=sds((n_workers, docs_per_worker, L, k), jnp.float32,
                    P(data_axes, None, None, None)),
             visited=sds((n_workers, docs_per_worker), jnp.bool_,
                         P(data_axes, None))),
     )
+    # per-round streamed batches — the argument footprint is (W, S, B, L)
+    # slabs pulled by each worker's ingest, not a resident corpus
+    ids = sds((n_workers, staleness, batch, L), jnp.int32,
+              P(data_axes, None, None, None))
+    cnts = sds((n_workers, staleness, batch, L), jnp.float32,
+               P(data_axes, None, None, None))
     idx = sds((n_workers, staleness, batch), jnp.int32,
               P(data_axes, None, None))
     delay = sds((n_workers, staleness), jnp.bool_, P(data_axes, None))
     nw = sds((), jnp.float32, P())
-    return rnd.lower(state, shard, idx, delay, nw), n_workers
+    return rnd.lower(state, shard, ids, cnts, idx, delay, nw), n_workers
 
 
 def run(mesh_kind: str, batch: int, staleness: int):

@@ -10,6 +10,8 @@ Two modes:
 Examples:
   PYTHONPATH=src python -m repro.launch.train lda --algo ivi --corpus small
   PYTHONPATH=src python -m repro.launch.train lda --algo divi --workers 4
+  PYTHONPATH=src python -m repro.launch.train lda --algo divi --workers 4 \
+      --stream                     # D-IVI straight off a UCI DocStream
   PYTHONPATH=src python -m repro.launch.train lm --arch yi-9b --reduced \
       --steps 200 --batch 8 --seq 128
 """
@@ -51,9 +53,12 @@ def main_lda(args) -> None:
         # With --docword an existing file is streamed; otherwise the
         # synthetic corpus is written out in UCI format once and then
         # streamed back, exercising the exact production ingest path.
-        if args.algo in ("mvi", "divi"):
-            raise SystemExit(f"--stream supports the single-host "
-                             f"mini-batch engines, not {args.algo}")
+        # Works single-host AND distributed (--algo divi shards the stream
+        # into per-worker views); only full-batch mvi needs a materialized
+        # corpus.
+        if args.algo == "mvi":
+            raise SystemExit("--stream needs a mini-batch engine; mvi is "
+                             "full-batch coordinate ascent")
         docword = args.docword
         if docword is None:
             import tempfile

@@ -129,8 +129,9 @@ class LDA:
     def _coerce_data(self, data):
         """Normalise fit/resume input: padded ``Corpus`` (materialized
         path), ``DocStream`` (ragged stream ingest — no (D, L) corpus ever
-        resident) or any plain iterable of documents (token arrays or
-        ``(ids, counts)`` pairs — wrapped as a host-resident stream)."""
+        resident), a pre-dealt ``ShardedDocStream`` (distributed path) or
+        any plain iterable of documents (token arrays or ``(ids, counts)``
+        pairs — wrapped as a host-resident stream)."""
         if data is None:
             return data
         if isinstance(data, Corpus):
@@ -140,7 +141,21 @@ class LDA:
                 from repro.data.stream import CorpusDocStream
                 return CorpusDocStream(data)
             return data
-        from repro.data.stream import ListDocStream, is_doc_stream
+        from repro.data.stream import (ListDocStream, ShardedDocStream,
+                                       is_doc_stream)
+        if isinstance(data, ShardedDocStream):
+            # already dealt into worker views — the distributed engine
+            # consumes it as-is (it is NOT itself a DocStream: no cursor)
+            if self.distributed is None:
+                raise ValueError(
+                    "a ShardedDocStream is the distributed ingest form; "
+                    "single-host training takes the base DocStream (pass "
+                    "sharded.base, or set distributed=DIVIConfig(...))")
+            if data.vocab_size > self.cfg.vocab_size:
+                raise ValueError(
+                    f"stream vocab_size {data.vocab_size} exceeds the "
+                    f"model's {self.cfg.vocab_size}")
+            return data
         if is_doc_stream(data):
             if data.vocab_size > self.cfg.vocab_size:
                 raise ValueError(

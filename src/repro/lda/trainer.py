@@ -335,19 +335,27 @@ class DIVITrainer(Trainer):
     """``DIVIEngine`` behind the Trainer contract.
 
     One pass == one global round (``staleness`` sub-rounds of P concurrent
-    worker batches). The durable state adds the per-worker memo shards to
-    the global (λ, ⟨m_vk⟩, …) leaves; on the mesh path ``restore`` re-places
-    every leaf with the sharding the live engine already carries.
+    worker batches). ``data`` is anything the engine accepts: a padded
+    ``Corpus``, any ``DocStream``, or a pre-built ``ShardedDocStream``.
+    The durable state adds the per-worker memo shards AND every worker's
+    stream-ingest cursor (position in its shard, pass count, packer's open
+    partial batch) to the global (λ, ⟨m_vk⟩, …) leaves, so a multi-worker
+    save mid-round resumes bit-equal; on the mesh path ``restore``
+    re-places every leaf with the sharding the live engine already carries.
+    ``restore`` refuses a checkpoint whose shard assignment (worker count,
+    partitioner, partition seed, corpus size) differs from the live
+    engine's — resuming P-worker state onto Q≠P workers would scatter
+    memos onto the wrong documents.
     """
 
     kind = "divi"
 
-    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, corpus: Corpus, *,
+    def __init__(self, cfg: LDAConfig, dcfg: DIVIConfig, data, *,
                  seed: int = 0, test_corpus: Optional[Corpus] = None,
                  mesh=None, data_axes=None, telemetry=None):
         self.cfg, self.dcfg = cfg, dcfg
         self.algo = "sivi"          # D-IVI is the eq. 5 protocol distributed
-        self.eng = DIVIEngine(cfg, dcfg, corpus, seed=seed, mesh=mesh,
+        self.eng = DIVIEngine(cfg, dcfg, data, seed=seed, mesh=mesh,
                               data_axes=data_axes, telemetry=telemetry)
         self.history = History()
         self._t0 = time.perf_counter()
@@ -394,19 +402,20 @@ class DIVITrainer(Trainer):
         """Memoized corpus ELBO over the sharded worker memos.
 
         An all-gather-free per-shard reduction: each worker's slice of the
-        (W, D_w, L, K) memo is viewed as its own ``DenseMemoStore`` and
-        contributes its documents' word/θ terms through the same
-        chunk-by-chunk read-through the single-host engines use
-        (`bound.elbo_memoized_docs`); the λ-Dirichlet topics term enters
-        once at the end. The full memo is never materialised in one piece
-        — peak extra memory is one worker shard. The bound covers the
-        sharded corpus, i.e. the ``num_docs % num_workers`` tail documents
-        ``shard_corpus`` drops are excluded, exactly as they are excluded
-        from training.
+        (W, D_w, L, K) memo is viewed as its own ``DenseMemoStore`` and its
+        documents are streamed back through the worker's shard view in
+        chunks (`data.stream.iter_padded_chunks` — the same read-through
+        the single-host stream bound uses), contributing their word/θ
+        terms; the λ-Dirichlet topics term enters once at the end. Neither
+        the memo nor the corpus is ever materialised in one piece — peak
+        extra resident state is one chunk of one shard. Every document
+        lands in exactly one shard, so the bound covers the FULL corpus
+        (no ``D % P`` tail is dropped anywhere).
         """
-        from repro.core.bound import _topics_term, elbo_memoized_docs
+        from repro.core.bound import _memoized_doc_terms, _topics_term
         from repro.core.math import dirichlet_expectation
         from repro.core.memo import DenseMemoStore
+        from repro.data.stream import iter_padded_chunks
 
         eng = self.eng
         lam = eng.state.lam
@@ -415,15 +424,27 @@ class DIVITrainer(Trainer):
         for w in range(self.dcfg.num_workers):
             store_w = DenseMemoStore(pi=eng.shard.pi[w],
                                      visited=eng.shard.visited[w])
-            corpus_w = Corpus(token_ids=eng.shard.token_ids[w],
-                              counts=eng.shard.counts[w])
-            total += float(elbo_memoized_docs(self.cfg, corpus_w, store_w,
-                                              elog_beta))
+            stream_w = eng.ingest[w].stream
+            for start, ids, cnts in iter_padded_chunks(stream_w, 512,
+                                                       eng.max_unique):
+                pi, _vis = store_w.gather(np.arange(start,
+                                                    start + ids.shape[0]))
+                cnts_j = jnp.asarray(cnts)
+                gamma = self.cfg.alpha0 + jnp.einsum("blk,bl->bk", pi, cnts_j)
+                total += float(_memoized_doc_terms(self.cfg, jnp.asarray(ids),
+                                                   cnts_j, gamma, pi,
+                                                   elog_beta))
         return total + float(_topics_term(self.cfg, lam))
 
     # -- durable state --------------------------------------------------
     def capture(self):
         eng = self.eng
+        ingest_meta, ingest_arrays = [], {}
+        for w, ing in enumerate(eng.ingest):
+            m, arrs = ing.capture()
+            ingest_meta.append(m)
+            for k, v in arrs.items():
+                ingest_arrays[f"w{w:03d}_{k}"] = v
         meta: Dict[str, Any] = {
             "kind": self.kind,
             "algo": "divi",
@@ -431,12 +452,17 @@ class DIVITrainer(Trainer):
             "rng": eng.rng.bit_generator.state,
             "history": dataclasses.asdict(self.history),
             "wall_elapsed": time.perf_counter() - self._t0,
+            # the shard assignment this state belongs to — restore refuses
+            # any mismatch (satellite: no silent re-deal of memos)
+            "sharding": eng.sharded.signature(),
+            "ingest": ingest_meta,
         }
         arrays = {
             "state": _capture_state(eng.state),
             "memo": {"pi": np.asarray(jax.device_get(eng.shard.memo.pi)),
                      "visited": np.asarray(jax.device_get(
                          eng.shard.memo.visited))},
+            "ingest": ingest_arrays,
         }
         return meta, arrays
 
@@ -445,6 +471,17 @@ class DIVITrainer(Trainer):
             raise ValueError(f"checkpoint algo {meta['algo']!r} is not a "
                              "D-IVI checkpoint")
         eng = self.eng
+        if "sharding" not in meta:
+            raise ValueError(
+                "D-IVI checkpoint predates streaming shards (no shard "
+                "assignment recorded) — it cannot be resumed by this "
+                "version; retrain or restore with the version that wrote it")
+        eng.sharded.check_signature(meta["sharding"])
+        for w, (ing, m) in enumerate(zip(eng.ingest, meta["ingest"])):
+            prefix = f"w{w:03d}_"
+            ing.restore(m, {k[len(prefix):]: v
+                            for k, v in arrays.get("ingest", {}).items()
+                            if k.startswith(prefix)})
         eng.state = _restore_state(arrays["state"], eng.state)
         memo = eng.shard.memo
         from repro.core.memo import DenseMemoStore
@@ -467,13 +504,13 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                  bucket_by_length: bool = False, layout: str = "padded",
                  token_budget: Optional[int] = None, mesh=None,
                  data_axes=None, telemetry=None) -> Trainer:
-    """Bind a corpus (or ``DocStream``) to the right Trainer."""
+    """Bind a corpus (or ``DocStream``) to the right Trainer.
+
+    Every data source works on every path: D-IVI shards a ``DocStream``
+    into per-worker views (a padded ``Corpus`` is wrapped on the way in),
+    so stream ingest is distributed-ready too.
+    """
     if distributed is not None:
-        if not isinstance(corpus, Corpus):
-            raise ValueError(
-                "D-IVI shards a materialized corpus across workers — "
-                "stream ingest is single-host only; use "
-                "repro.data.stream.materialize(stream) first")
         if layout != "padded":
             raise ValueError("distributed training packs padded worker "
                              "batches; layout='csr' is single-host only")

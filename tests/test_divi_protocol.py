@@ -1,6 +1,6 @@
 """D-IVI protocol-level guarantees, beyond the quality checks in
 test_divi.py: determinism, exact reduction to the single-host S-IVI step,
-delay/staleness bookkeeping invariants."""
+delay/staleness bookkeeping invariants, shard-stream ingest order."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +8,9 @@ import numpy as np
 from repro.core import LDAConfig
 from repro.core.engines import init_engine_state, sivi_step
 from repro.core.types import Memo
-from repro.data import PAPER_CORPORA, make_corpus
-from repro.dist import DIVIConfig, DIVIEngine, shard_corpus
+from repro.data import PAPER_CORPORA, ShardedDocStream, make_corpus
+from repro.data.stream import CorpusDocStream
+from repro.dist import DIVIConfig, DIVIEngine
 
 
 def _cfg(spec):
@@ -36,53 +37,53 @@ def test_divi_deterministic_across_runs(tiny_corpus):
 
 def test_divi_single_worker_round_equals_sivi_step(tiny_corpus):
     """One round with P=1, delay_prob=0, S=1 IS the single-host S-IVI step
-    on the same mini-batch (the protocol's base case)."""
+    on the same mini-batch (the protocol's base case). With one worker the
+    range partitioner owns the whole corpus in order, so the worker's
+    first streamed batch is exactly documents 0..B-1."""
     train, _, spec = tiny_corpus
     cfg = _cfg(spec)
     eng = DIVIEngine(cfg, DIVIConfig(num_workers=1, batch_size=16), train,
                      seed=0)
-    idx, delay = eng._sample_round()
-    assert not delay.any()
-    state, shard = eng._round(eng.state, eng.shard,
-                              jnp.asarray(idx, jnp.int32),
-                              jnp.asarray(delay), eng.num_words_total)
+    eng.run_round()
 
     ref = init_engine_state(cfg, jax.random.key(0))
     memo = Memo(pi=jnp.zeros((train.num_docs, train.max_unique,
                               cfg.num_topics), jnp.float32),
                 visited=jnp.zeros((train.num_docs,), bool))
-    rows = jnp.asarray(idx[0, 0])
+    rows = jnp.arange(16)
     nw = jnp.asarray(float(np.asarray(train.counts).sum()))
     ref, memo = sivi_step(cfg, ref, memo, train.token_ids[rows],
                           train.counts[rows], rows, nw)
-    np.testing.assert_allclose(np.asarray(state.lam), np.asarray(ref.lam),
-                               rtol=1e-6, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(state.m_vk), np.asarray(ref.m_vk),
-                               rtol=1e-6, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(shard.pi[0][rows]),
+    np.testing.assert_allclose(np.asarray(eng.state.lam),
+                               np.asarray(ref.lam), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eng.state.m_vk),
+                               np.asarray(ref.m_vk), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(eng.shard.pi[0][rows]),
                                np.asarray(memo.pi[rows]),
                                rtol=1e-6, atol=1e-6)
-    assert int(state.t) == int(ref.t) == 1
+    assert int(eng.state.t) == int(ref.t) == 1
 
 
 def test_divi_fully_delayed_round_is_identity(tiny_corpus):
     """If every worker drops every sub-round, λ moves only by the
-    Robbins–Monro decay toward β₀ + ⟨m_vk⟩ and the memo stays untouched."""
+    Robbins–Monro decay toward β₀ + ⟨m_vk⟩, the memo stays untouched —
+    and the workers' stream cursors do not advance (a sleeping worker
+    pulls nothing)."""
     train, _, spec = tiny_corpus
     cfg = _cfg(spec)
     eng = DIVIEngine(cfg, DIVIConfig(num_workers=2, batch_size=8,
-                                     staleness=2), train, seed=0)
-    idx, _ = eng._sample_round()
-    delay = np.ones((2, 2), bool)
+                                     staleness=2, delay_prob=1.0),
+                     train, seed=0)
     m_vk0 = np.asarray(eng.state.m_vk).copy()   # the round donates its args
-    state, shard = eng._round(eng.state, eng.shard,
-                              jnp.asarray(idx, jnp.int32),
-                              jnp.asarray(delay), eng.num_words_total)
+    eng.run_round()
     # no corrections folded in, no documents visited, no mass retired
-    np.testing.assert_array_equal(np.asarray(state.m_vk), m_vk0)
-    assert not bool(shard.visited.any())
-    assert float(state.init_frac) == 1.0
-    assert int(state.t) == 2  # the master clock still ticks per sub-round
+    np.testing.assert_array_equal(np.asarray(eng.state.m_vk), m_vk0)
+    assert not bool(eng.shard.visited.any())
+    assert float(eng.state.init_frac) == 1.0
+    assert int(eng.state.t) == 2  # the master clock still ticks per sub-round
+    assert all(ing.cursor == 0 and ing.docs_pulled == 0
+               for ing in eng.ingest)
+    assert eng.docs_seen == 0
 
 
 def test_divi_staleness_processes_s_batches_per_round(tiny_corpus):
@@ -93,16 +94,24 @@ def test_divi_staleness_processes_s_batches_per_round(tiny_corpus):
     eng.run_round()
     assert int(eng.state.t) == 3           # one master update per sub-round
     assert eng.docs_seen == 2 * 3 * 8      # P × S × B (no delays)
+    # each live worker pulled S batches from its own shard stream, in order
+    assert all(ing.docs_pulled == 3 * 8 for ing in eng.ingest)
 
 
-def test_shard_corpus_partitions_in_order(tiny_corpus):
+def test_range_partition_covers_corpus_in_order(tiny_corpus):
+    """The range partitioner deals contiguous position blocks: worker
+    shards concatenate back to 0..D-1, and the engine's memo rows line up
+    with shard-local document order."""
     train, _, spec = tiny_corpus
-    shard, dw = shard_corpus(train, 4, 8)
-    assert dw == train.num_docs // 4
-    np.testing.assert_array_equal(
-        np.asarray(shard.token_ids).reshape(4 * dw, -1),
-        np.asarray(train.token_ids)[: 4 * dw])
-    assert shard.pi.shape == (4, dw, train.max_unique, 8)
+    sharded = ShardedDocStream(CorpusDocStream(train), 4)
+    pos = np.concatenate([sharded.positions(w) for w in range(4)])
+    np.testing.assert_array_equal(pos, np.arange(train.num_docs))
+    assert sharded.shard_sizes == [24, 24, 24, 24]
+    # shard 1's first document is global document 24
+    ids, cnts = next(sharded.shard(1).iter_from(0))
+    row = np.asarray(train.token_ids)[24]
+    live = np.asarray(train.counts)[24] > 0
+    np.testing.assert_array_equal(ids, row[live])
 
 
 def test_divi_init_mass_fully_retired_after_cover(tiny_corpus):

@@ -156,32 +156,41 @@ def test_serve_lda_latency_report(tmp_path, monkeypatch, capsys):
 def divi_trainer():
     rng = np.random.default_rng(3)
     docs = [rng.integers(0, 120, size=rng.integers(5, 30))
-            for _ in range(41)]                 # 41 % 4 = 1 dropped tail doc
+            for _ in range(41)]                 # 41 % 4: ragged shard sizes
     corpus = corpus_from_docs(docs, 120)
     cfg = LDAConfig(num_topics=6, vocab_size=120, estep_max_iters=30)
     dcfg = DIVIConfig(num_workers=4, batch_size=5, staleness=2)
-    return DIVITrainer(cfg, dcfg, corpus, seed=0)
+    return DIVITrainer(cfg, dcfg, corpus, seed=0), corpus
 
 
 def test_divi_full_bound_matches_single_host_oracle(divi_trainer):
-    """Per-shard reduction == elbo_memoized_store on the flattened state."""
-    tr = divi_trainer
+    """Per-shard stream read-through == elbo_memoized_store on the
+    flattened state. The flat oracle permutes the corpus into shard order
+    (shard w's documents are the corpus rows at ``positions(w)``) and
+    stacks the live memo rows of each shard — the trailing phantom row of
+    the ``max(shard sizes)``-padded memo is excluded. ALL 41 documents are
+    covered: streaming shards drop no ``D % P`` tail."""
+    tr, corpus = divi_trainer
     for _ in range(3):
         tr.run_pass()
     got = tr.full_bound()
-    sh = tr.eng.shard
-    w, dw, l = sh.token_ids.shape
-    flat = Corpus(sh.token_ids.reshape(w * dw, l),
-                  sh.counts.reshape(w * dw, l))
-    store = DenseMemoStore(pi=sh.pi.reshape(w * dw, l, -1),
-                           visited=sh.visited.reshape(-1))
+    eng = tr.eng
+    sh = eng.shard
+    order = np.concatenate([eng.sharded.positions(w) for w in range(4)])
+    assert len(order) == 41
+    flat = Corpus(corpus.token_ids[order], corpus.counts[order])
+    sizes = eng.sharded.shard_sizes
+    store = DenseMemoStore(
+        pi=jnp.concatenate([sh.pi[w][:sizes[w]] for w in range(4)]),
+        visited=jnp.concatenate([sh.visited[w][:sizes[w]]
+                                 for w in range(4)]))
     want = float(elbo_memoized_store(tr.cfg, flat, store, tr.eng.state.lam))
     np.testing.assert_allclose(got, want, rtol=1e-5)
     assert np.isfinite(got)
 
 
 def test_divi_evaluate_reports_elbo_without_test_corpus(divi_trainer):
-    tr = divi_trainer
+    tr, _ = divi_trainer
     tr.run_pass()
     out = tr.evaluate()
     assert "elbo" in out and np.isfinite(out["elbo"])

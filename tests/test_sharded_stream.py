@@ -1,0 +1,280 @@
+"""Streaming shards: the distributed ingest primitive.
+
+Covers the ``ShardedDocStream`` partition contract (every document in
+exactly ONE shard, for both partitioners — hypothesis property), shard
+iteration vs the base stream, per-shard packing, the shard-assignment
+refusals (engine construction and checkpoint resume), the ``WorkerIngest``
+mid-batch capture→restore round-trip, trainer-level multi-worker mid-pass
+save→load→resume bit-equality, and the UCI sidecar stats/index cache.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.types import LDAConfig
+from repro.data import (SHARD_PARTITIONERS, ShardedDocStream, UCIDocStream,
+                        make_corpus, save_uci)
+from repro.data.stream import CorpusDocStream, ListDocStream
+from repro.dist import DIVIConfig, DIVIEngine, WorkerIngest
+from repro.lda.trainer import DIVITrainer
+
+
+def _docs(num_docs, rng):
+    return [rng.integers(0, 50, size=rng.integers(1, 12))
+            for _ in range(num_docs)]
+
+
+# ---------------------------------------------------------------------------
+# partition contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(num_docs=st.integers(min_value=1, max_value=173),
+       num_shards=st.integers(min_value=1, max_value=9),
+       partitioner=st.sampled_from(SHARD_PARTITIONERS),
+       seed=st.integers(min_value=0, max_value=5))
+def test_every_doc_lands_in_exactly_one_shard(num_docs, num_shards,
+                                              partitioner, seed):
+    from hypothesis import assume
+    assume(num_shards <= num_docs)
+    stream = ListDocStream(_docs(num_docs, np.random.default_rng(num_docs)),
+                           vocab_size=50)
+    sharded = ShardedDocStream(stream, num_shards, partitioner=partitioner,
+                               seed=seed)
+    all_pos = np.concatenate([sharded.positions(w)
+                              for w in range(num_shards)])
+    # exactly one shard each: the union is a permutation of 0..D-1
+    np.testing.assert_array_equal(np.sort(all_pos), np.arange(num_docs))
+    # balanced to within one document, positions ascending per shard
+    sizes = sharded.shard_sizes
+    assert max(sizes) - min(sizes) <= 1
+    for w in range(num_shards):
+        pos = sharded.positions(w)
+        assert (np.diff(pos) > 0).all()
+
+
+def test_shard_iteration_matches_base_documents():
+    rng = np.random.default_rng(1)
+    docs = _docs(37, rng)
+    stream = ListDocStream(docs, vocab_size=50)
+    for partitioner in SHARD_PARTITIONERS:
+        sharded = ShardedDocStream(stream, 3, partitioner=partitioner,
+                                   seed=2)
+        for w in range(3):
+            sh = sharded.shard(w)
+            got = list(sh.iter_from(0))
+            assert len(got) == sh.num_docs
+            for local, (ids, cnts) in enumerate(got):
+                g = int(sharded.positions(w)[local])
+                want_ids, want_cnts = np.unique(docs[g], return_counts=True)
+                np.testing.assert_array_equal(np.sort(ids), want_ids)
+                assert float(cnts.sum()) == len(docs[g])
+            # mid-shard reopen: iter_from(k) == the tail of iter_from(0)
+            tail = list(sh.iter_from(sh.num_docs // 2))
+            for (a, ca), (b, cb) in zip(tail, got[sh.num_docs // 2:]):
+                np.testing.assert_array_equal(a, b)
+                np.testing.assert_array_equal(ca, cb)
+
+
+def test_per_shard_csr_packing_covers_every_doc_once(tiny_corpus):
+    """Each shard view drives its own packer — csr layout included: one
+    pass through every shard emits every document of the corpus exactly
+    once (flush included), with shard-local row stamps."""
+    train, _, spec = tiny_corpus
+    sharded = ShardedDocStream(CorpusDocStream(train), 3,
+                               partitioner="hash", seed=4)
+    for w in range(3):
+        sh = sharded.shard(w)
+        packer = sh.make_packer(8, layout="csr",
+                                token_budget=8 * train.max_unique)
+        seen = []
+        for pos, (ids, cnts) in enumerate(sh.iter_from(0)):
+            b = packer.add(pos, ids, cnts)
+            if b is not None:
+                seen.extend(int(r) for r in b.rows[b.rows >= 0])
+        for b in packer.flush():
+            seen.extend(int(r) for r in b.rows[b.rows >= 0])
+        assert sorted(seen) == list(range(sh.num_docs))
+
+
+# ---------------------------------------------------------------------------
+# refusals: worker-count / assignment mismatches (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_sharded_stream_rejects_bad_shard_counts(tiny_corpus):
+    train, _, _ = tiny_corpus
+    stream = CorpusDocStream(train)
+    with pytest.raises(ValueError, match="1 <= num_shards"):
+        ShardedDocStream(stream, 0)
+    with pytest.raises(ValueError, match="1 <= num_shards"):
+        ShardedDocStream(stream, train.num_docs + 1)
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        ShardedDocStream(stream, 2, partitioner="modulo")
+
+
+def test_engine_rejects_shard_count_mismatch(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=20)
+    sharded = ShardedDocStream(CorpusDocStream(train), 3)
+    with pytest.raises(ValueError, match="3 shards .* 4 workers"):
+        DIVIEngine(cfg, DIVIConfig(num_workers=4, batch_size=8), sharded)
+
+
+def test_signature_refusals_name_the_mismatch(tiny_corpus):
+    train, _, _ = tiny_corpus
+    stream = CorpusDocStream(train)
+    live = ShardedDocStream(stream, 4, partitioner="hash", seed=1)
+    ok = live.signature()
+    live.check_signature(dict(ok))     # identical assignment: accepted
+    with pytest.raises(ValueError, match="num_workers=2"):
+        live.check_signature({**ok, "num_shards": 2})
+    with pytest.raises(ValueError, match="partitioner"):
+        live.check_signature({**ok, "partitioner": "range"})
+    with pytest.raises(ValueError, match="seed"):
+        live.check_signature({**ok, "seed": 9})
+    with pytest.raises(ValueError, match="num_docs"):
+        live.check_signature({**ok, "num_docs": 7})
+
+
+# ---------------------------------------------------------------------------
+# ingest checkpointing
+# ---------------------------------------------------------------------------
+
+def test_worker_ingest_mid_batch_capture_restore_bit_equal(tiny_corpus):
+    """Capture with a genuinely non-empty open packer (mid-batch), restore
+    into a fresh ingest, and the batch sequences stay bit-identical."""
+    train, _, _ = tiny_corpus
+    sharded = ShardedDocStream(CorpusDocStream(train), 2,
+                               partitioner="hash", seed=3)
+    a = WorkerIngest(sharded.shard(0), 8)
+    for _ in range(8 + 3):             # one emitted batch + 3 docs pending
+        a.pull_doc()
+    meta, arrays = a.capture()
+    assert len(meta["pending_pos"]) == 3
+    b = WorkerIngest(sharded.shard(0), 8)
+    b.restore(meta, arrays)
+    assert (b.cursor, b.passes, b.docs_pulled) == (11, 0, 11)
+    for _ in range(6):                 # crosses the next emission AND the
+        ba, bb = a.next_batch(), b.next_batch()     # 48-doc pass boundary
+        np.testing.assert_array_equal(ba.token_ids, bb.token_ids)
+        np.testing.assert_array_equal(ba.counts, bb.counts)
+        np.testing.assert_array_equal(ba.rows, bb.rows)
+    assert a.passes == b.passes == 1
+
+
+@pytest.mark.parametrize("partitioner", SHARD_PARTITIONERS)
+def test_divi_trainer_mid_pass_save_resume_bit_equal(partitioner,
+                                                     tiny_corpus):
+    """Multi-worker save→load→resume == uninterrupted run, bit for bit,
+    with worker cursors genuinely mid-pass at the save point (48-doc
+    shards, batch 7 — pass length is not a batch multiple)."""
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=25)
+    dcfg = DIVIConfig(num_workers=2, batch_size=7, staleness=2,
+                      delay_prob=0.25, partitioner=partitioner,
+                      partition_seed=11)
+
+    a = DIVITrainer(cfg, dcfg, CorpusDocStream(train), seed=5)
+    for _ in range(3):
+        a.run_pass()
+    meta, arrays = a.capture()
+    assert any(0 < ing.cursor < ing.stream.num_docs
+               for ing in a.eng.ingest)                  # genuinely mid-pass
+
+    b = DIVITrainer(cfg, dcfg, CorpusDocStream(train), seed=5)
+    b.restore(meta, arrays)
+    for _ in range(3):
+        a.run_pass()
+        b.run_pass()
+    assert a.docs_seen == b.docs_seen
+    np.testing.assert_array_equal(np.asarray(a.state.lam),
+                                  np.asarray(b.state.lam))
+    np.testing.assert_array_equal(np.asarray(a.eng.shard.pi),
+                                  np.asarray(b.eng.shard.pi))
+
+
+def test_divi_restore_refuses_foreign_shard_assignment(tiny_corpus):
+    train, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=8, vocab_size=spec.vocab_size,
+                    estep_max_iters=20)
+    mk = lambda dcfg: DIVITrainer(cfg, dcfg, CorpusDocStream(train), seed=0)
+    src = mk(DIVIConfig(num_workers=2, batch_size=8))
+    src.run_pass()
+    meta, arrays = src.capture()
+    with pytest.raises(ValueError, match="num_workers=2"):
+        mk(DIVIConfig(num_workers=4, batch_size=8)).restore(meta, arrays)
+    with pytest.raises(ValueError, match="partitioner"):
+        mk(DIVIConfig(num_workers=2, batch_size=8,
+                      partitioner="hash")).restore(meta, arrays)
+    # a pre-streaming checkpoint (no shard assignment recorded) is refused
+    legacy = {k: v for k, v in meta.items() if k != "sharding"}
+    with pytest.raises(ValueError, match="predates streaming shards"):
+        mk(DIVIConfig(num_workers=2, batch_size=8)).restore(legacy, arrays)
+
+
+# ---------------------------------------------------------------------------
+# UCI sidecar stats/index cache (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _write_uci(tmp_path, seed=0):
+    from repro.data import PAPER_CORPORA
+    corpus = make_corpus(PAPER_CORPORA["tiny"], seed=seed)
+    path = str(tmp_path / "docword.txt")
+    save_uci(corpus, path)
+    return path
+
+
+def test_uci_sidecar_persists_and_serves_the_scan(tmp_path):
+    path = _write_uci(tmp_path)
+    s1 = UCIDocStream(path, index_every=10)
+    words, maxu = s1.num_words, s1.max_unique
+    assert os.path.exists(s1.index_path)
+
+    # a second stream over the same file answers from the sidecar — no
+    # rescan (the parser is disabled to prove it)
+    s2 = UCIDocStream(path, index_every=10)
+    s2._iter_docs = None               # any scan attempt would now blow up
+    assert (s2.num_words, s2.max_unique) == (words, maxu)
+    assert s2._index == s1._index and len(s2._index) > 1
+
+
+def test_uci_sidecar_invalidated_on_file_change(tmp_path):
+    path = _write_uci(tmp_path)
+    words = UCIDocStream(path, index_every=10).num_words
+    # rewrite the docword file (different corpus ⇒ different stats); bump
+    # mtime past filesystem timestamp granularity
+    _write_uci(tmp_path, seed=9)
+    st = os.stat(path)
+    os.utime(path, ns=(st.st_atime_ns, st.st_mtime_ns + 1_000_000_000))
+    s2 = UCIDocStream(path, index_every=10)
+    assert s2.num_words != words       # stale sidecar ignored, rescanned
+    # knob changes invalidate too: a different index stride must rescan
+    s3 = UCIDocStream(path, index_every=5)
+    assert s3.num_words == s2.num_words
+    assert len(s3._index) > len(s2._index)
+
+
+def test_uci_sidecar_resume_matches_full_read(tmp_path):
+    path = _write_uci(tmp_path)
+    s = UCIDocStream(path, index_every=7)
+    full = list(s.iter_from(0))
+    # a fresh sidecar-served stream resumes mid-file through the index
+    r = UCIDocStream(path, index_every=7)
+    for cursor in (13, 40, 95):
+        for (ids, cnts), (wids, wcnts) in zip(r.iter_from(cursor),
+                                              full[cursor:]):
+            np.testing.assert_array_equal(ids, wids)
+            np.testing.assert_array_equal(cnts, wcnts)
+
+
+def test_uci_opt_out_skips_sidecar(tmp_path):
+    path = _write_uci(tmp_path)
+    s = UCIDocStream(path, use_index_cache=False)
+    s.num_words
+    assert not os.path.exists(s.index_path)

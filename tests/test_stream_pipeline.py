@@ -248,10 +248,14 @@ def test_stream_rejects_unsupported_modes(tiny_corpus):
         LDAEngine(_cfg(spec), stream, algo="mvi")
     with pytest.raises(ValueError, match="materialize"):
         LDAEngine(_cfg(spec), stream, algo="sivi", memo_store="gamma")
+    from repro.data.stream import ShardedDocStream
     from repro.dist import DIVIConfig
-    with pytest.raises(ValueError, match="materialize"):
+    # D-IVI takes streams (docs/divi.md); what it refuses is a pre-dealt
+    # ShardedDocStream whose shard count disagrees with the worker count.
+    with pytest.raises(ValueError, match="shards"):
         LDA(_cfg(spec), algo="divi",
-            distributed=DIVIConfig(num_workers=2)).fit(stream, rounds=1)
+            distributed=DIVIConfig(num_workers=2)).fit(
+            ShardedDocStream(stream, 3), rounds=1)
 
 
 def test_plain_iterable_ingest(tiny_corpus):

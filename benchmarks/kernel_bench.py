@@ -442,13 +442,14 @@ def csr_report(json_path: str | None = None, *,
     bw = HW["hbm_bw"]
 
     def _compare(v: int) -> dict:
-        # mirror the padded wrapper's residency promotion: one V tile
-        # (Eφ/C fetched once per call) whenever (V, K) fits the budget
-        v_resident = v * k * 4 <= 6 * 2 ** 20
+        # the padded wrapper's own residency promotion (one V tile — Eφ/C
+        # fetched once per call — whenever (V, K) fits the budget), asked
+        # of the wrapper instead of re-derived here
+        _, eff_block_v, v_resident = ops.effective_fixed_point_blocks(
+            batch, v, k, block_v=4096)
         padded_bytes = sum(
             modeled_estep_hbm_bytes("fused", pb.token_ids.shape[0], v, k,
-                                    pb.width, sweeps,
-                                    block_v=v if v_resident else 4096)
+                                    pb.width, sweeps, block_v=eff_block_v)
             for pb in padded_batches)
         # the engine pads the CSR doc axis to batch_size; the stream is
         # always exactly token_budget slots

@@ -345,7 +345,8 @@ class LDAEngine:
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False, layout: str = "padded",
-                 token_budget: Optional[int] = None, telemetry=None):
+                 token_budget: Optional[int] = None, telemetry=None,
+                 tune_store=None):
         assert algo in ("mvi", "svi", "ivi", "sivi")
         if layout not in ("padded", "csr"):
             raise ValueError(f"unknown layout {layout!r} "
@@ -406,6 +407,24 @@ class LDAEngine:
             self._stream_cursor = 0          # docs pulled this epoch
             self._stream_iter = None
             self._stream_emitted: List = []  # flushed, not yet processed
+        if (tune_store is not None and cfg.kernel_policy is None
+                and cfg.estep_backend in ("pallas", "csr")):
+            # store-resolved kernel policy, looked up once at construction
+            # (the shape key is fully known here). An explicit
+            # cfg.kernel_policy always wins over the store; no store (or a
+            # miss) leaves the policy None — bit-identical to the built-in
+            # defaults. The policy rides on the frozen cfg, which is a jit
+            # static arg everywhere, so it keys retraces correctly.
+            from repro.tune.resolve import PolicyResolver
+            pol = PolicyResolver(tune_store, telemetry=self.tel).resolve(
+                backend=cfg.estep_backend, layout=layout,
+                b_or_t=(self.token_budget if layout == "csr"
+                        else batch_size),
+                v=cfg.vocab_size, k=cfg.num_topics,
+                w=None if layout == "csr" else max_unique)
+            if pol is not None:
+                cfg = dataclasses.replace(cfg, kernel_policy=pol)
+                self.cfg = cfg
         if algo in ("ivi", "sivi"):
             if memo_store == "gamma" and algo == "ivi":
                 raise ValueError(

@@ -386,15 +386,26 @@ class PallasBackend(EStepBackend):
     chunk count is the scatter's HBM-traffic knob — the token rows are
     re-streamed once per chunk — so overriding it only makes sense for
     benchmark sweeps.
+
+    ``policy`` (a ``repro.core.types.KernelPolicy``) pins every tile knob
+    for instances constructed by the autotuner. The module singletons in
+    ``_BACKENDS`` keep ``policy=None`` so the knobs resolve from
+    ``cfg.kernel_policy`` (or the built-in defaults) per call — that is
+    what lets one shared backend instance serve differently-tuned
+    configs without retrace hazards: the policy rides on ``cfg``, which
+    is already a jit static argument everywhere.
     """
 
     name = "pallas"
-    delta_block_v: Optional[int] = None     # None → VMEM-budget policy
+
+    def __init__(self, policy=None, delta_block_v: Optional[int] = None):
+        self.policy = policy
+        self.delta_block_v = delta_block_v  # None → VMEM-budget policy
 
     def solve(self, cfg, exp_elog_beta, batch, gamma0=None):
         from repro.kernels import ops as kops
         return kops.estep_pallas(cfg, exp_elog_beta, batch.token_ids,
-                                 batch.counts, gamma0,
+                                 batch.counts, gamma0, policy=self.policy,
                                  delta_block_v=self.delta_block_v)
 
     def solve_correction(self, cfg, exp_elog_beta, batch, old_pi, visited,
@@ -404,6 +415,7 @@ class PallasBackend(EStepBackend):
                                            batch.token_ids, batch.counts,
                                            old_pi, visited,
                                            pi_dtype=pi_dtype,
+                                           policy=self.policy,
                                            delta_block_v=self.delta_block_v)
 
     def solve_tokens(self, cfg, exp_elog_beta, tok, num_docs, gamma0=None):
@@ -411,6 +423,7 @@ class PallasBackend(EStepBackend):
         return kops.estep_pallas_csr(cfg, exp_elog_beta, tok.token_ids,
                                      tok.counts, tok.segments,
                                      num_docs=num_docs, gamma0=gamma0,
+                                     policy=self.policy,
                                      delta_block_v=self.delta_block_v)
 
     def solve_correction_tokens(self, cfg, exp_elog_beta, tok, old_pi,
@@ -418,7 +431,7 @@ class PallasBackend(EStepBackend):
         from repro.kernels import ops as kops
         return kops.memo_correction_pallas_csr(
             cfg, exp_elog_beta, tok.token_ids, tok.counts, tok.segments,
-            old_pi, visited, pi_dtype=pi_dtype,
+            old_pi, visited, pi_dtype=pi_dtype, policy=self.policy,
             delta_block_v=self.delta_block_v)
 
 

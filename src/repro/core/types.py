@@ -9,6 +9,8 @@ densify a mini-batch into a count matrix ``C (B, V)``.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -44,6 +46,50 @@ class Corpus:
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Tile/config policy for the Pallas E-step kernels (``repro.tune``).
+
+    Every field defaults to the value the kernels hard-coded before the
+    autotuner existed, so ``KernelPolicy()`` — and a ``None`` policy — are
+    bit-identical to the historical behavior. The dataclass is frozen and
+    hashable because it rides on :class:`LDAConfig` (a jit static arg):
+    changing a policy correctly keys a retrace.
+
+    Fields map onto kernel knobs as follows (docs/tuning.md has the table):
+
+    * ``block_b`` / ``block_v`` — fused padded fixed point
+      (``ops.estep_pallas``). ``block_v`` is subject to whole-V residency
+      promotion; ``ops.effective_fixed_point_blocks`` reports the tile
+      actually run.
+    * ``delta_block_b`` / ``delta_block_v`` / ``pi_block_l`` /
+      ``scatter_block_t`` — the memo_delta π kernel + segment scatter
+      (``lda_estep.memo_delta``: ``block_b``/``block_v``/``block_l``/
+      ``block_t``).
+    * ``block_t`` — CSR flat-token fixed point tile, subject to whole-T
+      residency promotion (``ops.csr_effective_block_t``).
+    * ``wire_dtype`` — advisory memo wire dtype recorded by the tuner
+      (``"float32"``/``"bfloat16"``); the memo *store* kind still decides
+      the wire, this records what the search measured as best.
+    * ``double_buffer_depth`` — staging queue depth for
+      ``TopicInferencer.posterior_docs``.
+    """
+
+    block_b: int = 128
+    block_v: int = 512
+    delta_block_b: int = 32
+    delta_block_v: Optional[int] = None
+    pi_block_l: int = 512
+    scatter_block_t: int = 128
+    block_t: int = 512
+    wire_dtype: Optional[str] = None
+    double_buffer_depth: int = 2
+
+
+#: The policy in effect when none is configured — today's hard defaults.
+DEFAULT_KERNEL_POLICY = KernelPolicy()
+
+
+@dataclasses.dataclass(frozen=True)
 class LDAConfig:
     """Hyper-parameters — defaults are the paper's §6 experimental setup."""
 
@@ -59,6 +105,9 @@ class LDAConfig:
     # dtype the fused Pallas kernel streams C / Eφ in ("float32"|"bfloat16");
     # bf16 halves the dominant HBM terms of the fixed point (docs/estep.md)
     estep_stream_dtype: str = "float32"
+    # tuned kernel tile policy (repro.tune); None means the built-in
+    # defaults, which are bit-identical to KernelPolicy()
+    kernel_policy: Optional[KernelPolicy] = None
 
     def rho(self, t: jax.Array) -> jax.Array:
         """Robbins–Monro step size ρ_t = (t + τ)^(−κ)."""

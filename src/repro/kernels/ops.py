@@ -32,7 +32,7 @@ from repro.core.estep import (CSRTokenBatch, EStepResult, densify,
                               segment_sum_docs, warm_start_gamma,
                               warm_start_gamma_flat)
 from repro.core.math import exp_dirichlet_expectation
-from repro.core.types import LDAConfig
+from repro.core.types import DEFAULT_KERNEL_POLICY, KernelPolicy, LDAConfig
 from repro.kernels import lda_estep
 from repro.kernels.flash_attention import flash_attention
 
@@ -41,6 +41,23 @@ _EPS = 1e-30  # fp32-safe (1e-100 underflows to 0)
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def resolve_policy(cfg: LDAConfig,
+                   policy: Optional[KernelPolicy] = None) -> KernelPolicy:
+    """The :class:`KernelPolicy` in effect for a kernel call.
+
+    Precedence: an explicit ``policy`` argument wins, then
+    ``cfg.kernel_policy`` (the store-resolved policy threaded through the
+    engines), then the built-in defaults — which are bit-identical to the
+    pre-autotune hard-coded knobs. Per-knob keyword arguments on the ops
+    entry points override whatever this returns.
+    """
+    if policy is not None:
+        return policy
+    if cfg.kernel_policy is not None:
+        return cfg.kernel_policy
+    return DEFAULT_KERNEL_POLICY
 
 
 def pad_inputs(c: jax.Array, eb: jax.Array, block_b: int, block_v: int,
@@ -92,20 +109,42 @@ def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
 _V_RESIDENT_BYTES = 6 * 1024 * 1024
 
 
+def effective_fixed_point_blocks(b: int, v: int, k: int, *,
+                                 block_b: int = 128, block_v: int = 512,
+                                 stream_bytes: int = 4
+                                 ) -> Tuple[int, int, bool]:
+    """The (block_b, block_v) grid the fused fixed point actually runs.
+
+    ``_run_fixed_point`` promotes ``block_v`` to whole-V whenever the
+    lane-aligned Eφ block fits the resident budget — one V tile means the
+    pipeline fetches Eφ once per call instead of once per sweep. The
+    promotion used to be silent; this mirror of ``csr_effective_block_t``
+    exposes it so tune records, the roofline HBM model, and telemetry
+    report the tile that ran, never a requested-but-ignored ``block_v``.
+
+    Returns ``(block_b, block_v, v_resident)``.
+    """
+    del b  # B only pads the row grid; it never changes the tile choice
+    v_aligned = _round_up(v, 128)
+    kp = _round_up(k, 128)
+    if v_aligned * kp * stream_bytes <= _V_RESIDENT_BYTES:
+        return block_b, max(block_v, v_aligned), True
+    return block_b, block_v, False
+
+
 def _run_fixed_point(cfg: LDAConfig, exp_elog_beta: jax.Array,
                      token_ids: jax.Array, counts: jax.Array,
                      gamma0: Optional[jax.Array], block_b: int, block_v: int):
     """densify → pad → fused fixed-point kernel. Returns real-shape γ/Eθ."""
     bsz = token_ids.shape[0]
     v = exp_elog_beta.shape[0]
-    kp = _round_up(exp_elog_beta.shape[1], 128)
     stream_bytes = 2 if cfg.estep_stream_dtype == "bfloat16" else 4
     # the resident tile must stay lane-aligned: a raw (unrounded) V as the
     # C lane / Eφ sublane dimension breaks the TPU (8, 128) tiling when V
     # is not a multiple of 128 — pad_inputs pads V up to this block size
-    v_aligned = _round_up(v, 128)
-    if v_aligned * kp * stream_bytes <= _V_RESIDENT_BYTES:
-        block_v = max(block_v, v_aligned)  # whole V in one resident tile
+    block_b, block_v, _ = effective_fixed_point_blocks(
+        bsz, v, exp_elog_beta.shape[1], block_b=block_b, block_v=block_v,
+        stream_bytes=stream_bytes)
     c = densify(token_ids, counts, v)
     cpad, ebpad, (b, _, k) = pad_inputs(c, exp_elog_beta, block_b, block_v)
     if gamma0 is None:
@@ -121,19 +160,28 @@ def _run_fixed_point(cfg: LDAConfig, exp_elog_beta: jax.Array,
     return gamma[:bsz, :k], et[:bsz, :k], iters.max()
 
 
-@partial(jax.jit, static_argnames=("cfg", "block_b", "block_v",
+@partial(jax.jit, static_argnames=("cfg", "policy", "block_b", "block_v",
                                    "delta_block_b", "delta_block_v"))
 def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                  token_ids: jax.Array, counts: jax.Array,
                  gamma0: Optional[jax.Array] = None, *,
-                 block_b: int = 128, block_v: int = 512,
-                 delta_block_b: int = 32,
+                 policy: Optional[KernelPolicy] = None,
+                 block_b: Optional[int] = None,
+                 block_v: Optional[int] = None,
+                 delta_block_b: Optional[int] = None,
                  delta_block_v: Optional[int] = None) -> EStepResult:
     """Fused batched E-step: fixed-point kernel + memo_delta pair.
 
-    ``delta_block_v`` is the scatter's V-chunk (None → the VMEM-budget
-    policy ``lda_estep.segment_scatter_blocks``).
+    Tile knobs resolve per ``resolve_policy`` (explicit kwarg > ``policy``
+    > ``cfg.kernel_policy`` > defaults). ``delta_block_v`` is the
+    scatter's V-chunk (None → the VMEM-budget policy
+    ``lda_estep.segment_scatter_blocks``).
     """
+    pol = resolve_policy(cfg, policy)
+    block_b = pol.block_b if block_b is None else block_b
+    block_v = pol.block_v if block_v is None else block_v
+    delta_block_b = pol.delta_block_b if delta_block_b is None else delta_block_b
+    delta_block_v = pol.delta_block_v if delta_block_v is None else delta_block_v
     bsz = token_ids.shape[0]
     gamma, et, iters = _run_fixed_point(cfg, exp_elog_beta, token_ids,
                                         counts, gamma0, block_b, block_v)
@@ -142,18 +190,22 @@ def estep_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
     pi, snew = lda_estep.memo_delta(
         _pad_rows(token_ids, bp), _pad_rows(counts, bp),
         _pad_rows(eb_tok, bp), _pad_rows(et, bp), exp_elog_beta.shape[0],
-        block_b=delta_block_b, block_v=delta_block_v)
+        block_b=delta_block_b, block_l=pol.pi_block_l,
+        block_v=delta_block_v, block_t=pol.scatter_block_t)
     return EStepResult(gamma=gamma, pi=pi[:bsz], sstats=snew, iters=iters)
 
 
-@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "block_b", "block_v",
-                                   "delta_block_b", "delta_block_v"))
+@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "policy", "block_b",
+                                   "block_v", "delta_block_b",
+                                   "delta_block_v"))
 def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
                            token_ids: jax.Array, counts: jax.Array,
                            old_pi: jax.Array, visited: jax.Array, *,
                            pi_dtype: str = "float32",
-                           block_b: int = 128, block_v: int = 512,
-                           delta_block_b: int = 32,
+                           policy: Optional[KernelPolicy] = None,
+                           block_b: Optional[int] = None,
+                           block_v: Optional[int] = None,
+                           delta_block_b: Optional[int] = None,
                            delta_block_v: Optional[int] = None
                            ) -> Tuple[jax.Array, jax.Array, EStepResult]:
     """Fused IVI hot path: E-step + subtract-old/add-new correction.
@@ -172,6 +224,11 @@ def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
         # rather than silently skip the round-trip and drift ⟨m_vk⟩
         raise ValueError(f"pallas memo correction supports pi_dtype "
                          f"float32|bfloat16, got {pi_dtype!r}")
+    pol = resolve_policy(cfg, policy)
+    block_b = pol.block_b if block_b is None else block_b
+    block_v = pol.block_v if block_v is None else block_v
+    delta_block_b = pol.delta_block_b if delta_block_b is None else delta_block_b
+    delta_block_v = pol.delta_block_v if delta_block_v is None else delta_block_v
     bsz = token_ids.shape[0]
     gamma0 = warm_start_gamma(cfg, counts, old_pi, visited)
     gamma, et, iters = _run_fixed_point(cfg, exp_elog_beta, token_ids,
@@ -182,7 +239,8 @@ def memo_correction_pallas(cfg: LDAConfig, exp_elog_beta: jax.Array,
         _pad_rows(token_ids, bp), _pad_rows(counts, bp),
         _pad_rows(eb_tok, bp), _pad_rows(et, bp), exp_elog_beta.shape[0],
         old_pi=_pad_rows(old_pi, bp), quantize=(pi_dtype == "bfloat16"),
-        block_b=delta_block_b, block_v=delta_block_v)
+        block_b=delta_block_b, block_l=pol.pi_block_l,
+        block_v=delta_block_v, block_t=pol.scatter_block_t)
     correction = snew - sold
     words_first = jnp.sum(jnp.where(~visited, counts.sum(-1), 0.0))
     res = EStepResult(gamma=gamma, pi=pi[:bsz], sstats=snew, iters=iters)
@@ -238,13 +296,15 @@ def _run_fixed_point_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
     return gamma[:num_docs, :k], et[:num_docs, :k], eb_tok, iters.max()
 
 
-@partial(jax.jit, static_argnames=("cfg", "num_docs", "block_t",
+@partial(jax.jit, static_argnames=("cfg", "num_docs", "policy", "block_t",
                                    "delta_block_v"))
 def estep_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
                      token_ids: jax.Array, counts: jax.Array,
                      segments: jax.Array,
                      gamma0: Optional[jax.Array] = None, *,
-                     num_docs: int, block_t: int = 512,
+                     num_docs: int,
+                     policy: Optional[KernelPolicy] = None,
+                     block_t: Optional[int] = None,
                      delta_block_v: Optional[int] = None) -> EStepResult:
     """Width-free flat-token E-step: CSR fixed point + CSR memo_delta.
 
@@ -253,24 +313,29 @@ def estep_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
     (T, K) layout. One compiled entry serves every document-length mix
     with the same (T, B) shape — no width in the jit key.
     """
+    pol = resolve_policy(cfg, policy)
+    block_t = pol.block_t if block_t is None else block_t
+    delta_block_v = pol.delta_block_v if delta_block_v is None else delta_block_v
     gamma, et, eb_tok, iters = _run_fixed_point_csr(
         cfg, exp_elog_beta, token_ids, counts, segments, num_docs,
         gamma0, block_t)
     k = exp_elog_beta.shape[1]
     pi, snew = lda_estep.memo_delta_csr(
         token_ids, counts, segments, eb_tok[:, :k], et,
-        exp_elog_beta.shape[0], block_v=delta_block_v)
+        exp_elog_beta.shape[0], block_t_pi=pol.pi_block_l,
+        block_v=delta_block_v, block_t=pol.scatter_block_t)
     return EStepResult(gamma=gamma, pi=pi, sstats=snew, iters=iters)
 
 
-@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "block_t",
+@partial(jax.jit, static_argnames=("cfg", "pi_dtype", "policy", "block_t",
                                    "delta_block_v"))
 def memo_correction_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
                                token_ids: jax.Array, counts: jax.Array,
                                segments: jax.Array, old_pi: jax.Array,
                                visited: jax.Array, *,
                                pi_dtype: str = "float32",
-                               block_t: int = 512,
+                               policy: Optional[KernelPolicy] = None,
+                               block_t: Optional[int] = None,
                                delta_block_v: Optional[int] = None
                                ) -> Tuple[jax.Array, jax.Array, EStepResult]:
     """Fused CSR IVI hot path: flat E-step + subtract-old/add-new.
@@ -284,6 +349,9 @@ def memo_correction_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
         # rather than silently skip the round-trip and drift ⟨m_vk⟩
         raise ValueError(f"pallas memo correction supports pi_dtype "
                          f"float32|bfloat16, got {pi_dtype!r}")
+    pol = resolve_policy(cfg, policy)
+    block_t = pol.block_t if block_t is None else block_t
+    delta_block_v = pol.delta_block_v if delta_block_v is None else delta_block_v
     num_docs = visited.shape[0]
     tok = CSRTokenBatch(token_ids, counts, segments)
     gamma0 = warm_start_gamma_flat(cfg, tok, old_pi, visited)
@@ -294,7 +362,8 @@ def memo_correction_pallas_csr(cfg: LDAConfig, exp_elog_beta: jax.Array,
     pi, snew, sold = lda_estep.memo_delta_csr(
         token_ids, counts, segments, eb_tok[:, :k], et,
         exp_elog_beta.shape[0], old_pi=old_pi,
-        quantize=(pi_dtype == "bfloat16"), block_v=delta_block_v)
+        quantize=(pi_dtype == "bfloat16"), block_t_pi=pol.pi_block_l,
+        block_v=delta_block_v, block_t=pol.scatter_block_t)
     correction = snew - sold
     doc_words = segment_sum_docs(counts, segments, num_docs)
     words_first = jnp.sum(jnp.where(~visited, doc_words, 0.0))

@@ -92,15 +92,21 @@ def main_lda(args) -> None:
                                          batch_size=args.batch,
                                          staleness=args.staleness,
                                          delay_prob=args.delay_prob),
-                  seed=args.seed, telemetry=tel)
+                  seed=args.seed, telemetry=tel,
+                  tune_store=args.tune_store)
     else:
         lda = LDA(cfg, algo=args.algo, batch_size=args.batch,
                   seed=args.seed, memo_store=args.memo_store,
                   chunk_docs=args.chunk_docs,
-                  bucket_by_length=args.bucketed, telemetry=tel)
+                  bucket_by_length=args.bucketed, telemetry=tel,
+                  tune_store=args.tune_store)
 
     # bind the corpus without stepping so the memo footprint is reportable
     lda.partial_fit(train, steps=0, test_corpus=test)
+    if lda.cfg.kernel_policy is not None:
+        # a tuned (or explicit) policy is part of the run's identity —
+        # log it so the trajectory is attributable (docs/tuning.md)
+        print(f"kernel_policy={lda.cfg.kernel_policy}")
     memo = (lda.trainer.eng.memo if lda.trainer.kind == "single" else None)
     if memo is not None:
         print(f"memo_store={memo.kind} "
@@ -275,6 +281,10 @@ def main() -> None:
     lda.add_argument("--ckpt", default=None,
                      help="save a manifest checkpoint directory here "
                           "(full incremental state; repro.lda.ckpt)")
+    lda.add_argument("--tune-store", default=None, metavar="PATH",
+                     help="repro.tune policy store of autotuned kernel "
+                          "policies (docs/tuning.md); a hit replaces the "
+                          "built-in tile defaults, a miss changes nothing")
     lda.add_argument("--resume", default=None,
                      help="resume from a --ckpt manifest (bit-equal "
                           "continuation); algo/store flags then come from "

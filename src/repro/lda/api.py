@@ -67,6 +67,13 @@ class LDA:
         pre-configured ``repro.obs.Telemetry``. Threaded through the
         trainer, both engines, the batch packer and (by default) every
         inferencer this estimator creates.
+      tune_store: a ``repro.tune`` policy store (path or ``PolicyStore``)
+        of autotuned kernel policies (`docs/tuning.md`). Consulted once
+        when the corpus is bound: a hit is written onto ``cfg`` (so
+        checkpoints record the active policy and a resumed run reproduces
+        its trajectory with or without the store); a miss — or no store —
+        leaves the built-in defaults, bit-identical to not tuning. An
+        explicit ``cfg.kernel_policy`` always wins over the store.
     """
 
     def __init__(self, cfg: Optional[LDAConfig] = None, *,
@@ -77,7 +84,8 @@ class LDA:
                  bucket_by_length: bool = False,
                  backend: Optional[str] = None, layout: str = "padded",
                  token_budget: Optional[int] = None,
-                 mesh=None, data_axes=None, telemetry=None, **cfg_kwargs):
+                 mesh=None, data_axes=None, telemetry=None,
+                 tune_store=None, **cfg_kwargs):
         if cfg is None:
             cfg = LDAConfig(**cfg_kwargs)
         elif cfg_kwargs:
@@ -111,6 +119,8 @@ class LDA:
         self.layout = layout
         self.token_budget = token_budget if layout == "csr" else None
         self.telemetry = as_telemetry(telemetry)
+        self.tune_store = tune_store
+        self._cfg_pre_tune = None     # cfg before store resolution, if any
         self._mesh, self._data_axes = mesh, data_axes
         self.trainer: Optional[Trainer] = None
         self._corpus = None           # coerced Corpus | DocStream
@@ -202,6 +212,7 @@ class LDA:
                              + (" (or call resume(corpus) on a loaded "
                                 "checkpoint)" if self._pending_restore
                                 else ""))
+        self._resolve_tuned_policy(corpus)
         self.trainer = make_trainer(
             self.cfg, corpus, algo=self.algo, distributed=self.distributed,
             batch_size=self.batch_size, seed=self.seed,
@@ -209,10 +220,43 @@ class LDA:
             chunk_docs=self.chunk_docs,
             bucket_by_length=self.bucket_by_length, layout=self.layout,
             token_budget=self.token_budget, mesh=self._mesh,
-            data_axes=self._data_axes, telemetry=self.telemetry)
+            data_axes=self._data_axes, telemetry=self.telemetry,
+            tune_store=self.tune_store)
         self._corpus = corpus
         self._corpus_raw = raw
         return self.trainer
+
+    def _resolve_tuned_policy(self, corpus) -> None:
+        """Look up a tuned ``KernelPolicy`` for the bound training shape.
+
+        Resolving at the FACADE (not just inside the engine) writes the
+        winner onto ``self.cfg`` — the object checkpoints serialize — so
+        a resumed run reproduces the tuned trajectory even when the store
+        is absent at resume time. A miss, no store, or an explicit
+        ``cfg.kernel_policy`` changes nothing.
+        """
+        cfg = self.cfg
+        if (self.tune_store is None or cfg.kernel_policy is not None
+                or cfg.estep_backend not in ("pallas", "csr")):
+            return
+        from repro.tune.resolve import PolicyResolver
+        if self.layout == "csr":
+            # the engine's token-budget default, mirrored so the lookup
+            # key matches the shape the engine will actually run
+            b_or_t = (self.token_budget if self.token_budget is not None
+                      else min(self.batch_size * 64, 8192))
+            w = None
+        else:
+            b_or_t = (self.distributed.batch_size
+                      if self.distributed is not None else self.batch_size)
+            w = getattr(corpus, "max_unique", None)
+        pol = PolicyResolver(self.tune_store,
+                             telemetry=self.telemetry).resolve(
+            backend=cfg.estep_backend, layout=self.layout,
+            b_or_t=b_or_t, v=cfg.vocab_size, k=cfg.num_topics, w=w)
+        if pol is not None:
+            self._cfg_pre_tune = cfg
+            self.cfg = dataclasses.replace(cfg, kernel_policy=pol)
 
     def fit(self, corpus=None, *, epochs: int = 1,
             rounds: Optional[int] = None,
@@ -327,18 +371,26 @@ class LDA:
     def inferencer(self, *, backend: Optional[str] = None,
                    batch_size: int = 256, layout: Optional[str] = None,
                    token_budget: Optional[int] = None,
-                   telemetry=None) -> TopicInferencer:
+                   telemetry=None, tune_store=None) -> TopicInferencer:
         """A reusable serving handle over the current topics (λ is
         preprocessed once; one jit entry per bucket width — or exactly ONE
         entry total under ``layout='csr'``). Layout defaults to the
-        estimator's training layout; telemetry to its bundle."""
+        estimator's training layout; telemetry and the tuned-policy store
+        to its own (serving resolves per-width policies lazily —
+        `docs/tuning.md`)."""
         layout = self.layout if layout is None else layout
         if token_budget is None and layout == self.layout:
             token_budget = self.token_budget
+        # a TRAIN-shape store policy must not ride into serving's shapes:
+        # hand the inferencer the pre-resolution cfg so it does its own
+        # per-width lookups (a user-explicit cfg.kernel_policy still wins
+        # — _cfg_pre_tune is only set when the store supplied the policy)
+        cfg = self.cfg if self._cfg_pre_tune is None else self._cfg_pre_tune
         return TopicInferencer(
-            self.cfg, self.lam, backend=backend, batch_size=batch_size,
+            cfg, self.lam, backend=backend, batch_size=batch_size,
             layout=layout, token_budget=token_budget,
-            telemetry=self.telemetry if telemetry is None else telemetry)
+            telemetry=self.telemetry if telemetry is None else telemetry,
+            tune_store=self.tune_store if tune_store is None else tune_store)
 
     def transform(self, corpus: Corpus, *, backend: Optional[str] = None,
                   batch_size: int = 256) -> np.ndarray:

@@ -94,7 +94,15 @@ def load_lda_checkpoint(path: str):
     ctor = meta["constructor"]
     dist = (DIVIConfig(**ctor["distributed"])
             if ctor["distributed"] is not None else None)
-    lda = LDA(LDAConfig(**ctor["cfg"]), algo=ctor["algo"], distributed=dist,
+    cfg_fields = dict(ctor["cfg"])
+    if cfg_fields.get("kernel_policy") is not None:
+        # dataclasses.asdict flattened the nested KernelPolicy to a plain
+        # dict on save; rebuild it so the restored cfg stays hashable (it
+        # is a jit static arg) and the run replays its tuned trajectory
+        from repro.tune.store import policy_from_dict
+        cfg_fields["kernel_policy"] = \
+            policy_from_dict(cfg_fields["kernel_policy"])
+    lda = LDA(LDAConfig(**cfg_fields), algo=ctor["algo"], distributed=dist,
               batch_size=ctor["batch_size"], seed=ctor["seed"],
               memo_store=ctor["memo_store"], chunk_docs=ctor["chunk_docs"],
               bucket_by_length=ctor["bucket_by_length"],

@@ -98,12 +98,22 @@ class TopicInferencer:
         so tracing does not serialise the double-buffer overlap; counters
         record docs/batches served, jit-cache hits vs misses per width,
         and the double-buffer queue depth histogram.
+      tune_store: a ``repro.tune`` policy store (path or ``PolicyStore``)
+        of autotuned kernel policies (`docs/tuning.md`). Padded serving
+        resolves a policy PER BUCKET WIDTH, lazily, the first time a
+        width is dispatched (each width is its own kernel shape, so each
+        can carry its own winner — the per-width cfg variants mirror the
+        one-jit-entry-per-width cache). CSR serving resolves once at
+        construction (one shape total). A tuned
+        ``double_buffer_depth`` sizes ``posterior_docs``'s staging queue.
+        An explicit ``cfg.kernel_policy`` always wins; no store (or a
+        miss) is bit-identical to the built-in defaults.
     """
 
     def __init__(self, cfg: LDAConfig, lam: jax.Array, *,
                  backend: Optional[str] = None, batch_size: int = 256,
                  layout: str = "padded", token_budget: Optional[int] = None,
-                 telemetry=None):
+                 telemetry=None, tune_store=None):
         if backend is not None and backend != cfg.estep_backend:
             cfg = dataclasses.replace(cfg, estep_backend=backend)
         if layout not in ("padded", "csr"):
@@ -126,6 +136,48 @@ class TopicInferencer:
         self._compiled_widths: Dict[int, int] = {}    # width → batches run
         self._live_slots = 0          # staged token slots actually live
         self._padded_slots = 0        # staged token slots incl. padding
+        # tuned-policy resolution (docs/tuning.md): per-width cfg variants
+        # for padded serving, a one-shot construction-time lookup for csr
+        self._resolver = None
+        self._cfg_by_width: Dict[int, LDAConfig] = {}
+        if (tune_store is not None and self.cfg.kernel_policy is None
+                and self.cfg.estep_backend in ("pallas", "csr")):
+            from repro.tune.resolve import PolicyResolver
+            self._resolver = PolicyResolver(tune_store, telemetry=self.tel)
+            if layout == "csr":
+                pol = self._resolver.resolve(
+                    backend=self.cfg.estep_backend, layout="csr",
+                    b_or_t=self.token_budget, v=self.cfg.vocab_size,
+                    k=self.cfg.num_topics, w=None)
+                if pol is not None:
+                    self.cfg = dataclasses.replace(self.cfg,
+                                                   kernel_policy=pol)
+
+    def _cfg_for_width(self, width: int) -> LDAConfig:
+        """The serving cfg for one bucket width — carrying that width's
+        tuned kernel policy when the store has one (padded layout only;
+        csr resolved its single shape at construction). Cached so each
+        width's lookup — and its ``tune.cache`` hit/miss — happens once,
+        like its jit compile."""
+        if self._resolver is None or self.layout == "csr":
+            return self.cfg
+        cfg = self._cfg_by_width.get(width)
+        if cfg is None:
+            pol = self._resolver.resolve(
+                backend=self.cfg.estep_backend, layout="padded",
+                b_or_t=self.batch_size, v=self.cfg.vocab_size,
+                k=self.cfg.num_topics, w=width)
+            cfg = (self.cfg if pol is None
+                   else dataclasses.replace(self.cfg, kernel_policy=pol))
+            self._cfg_by_width[width] = cfg
+        return cfg
+
+    def _buffer_depth(self) -> int:
+        """``posterior_docs``'s staging-queue size: the active kernel
+        policy's ``double_buffer_depth`` (tuned or explicit), else the
+        classic 2 (one in flight + one staged)."""
+        pol = self.cfg.kernel_policy
+        return pol.double_buffer_depth if pol is not None else 2
 
     # -- model snapshot ---------------------------------------------------
     @property
@@ -206,7 +258,8 @@ class TopicInferencer:
                 ids[: len(rows)] = ids_all[rows, :width]
                 cnts[: len(rows)] = cnts_all[rows, :width]
                 self._note_padding(int((cnts > 0).sum()), cnts.size)
-                gamma = _posterior_batch(self.cfg, self.exp_elog_beta,
+                gamma = _posterior_batch(self._cfg_for_width(width),
+                                         self.exp_elog_beta,
                                          jnp.asarray(ids), jnp.asarray(cnts))
                 out[rows] = np.asarray(gamma[: len(rows)])
                 self._note_width(width, len(rows))
@@ -309,7 +362,7 @@ class TopicInferencer:
         """
         results: List[_Result] = []
         if double_buffer:
-            q: "queue.Queue" = queue.Queue(maxsize=2)
+            q: "queue.Queue" = queue.Queue(maxsize=self._buffer_depth())
             abort = threading.Event()
             err: List[BaseException] = []
 
@@ -385,7 +438,8 @@ class TopicInferencer:
             width = aux
             sp = tel.trace.begin("serve/solve", width=width, docs=n) \
                 if tel.enabled else None
-            gamma = _posterior_batch(self.cfg, eb, ids, cnts)
+            gamma = _posterior_batch(self._cfg_for_width(width), eb, ids,
+                                     cnts)
         if sp is not None:
             tel.trace.end(sp)
         self._note_width(width, n)

@@ -139,13 +139,14 @@ class SingleHostTrainer(Trainer):
                  test_corpus: Optional[Corpus] = None,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False, layout: str = "padded",
-                 token_budget: Optional[int] = None, telemetry=None):
+                 token_budget: Optional[int] = None, telemetry=None,
+                 tune_store=None):
         self.eng = LDAEngine(cfg, corpus, algo=algo, batch_size=batch_size,
                              seed=seed, test_corpus=test_corpus,
                              memo_store=memo_store, chunk_docs=chunk_docs,
                              bucket_by_length=bucket_by_length,
                              layout=layout, token_budget=token_budget,
-                             telemetry=telemetry)
+                             telemetry=telemetry, tune_store=tune_store)
         self.algo = algo
         self._streamed = self.eng.stream is not None
         self._pending: List[Tuple[np.ndarray, Optional[int]]] = []
@@ -503,17 +504,31 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                  memo_store: str = "dense", chunk_docs: int = 8192,
                  bucket_by_length: bool = False, layout: str = "padded",
                  token_budget: Optional[int] = None, mesh=None,
-                 data_axes=None, telemetry=None) -> Trainer:
+                 data_axes=None, telemetry=None, tune_store=None) -> Trainer:
     """Bind a corpus (or ``DocStream``) to the right Trainer.
 
     Every data source works on every path: D-IVI shards a ``DocStream``
     into per-worker views (a padded ``Corpus`` is wrapped on the way in),
-    so stream ingest is distributed-ready too.
+    so stream ingest is distributed-ready too. ``tune_store`` is a
+    ``repro.tune`` policy store (path or ``PolicyStore``) consulted once
+    at engine construction for a tuned kernel policy.
     """
     if distributed is not None:
         if layout != "padded":
             raise ValueError("distributed training packs padded worker "
                              "batches; layout='csr' is single-host only")
+        if tune_store is not None and cfg.kernel_policy is None \
+                and cfg.estep_backend in ("pallas", "csr"):
+            # D-IVI workers all run the same per-worker batch shape; one
+            # facade-level lookup covers them (per-worker width = the
+            # stream's max_unique, the padded packer width)
+            from repro.tune.resolve import PolicyResolver
+            pol = PolicyResolver(tune_store, telemetry=telemetry).resolve(
+                backend=cfg.estep_backend, layout="padded",
+                b_or_t=distributed.batch_size, v=cfg.vocab_size,
+                k=cfg.num_topics, w=getattr(corpus, "max_unique", None))
+            if pol is not None:
+                cfg = dataclasses.replace(cfg, kernel_policy=pol)
         return DIVITrainer(cfg, distributed, corpus, seed=seed,
                            test_corpus=test_corpus, mesh=mesh,
                            data_axes=data_axes, telemetry=telemetry)
@@ -522,4 +537,4 @@ def make_trainer(cfg: LDAConfig, corpus, *, algo: str,
                              memo_store=memo_store, chunk_docs=chunk_docs,
                              bucket_by_length=bucket_by_length,
                              layout=layout, token_budget=token_budget,
-                             telemetry=telemetry)
+                             telemetry=telemetry, tune_store=tune_store)

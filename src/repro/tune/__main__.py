@@ -1,0 +1,135 @@
+"""CLI for the kernel-policy autotuner.
+
+::
+
+    # search one shape and cache the winner
+    python -m repro.tune tune --store tune_store.json \
+        --task padded --batch 64 --vocab 4096 --topics 128 --width 64 \
+        --budget 16
+
+    # CSR: --batch is the token budget T
+    python -m repro.tune tune --store tune_store.json --task csr \
+        --batch 4096 --vocab 8192 --topics 128 --docs 64
+
+    # inspect / clear
+    python -m repro.tune show --store tune_store.json
+    python -m repro.tune clear --store tune_store.json [--prefix pallas/]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .store import PolicyStore, current_device_kind
+
+
+def _cmd_tune(args) -> int:
+    from .search import TuneShape, tune_and_store
+
+    backend = "csr" if args.task == "csr" else "pallas"
+    layout = "csr" if args.task == "csr" else "padded"
+    shape = TuneShape(task=args.task, b_or_t=args.batch, v=args.vocab,
+                      k=args.topics, w=args.width, num_docs=args.docs,
+                      backend=backend, layout=layout)
+    store = PolicyStore(args.store)
+    res = tune_and_store(store, shape, budget=args.budget, seed=args.seed,
+                         iters=args.iters,
+                         allow_bf16_wire=args.allow_bf16_wire,
+                         verbose=args.verbose)
+    kind = "measured" if not res.proxy_regime else "modeled (proxy_regime)"
+    print(f"tuned {shape.task} B_or_T={shape.b_or_t} V={shape.v} "
+          f"K={shape.k} W={shape.w} on {current_device_kind()}")
+    print(f"  objective : {kind}")
+    print(f"  default   : {res.default_cost:.3e} s")
+    print(f"  tuned     : {res.tuned_cost:.3e} s "
+          f"({res.improvement:.2f}x, {res.trials} trials)")
+    print(f"  equality  : {res.equality['mode']} "
+          f"(max|err| {res.equality['max_abs_err']:.1e}) at probe "
+          f"{res.equality['probe_shape']}")
+    print(f"  effective : {res.effective}")
+    print(f"  policy    : {res.policy}")
+    print(f"  -> {args.store} [{shape.key().path()}]")
+    return 0
+
+
+def _cmd_show(args) -> int:
+    store = PolicyStore(args.store)
+    entries = store.entries()
+    if not entries:
+        print(f"{args.store}: no tuned entries")
+        return 0
+    if args.json:
+        json.dump(entries, sys.stdout, indent=2, sort_keys=True)
+        print()
+        return 0
+    print(f"{args.store}: {len(entries)} tuned entr"
+          f"{'y' if len(entries) == 1 else 'ies'}")
+    for path, rec in sorted(entries.items()):
+        obj = rec.get("objective", {})
+        imp = obj.get("improvement")
+        tag = " [proxy_regime]" if obj.get("proxy_regime") else ""
+        imp_s = f" {imp:.2f}x" if isinstance(imp, (int, float)) else ""
+        print(f"  {path}{imp_s}{tag}")
+        if args.verbose:
+            print(f"    policy={rec.get('policy')}")
+            print(f"    effective={rec.get('effective')}")
+            print(f"    equality={rec.get('equality')}")
+    return 0
+
+
+def _cmd_clear(args) -> int:
+    removed = PolicyStore(args.store).clear(args.prefix)
+    what = f"prefix {args.prefix!r}" if args.prefix else "all entries"
+    print(f"{args.store}: removed {removed} ({what})")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="search one shape, cache the winner")
+    t.add_argument("--store", required=True, help="policy store JSON path")
+    t.add_argument("--task", choices=["padded", "csr"], default="padded")
+    t.add_argument("--batch", type=int, required=True,
+                   help="batch size (padded) / token budget T (csr)")
+    t.add_argument("--vocab", type=int, required=True)
+    t.add_argument("--topics", type=int, required=True)
+    t.add_argument("--width", type=int, default=None,
+                   help="padded token width W (omit for a W* entry)")
+    t.add_argument("--docs", type=int, default=None,
+                   help="csr doc rows per batch")
+    t.add_argument("--budget", type=int, default=16,
+                   help="random candidates before refinement")
+    t.add_argument("--iters", type=int, default=20,
+                   help="fixed-point sweeps priced by the model")
+    t.add_argument("--seed", type=int, default=0)
+    t.add_argument("--allow-bf16-wire", action="store_true",
+                   help="let the search flip the memo wire to bf16 "
+                        "(tolerance-gated, docs/tuning.md)")
+    t.add_argument("--verbose", action="store_true")
+    t.set_defaults(fn=_cmd_tune)
+
+    s = sub.add_parser("show", help="list tuned entries")
+    s.add_argument("--store", required=True)
+    s.add_argument("--json", action="store_true")
+    s.add_argument("--verbose", action="store_true")
+    s.set_defaults(fn=_cmd_show)
+
+    c = sub.add_parser("clear", help="drop tuned entries")
+    c.add_argument("--store", required=True)
+    c.add_argument("--prefix", default=None,
+                   help="only entries whose key path starts with this")
+    c.set_defaults(fn=_cmd_clear)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,506 @@
+"""Budgeted search over the kernel-policy lattice.
+
+The search is **measurement-first with an honest fallback**:
+
+* on a real accelerator (``jax.default_backend() == "tpu"`` — the only
+  backend the kernels compile natively for) every candidate is timed by
+  running the actual ``pallas_call`` pipeline under a
+  ``repro.obs.SpanRecorder(device_sync=True)`` span, whose ``end(...,
+  sync=out)`` blocks until the device work is done before timestamping;
+* anywhere else the kernels only run in interpret mode, whose wall time
+  says nothing about TPU behaviour — the objective falls back to the
+  structural HBM model (``repro.tune.model``) and every record carries
+  ``proxy_regime: true``. Interpret timings are never used as an
+  objective.
+
+**Eligibility is gated on correctness, not just cost**: before a
+candidate may win, its γ / memo-correction / π outputs are compared
+against the default-config oracle on real probe inputs — bit-equal for
+same-wire candidates, within the documented bf16-wire tolerance when
+the candidate flips ``wire_dtype``. Tile knobs that regroup partial-sum
+accumulation (a non-resident ``block_v``, the scatter token tile, the
+CSR token tile) can legitimately fail this gate; the gate is the filter
+that keeps "faster" from meaning "different".
+
+Probe shapes: verifying at the full target shape can be prohibitively
+slow in interpret mode (the Arxiv vocabulary is 141k rows), so the gate
+runs at a scaled-down probe that PRESERVES the residency regime of the
+target (resident stays resident, streaming stays streaming — the only
+structural branch the kernels take on shape). The probe shape is
+recorded in the result, never hidden.
+
+Search procedure (``tune_shape``): seeded random sampling over the
+VMEM-guard-pruned lattice, then neighborhood refinement (±1 lattice step
+per knob around the incumbent), then the equality gate on the
+best-first-ranked candidates. If nothing both passes the gate and beats
+the default, the default wins — a tuned store never regresses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.types import DEFAULT_KERNEL_POLICY, KernelPolicy
+
+from . import model as tune_model
+from .store import PolicyKey, PolicyStore, current_device_kind
+
+# knob -> ordered lattice values (None entries mean "defer to the
+# kernel's own VMEM policy"); neighborhood refinement moves ±1 step here
+PADDED_LATTICE: Dict[str, Sequence] = {
+    "block_b": (64, 128, 256),
+    "block_v": (256, 512, 1024, 2048, 4096),
+    "delta_block_b": (8, 16, 32, 64),
+    "delta_block_v": (None, 1024, 2048, 4096, 8192),
+    "pi_block_l": (128, 256, 512, 1024),
+    "scatter_block_t": (128, 256),
+}
+CSR_LATTICE: Dict[str, Sequence] = {
+    "block_t": (256, 512, 1024, 2048),
+    "delta_block_v": (None, 1024, 2048, 4096, 8192),
+    "pi_block_l": (256, 512, 1024),
+    "scatter_block_t": (128, 256),
+}
+
+# fused fixed point: C tile + Eφ tile + γ/Eθ/γ0 triple, double-buffered
+_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneShape:
+    """The problem identity one tune run targets (mirrors PolicyKey)."""
+
+    task: str                   # "padded" | "csr"
+    b_or_t: int                 # batch size (padded) / token budget (csr)
+    v: int
+    k: int
+    w: Optional[int] = None     # padded token width; None on csr
+    num_docs: Optional[int] = None   # csr doc rows (defaults to 64)
+    backend: str = "pallas"
+    layout: str = "padded"
+
+    def key(self, device_kind: Optional[str] = None) -> PolicyKey:
+        return PolicyKey(backend=self.backend, layout=self.layout,
+                         b_or_t=self.b_or_t, v=self.v, k=self.k, w=self.w,
+                         device_kind=device_kind or current_device_kind())
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_ok(shape: TuneShape, policy: KernelPolicy,
+            stream_bytes: int = 4) -> bool:
+    """Prune candidates whose tiles blow a kernel's VMEM step budget.
+
+    The π kernel self-guards (``pi_tile_shape`` halves its B tile), but
+    the fused fixed point and an *explicit* scatter V-chunk do not — an
+    oversized tile is an XLA OOM at trace time on real hardware.
+    """
+    from repro.kernels import lda_estep, ops
+
+    kp = _round_up(shape.k, 128)
+    if shape.task == "padded":
+        _, bv, _ = ops.effective_fixed_point_blocks(
+            shape.b_or_t, shape.v, shape.k, block_b=policy.block_b,
+            block_v=policy.block_v, stream_bytes=stream_bytes)
+        bv = min(bv, _round_up(shape.v, 128))
+        fused = (policy.block_b * bv * stream_bytes      # C tile
+                 + bv * kp * stream_bytes                # Eφ tile
+                 + 3 * policy.block_b * kp * 4)          # γ/Eθ/γ0
+        if fused > _FUSED_VMEM_BUDGET:
+            return False
+    else:
+        bt = ops.csr_effective_block_t(shape.b_or_t, shape.k, stream_bytes,
+                                       policy.block_t)
+        if bt * kp * stream_bytes > ops._V_RESIDENT_BYTES:
+            return False
+    if policy.delta_block_v is not None:
+        vc = min(policy.delta_block_v, _round_up(shape.v, 128))
+        nacc = 2
+        step = (vc * policy.scatter_block_t
+                + nacc * (vc * shape.k + policy.scatter_block_t * shape.k)
+                ) * 4
+        if step > lda_estep._SEG_VMEM_BUDGET:
+            return False
+    return True
+
+
+def _lattice(shape: TuneShape) -> Dict[str, Sequence]:
+    return PADDED_LATTICE if shape.task == "padded" else CSR_LATTICE
+
+
+def _sample_candidates(shape: TuneShape, budget: int, seed: int,
+                       allow_wire: bool,
+                       stream_bytes: int) -> List[KernelPolicy]:
+    """Seeded random VMEM-valid candidates (default always included)."""
+    rng = random.Random(seed)
+    lattice = dict(_lattice(shape))
+    if allow_wire:
+        lattice["wire_dtype"] = (None, "bfloat16")
+    out = [DEFAULT_KERNEL_POLICY]
+    seen = {DEFAULT_KERNEL_POLICY}
+    attempts = 0
+    while len(out) < budget + 1 and attempts < budget * 20:
+        attempts += 1
+        fields = {knob: rng.choice(vals) for knob, vals in lattice.items()}
+        cand = dataclasses.replace(DEFAULT_KERNEL_POLICY, **fields)
+        if cand in seen or not vmem_ok(shape, cand, stream_bytes):
+            continue
+        seen.add(cand)
+        out.append(cand)
+    return out
+
+
+def _deviations(policy: KernelPolicy) -> int:
+    """How many knobs differ from the default policy."""
+    return sum(getattr(policy, f.name)
+               != getattr(DEFAULT_KERNEL_POLICY, f.name)
+               for f in dataclasses.fields(KernelPolicy))
+
+
+def _simplify(shape: TuneShape, policy: KernelPolicy, cost_fn, scored,
+              stream_bytes: int) -> KernelPolicy:
+    """Revert every knob whose reversion to the default is free.
+
+    Random sampling draws all knobs at once, so an incumbent usually
+    carries changed knobs that contribute NOTHING to its cost — including
+    accumulation-regrouping ones (non-resident ``block_v``, the scatter
+    token tile) that would fail the bit-equality gate for no win. The
+    minimal-deviation form of the incumbent is both likelier to gate and
+    more legible in the store.
+    """
+    cur = policy
+    for f in dataclasses.fields(KernelPolicy):
+        dv = getattr(DEFAULT_KERNEL_POLICY, f.name)
+        if getattr(cur, f.name) == dv:
+            continue
+        cand = dataclasses.replace(cur, **{f.name: dv})
+        if not vmem_ok(shape, cand, stream_bytes):
+            continue
+        if cand not in scored:
+            scored[cand] = cost_fn(cand)
+        if scored[cand] <= scored[cur]:
+            cur = cand
+    return cur
+
+
+def _neighbors(shape: TuneShape, policy: KernelPolicy,
+               allow_wire: bool) -> List[KernelPolicy]:
+    """±1 lattice step per knob around ``policy``."""
+    lattice = dict(_lattice(shape))
+    if allow_wire:
+        lattice["wire_dtype"] = (None, "bfloat16")
+    out = []
+    for knob, vals in lattice.items():
+        vals = list(vals)
+        cur = getattr(policy, knob)
+        idx = vals.index(cur) if cur in vals else 0
+        for j in (idx - 1, idx + 1):
+            if 0 <= j < len(vals):
+                out.append(dataclasses.replace(policy, **{knob: vals[j]}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# objective
+# ---------------------------------------------------------------------------
+
+def measurement_available() -> bool:
+    """True iff the kernels compile natively (a real TPU): only then do
+    wall timings describe the kernels rather than the interpreter."""
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def _modeled_cost(shape: TuneShape, policy: KernelPolicy, iters: int,
+                  stream_bytes: int) -> float:
+    return tune_model.modeled_cost_seconds(
+        shape.task if shape.task in ("padded", "csr") else "padded",
+        policy=policy, b_or_t=shape.b_or_t, v=shape.v, k=shape.k,
+        w=shape.w, iters=iters, stream_bytes=stream_bytes,
+        num_docs=shape.num_docs)
+
+
+def _measured_cost(run, policy: KernelPolicy, *, reps: int = 5) -> float:
+    """Min-of-reps wall seconds of the real kernel pipeline, timed under
+    device-synced ``repro.obs`` spans."""
+    from repro.obs import SpanRecorder
+
+    rec = SpanRecorder(device_sync=True)
+    run(policy)                                     # compile + warm
+    for _ in range(reps):
+        tok = rec.begin("tune/measure")
+        out = run(policy)
+        rec.end(tok, sync=out)
+    return min(r["dur_us"] for r in rec.records
+               if r.get("name") == "tune/measure") / 1e6
+
+
+# ---------------------------------------------------------------------------
+# probe inputs + the bit-equality gate
+# ---------------------------------------------------------------------------
+
+def probe_shape(shape: TuneShape, stream_bytes: int = 4) -> dict:
+    """A scaled-down shape preserving the target's residency regime."""
+    from repro.kernels import ops
+
+    kp = _round_up(shape.k, 128)
+    if shape.task == "padded":
+        _, _, resident = ops.effective_fixed_point_blocks(
+            shape.b_or_t, shape.v, shape.k, stream_bytes=stream_bytes)
+        if resident:
+            v = min(shape.v, 2048)
+        else:
+            # smallest lane-aligned V still over the residency budget
+            v = _round_up(ops._V_RESIDENT_BYTES // (kp * stream_bytes), 128)
+            v += 128
+        return {"b": min(shape.b_or_t, 32), "v": v, "k": shape.k,
+                "l": min(shape.w or 32, 32)}
+    t_res = ops.csr_effective_block_t(shape.b_or_t, shape.k, stream_bytes)
+    if t_res >= shape.b_or_t:                        # T-resident target
+        t = min(shape.b_or_t, 1024)
+    else:
+        t = _round_up(ops._V_RESIDENT_BYTES // (kp * stream_bytes), 128)
+        t += 128
+    return {"t": t, "b": min(shape.num_docs or 64, 32),
+            "v": min(shape.v, 2048), "k": shape.k}
+
+
+def _probe_inputs(shape: TuneShape, probe: dict, seed: int = 0):
+    """Real-statistics inputs + a small-iteration cfg for the gate."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.math import exp_dirichlet_expectation
+    from repro.core.types import LDAConfig
+
+    rng = np.random.default_rng(seed)
+    k, v = probe["k"], probe["v"]
+    lam = jax.random.gamma(jax.random.key(seed), 100.0, (v, k)) * 0.01
+    eb = exp_dirichlet_expectation(lam, axis=0)
+    cfg = LDAConfig(num_topics=k, vocab_size=v, estep_max_iters=6,
+                    estep_backend=shape.backend)
+    if shape.task == "padded":
+        b, l = probe["b"], probe["l"]
+        ids = jnp.asarray(rng.integers(0, v, (b, l)).astype(np.int32))
+        cnts = jnp.asarray((rng.poisson(1.5, (b, l)) + 1).astype(np.float32))
+        old_pi = jnp.asarray(rng.dirichlet(np.ones(k), (b, l))
+                             .astype(np.float32))
+        visited = jnp.asarray((np.arange(b) % 2).astype(bool))
+        return cfg, (eb, ids, cnts, old_pi, visited)
+    t, b = probe["t"], probe["b"]
+    lens = np.minimum(rng.zipf(1.5, b), max(1, t // b)).astype(int)
+    segs_l, ids_l, cnts_l = [], [], []
+    for d, n in enumerate(lens):
+        n = int(min(n, v))
+        segs_l += [d] * n
+        ids_l += list(rng.choice(v, size=n, replace=False))
+        cnts_l += list(1.0 + rng.poisson(1.0, n))
+    pad = t - len(ids_l)
+    ids = jnp.asarray(np.asarray(ids_l + [0] * pad, np.int32))
+    cnts = jnp.asarray(np.asarray(cnts_l + [0.0] * pad, np.float32))
+    segs = jnp.asarray(np.asarray(segs_l + [0] * pad, np.int32))
+    old_pi = jnp.asarray(rng.dirichlet(np.ones(k), t).astype(np.float32))
+    visited = jnp.asarray((np.arange(b) % 2).astype(bool))
+    return cfg, (eb, ids, cnts, segs, old_pi, visited)
+
+
+def _gate_runner(shape: TuneShape, cfg, inputs):
+    """A ``run(policy) -> (corr, gamma, pi)`` closure over probe inputs."""
+    from repro.kernels import ops
+
+    if shape.task == "padded":
+        eb, ids, cnts, old_pi, visited = inputs
+
+        def run(policy: KernelPolicy):
+            corr, _, res = ops.memo_correction_pallas(
+                cfg, eb, ids, cnts, old_pi, visited,
+                pi_dtype=policy.wire_dtype or "float32", policy=policy)
+            return corr, res.gamma, res.pi
+    else:
+        eb, ids, cnts, segs, old_pi, visited = inputs
+
+        def run(policy: KernelPolicy):
+            corr, _, res = ops.memo_correction_pallas_csr(
+                cfg, eb, ids, cnts, segs, old_pi, visited,
+                pi_dtype=policy.wire_dtype or "float32", policy=policy)
+            return corr, res.gamma, res.pi
+    return run
+
+
+# documented bf16-wire tolerance (docs/tuning.md): flipping the memo wire
+# re-rounds π through bfloat16, a ~2^-8 relative step on each element
+BF16_WIRE_ATOL = 2e-2
+
+
+def equality_check(run, default_out, policy: KernelPolicy
+                   ) -> Tuple[bool, str, float]:
+    """Gate one candidate against the default-config oracle outputs.
+
+    Returns ``(ok, mode, max_abs_err)`` with mode ``"bitwise"`` for
+    same-wire candidates and ``"bf16-wire"`` (tolerance compare) when
+    the candidate changes ``wire_dtype``.
+    """
+    import jax.numpy as jnp
+
+    got = run(policy)
+    bitwise = policy.wire_dtype in (None, "float32")
+    max_err = max(float(jnp.abs(jnp.asarray(g, jnp.float32)
+                                - jnp.asarray(d, jnp.float32)).max())
+                  for g, d in zip(got, default_out))
+    if bitwise:
+        ok = all(bool(jnp.array_equal(g, d))
+                 for g, d in zip(got, default_out))
+        return ok, "bitwise", max_err
+    scale = max(float(jnp.abs(d).max()) for d in default_out) or 1.0
+    return max_err <= BF16_WIRE_ATOL * scale, "bf16-wire", max_err
+
+
+# ---------------------------------------------------------------------------
+# the search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneResult:
+    shape: TuneShape
+    policy: KernelPolicy              # the winner (default if nothing won)
+    default_cost: float
+    tuned_cost: float
+    objective: str                    # "measured_seconds"|"modeled_seconds"
+    proxy_regime: bool
+    equality: dict
+    effective: dict
+    trials: int
+    improvement: float                # default_cost / tuned_cost
+
+
+def effective_record(shape: TuneShape, policy: KernelPolicy,
+                     stream_bytes: int = 4) -> dict:
+    """The tiles that actually run under ``policy`` (promotions applied)."""
+    from repro.kernels import lda_estep, ops
+
+    vc, tb = lda_estep.segment_scatter_blocks(
+        shape.k, shape.v, True, block_v=policy.delta_block_v,
+        block_t=policy.scatter_block_t)
+    rec = {"delta_block_v": vc, "scatter_block_t": tb}
+    if shape.task == "padded":
+        bb, bv, resident = ops.effective_fixed_point_blocks(
+            shape.b_or_t, shape.v, shape.k, block_b=policy.block_b,
+            block_v=policy.block_v, stream_bytes=stream_bytes)
+        rec.update(block_b=bb, block_v=bv, v_resident=resident)
+    else:
+        bt = ops.csr_effective_block_t(shape.b_or_t, shape.k, stream_bytes,
+                                       policy.block_t)
+        rec.update(block_t=bt, t_resident=bt >= shape.b_or_t)
+    return rec
+
+
+def tune_shape(shape: TuneShape, *, budget: int = 16, seed: int = 0,
+               refine_rounds: int = 2, gate_candidates: int = 4,
+               iters: int = 20, allow_bf16_wire: bool = False,
+               stream_bytes: int = 4, verbose: bool = False) -> TuneResult:
+    """Search the policy lattice for one problem shape.
+
+    ``budget`` random VMEM-valid candidates + ``refine_rounds`` of ±1
+    neighborhood refinement are ranked by the objective; the best
+    ``gate_candidates`` are then bit-equality-gated (cheapest-first)
+    and the first passer that beats the default wins.
+    """
+    measured = measurement_available()
+    cands = _sample_candidates(shape, budget, seed, allow_bf16_wire,
+                               stream_bytes)
+
+    probe = probe_shape(shape, stream_bytes)
+    cfg, inputs = _probe_inputs(shape, probe, seed)
+    run = _gate_runner(shape, cfg, inputs)
+
+    if measured:
+        # time the real kernels at the TARGET shape (the gate still runs
+        # at the probe shape — correctness transfers, wall time doesn't)
+        if shape.task == "padded":
+            target = {"b": shape.b_or_t, "v": shape.v, "k": shape.k,
+                      "l": shape.w or 32}
+        else:
+            target = {"t": shape.b_or_t, "b": shape.num_docs or 64,
+                      "v": shape.v, "k": shape.k}
+        cfg_t, inputs_t = _probe_inputs(shape, target, seed)
+        meas_run = _gate_runner(shape, cfg_t, inputs_t)
+
+        def cost(p):
+            return _measured_cost(meas_run, p)
+        objective = "measured_seconds"
+    else:
+        def cost(p):
+            return _modeled_cost(shape, p, iters, stream_bytes)
+        objective = "modeled_seconds"
+
+    scored = {p: cost(p) for p in cands}
+    for _ in range(refine_rounds):
+        best = min(scored, key=scored.get)
+        fresh = [n for n in _neighbors(shape, best, allow_bf16_wire)
+                 if n not in scored and vmem_ok(shape, n, stream_bytes)]
+        for n in fresh:
+            scored[n] = cost(n)
+        if verbose and fresh:
+            print(f"  refine: +{len(fresh)} neighbors around "
+                  f"cost={scored[best]:.3e}")
+
+    # canonicalize the incumbent before gating, then rank equal costs
+    # toward fewest knob deviations — a cost tier is usually full of
+    # candidates dragging gate-hostile knobs along for free
+    _simplify(shape, min(scored, key=scored.get), cost, scored,
+              stream_bytes)
+    default_cost = scored[DEFAULT_KERNEL_POLICY]
+    default_out = run(DEFAULT_KERNEL_POLICY)
+    ranked = sorted(scored, key=lambda p: (scored[p], _deviations(p)))
+    winner, eq_rec = DEFAULT_KERNEL_POLICY, {
+        "checked": True, "mode": "bitwise", "max_abs_err": 0.0,
+        "probe_shape": probe}
+    gated = 0
+    for cand in ranked:
+        if cand == DEFAULT_KERNEL_POLICY or scored[cand] >= default_cost:
+            break                       # nothing cheaper left to gate
+        if gated >= gate_candidates:
+            break
+        gated += 1
+        ok, mode, err = equality_check(run, default_out, cand)
+        if verbose:
+            print(f"  gate[{gated}] cost={scored[cand]:.3e} {mode} "
+                  f"err={err:.2e} -> {'PASS' if ok else 'reject'}")
+        if ok:
+            winner = cand
+            eq_rec = {"checked": True, "mode": mode, "max_abs_err": err,
+                      "probe_shape": probe}
+            break
+
+    tuned_cost = scored[winner]
+    return TuneResult(
+        shape=shape, policy=winner, default_cost=default_cost,
+        tuned_cost=tuned_cost, objective=objective,
+        proxy_regime=not measured, equality=eq_rec,
+        effective=effective_record(shape, winner, stream_bytes),
+        trials=len(scored),
+        improvement=default_cost / tuned_cost if tuned_cost else 1.0)
+
+
+def tune_and_store(store: PolicyStore, shape: TuneShape,
+                   **kwargs) -> TuneResult:
+    """``tune_shape`` + persist the winner under the shape's key."""
+    res = tune_shape(shape, **kwargs)
+    store.put(
+        shape.key(), res.policy,
+        objective={"kind": res.objective,
+                   "default_cost": res.default_cost,
+                   "tuned_cost": res.tuned_cost,
+                   "improvement": res.improvement,
+                   "proxy_regime": res.proxy_regime,
+                   "trials": res.trials},
+        effective=res.effective,
+        equality=res.equality)
+    return res

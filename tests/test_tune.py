@@ -1,0 +1,441 @@
+"""`repro.tune`: store robustness, resolver telemetry, the equality gate,
+and the facade/engine/serving threading of tuned kernel policies.
+
+The acceptance bars of ISSUE 10:
+
+* a store problem is NEVER a training problem — corrupted, stale-version
+  or foreign-format store files are ignored with a ``TuneStoreWarning``
+  and the run falls back to the built-in defaults;
+* concurrent writers can race entry-wise but never torn-write the file
+  (atomic same-directory tmp+rename);
+* an entry tuned on one ``device_kind`` is never served on another, even
+  if the file is renamed/tampered to claim otherwise;
+* every policy the search can return is bit-equal to the default-config
+  oracle on fresh inputs (or within the documented bf16-wire tolerance
+  when it flips ``wire_dtype``);
+* no store ⇒ bit-identical trajectories to the pre-autotune stack;
+* a store hit rides ``cfg.kernel_policy`` through engine, checkpoint and
+  serving (per-width) resolution.
+"""
+import dataclasses
+import json
+import threading
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import DEFAULT_KERNEL_POLICY, KernelPolicy, LDAConfig
+from repro.kernels import ops
+from repro.tune import search as tsearch
+from repro.tune.resolve import PolicyResolver
+from repro.tune.store import (STORE_FORMAT, STORE_VERSION, PolicyKey,
+                              PolicyStore, TuneStoreWarning,
+                              current_device_kind, policy_from_dict,
+                              policy_to_dict)
+
+
+def _key(**kw) -> PolicyKey:
+    base = dict(backend="pallas", layout="padded", b_or_t=8, v=256, k=8,
+                w=8, device_kind=current_device_kind())
+    base.update(kw)
+    return PolicyKey(**base)
+
+
+_POL = KernelPolicy(block_b=64, delta_block_b=8)
+_META = dict(objective={"kind": "modeled_seconds", "proxy_regime": True,
+                        "default_cost": 1.0, "tuned_cost": 0.5,
+                        "improvement": 2.0},
+             effective={}, equality={"mode": "bitwise", "max_abs_err": 0.0,
+                                     "probe_shape": {}})
+
+
+# ---------------------------------------------------------------------------
+# store robustness
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    key = _key()
+    store.put(key, _POL, **_META)
+    assert store.get_policy(key) == _POL
+    rec = store.get(key)
+    assert rec["objective"]["proxy_regime"] is True
+    assert rec["equality"]["mode"] == "bitwise"
+    # the on-disk document is schema-complete
+    doc = json.loads((tmp_path / "t.json").read_text())
+    assert doc["format"] == STORE_FORMAT
+    assert doc["version"] == STORE_VERSION
+    assert key.path() in doc["entries"]
+
+
+def test_missing_store_is_a_silent_miss(tmp_path):
+    store = PolicyStore(tmp_path / "absent.json")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # a missing file is NOT junk
+        assert store.get_policy(_key()) is None
+        assert store.entries() == {}
+
+
+@pytest.mark.parametrize("content", [
+    "{not json",                                        # corrupted
+    json.dumps({"format": "something.else", "version": 1, "entries": {}}),
+    json.dumps({"format": STORE_FORMAT, "version": 999, "entries": {}}),
+    json.dumps({"format": STORE_FORMAT, "version": STORE_VERSION,
+                "entries": "not-a-table"}),
+])
+def test_bad_store_warns_and_is_empty(tmp_path, content):
+    p = tmp_path / "bad.json"
+    p.write_text(content)
+    store = PolicyStore(p)
+    with pytest.warns(TuneStoreWarning):
+        assert store.entries() == {}
+    with pytest.warns(TuneStoreWarning):
+        assert store.get_policy(_key()) is None
+
+
+def test_bad_policy_entry_is_ignored(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    key = _key()
+    store.put(key, _POL, **_META)
+    doc = json.loads(store.path and open(store.path).read())
+    doc["entries"][key.path()]["policy"]["block_b"] = -4
+    with open(store.path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(TuneStoreWarning, match="bad policy"):
+        assert store.get_policy(key) is None
+
+
+def test_device_kind_mismatch_never_served(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    here, foreign = _key(), _key(device_kind="tpu:tpu-v4")
+    store.put(foreign, _POL, **_META)
+    # honest path: different device_kind → different key path → plain miss
+    assert store.get_policy(here) is None
+    # tampered path: rename the foreign entry onto this device's key path
+    # — the record-body revalidation must still refuse it
+    doc = json.loads(open(store.path).read())
+    doc["entries"][here.path()] = doc["entries"].pop(foreign.path())
+    with open(store.path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(TuneStoreWarning, match="device_kind"):
+        assert store.get_policy(here) is None
+
+
+def test_concurrent_writers_never_tear_the_file(tmp_path):
+    p = tmp_path / "t.json"
+    errs = []
+
+    def writer(i):
+        try:
+            store = PolicyStore(p)
+            for j in range(5):
+                store.put(_key(b_or_t=8 * (i + 1), v=128 * (j + 1)),
+                          _POL, **_META)
+        except BaseException as e:          # noqa: BLE001 — reported below
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    # racing writers may lose entries (last-writer-wins read-modify-write)
+    # but the FILE must always be a valid, schema-complete document whose
+    # every surviving policy decodes
+    doc = json.loads(p.read_text())
+    assert doc["format"] == STORE_FORMAT
+    assert doc["entries"]
+    for rec in doc["entries"].values():
+        policy_from_dict(rec["policy"])
+
+
+def test_clear_prefix(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    store.put(_key(), _POL, **_META)
+    store.put(_key(backend="csr", layout="csr", w=None), _POL, **_META)
+    assert store.clear("pallas/") == 1
+    assert len(store.entries()) == 1
+    assert store.clear() == 1
+    assert store.entries() == {}
+
+
+def test_policy_dict_round_trip_is_strict():
+    assert policy_from_dict(policy_to_dict(_POL)) == _POL
+    with pytest.raises(ValueError, match="unknown policy fields"):
+        policy_from_dict({"block_b": 64, "warp_speed": 9})
+    with pytest.raises(ValueError, match="positive int"):
+        policy_from_dict({"block_b": 0})
+    with pytest.raises(ValueError, match="wire_dtype"):
+        policy_from_dict({"wire_dtype": "float16"})
+
+
+# ---------------------------------------------------------------------------
+# resolver: telemetry + wildcard + memo
+# ---------------------------------------------------------------------------
+
+def _tel():
+    from repro.obs import as_telemetry
+    return as_telemetry(True)
+
+
+def test_resolver_counters_and_span(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    store.put(_key(), _POL, **_META)
+    tel = _tel()
+    r = PolicyResolver(store, telemetry=tel)
+    hit = r.resolve(backend="pallas", layout="padded", b_or_t=8, v=256,
+                    k=8, w=8)
+    miss = r.resolve(backend="pallas", layout="padded", b_or_t=9999, v=256,
+                     k=8, w=8)
+    assert hit == _POL and miss is None
+    snap = tel.metrics.snapshot()
+    counts = {tuple(sorted(c["labels"].items())): c["value"]
+              for c in snap["counters"] if c["name"] == "tune.cache"}
+    assert counts[(("result", "hit"),)] == 1
+    assert counts[(("result", "miss"),)] == 1
+    lookups = [s for s in tel.trace.records if s["name"] == "tune/lookup"]
+    assert len(lookups) == 2
+    assert all("dur_us" in s for s in lookups)
+
+
+def test_resolver_width_wildcard_fallback(tmp_path):
+    store = PolicyStore(tmp_path / "t.json")
+    store.put(_key(w=None), _POL, **_META)
+    r = PolicyResolver(store)
+    assert r.resolve(backend="pallas", layout="padded", b_or_t=8, v=256,
+                     k=8, w=64) == _POL
+
+
+def test_resolver_memoizes_disk_reads(tmp_path):
+    p = tmp_path / "t.json"
+    store = PolicyStore(p)
+    store.put(_key(), _POL, **_META)
+    r = PolicyResolver(store)
+    kw = dict(backend="pallas", layout="padded", b_or_t=8, v=256, k=8, w=8)
+    assert r.resolve(**kw) == _POL
+    p.unlink()                      # a second resolve must not re-read
+    assert r.resolve(**kw) == _POL
+
+
+def test_resolver_without_store_resolves_none():
+    assert PolicyResolver(None).resolve(backend="pallas", layout="padded",
+                                        b_or_t=8, v=256, k=8, w=8) is None
+
+
+# ---------------------------------------------------------------------------
+# effective tiles (the no-longer-silent V-residency promotion) + VMEM guard
+# ---------------------------------------------------------------------------
+
+def test_effective_fixed_point_blocks_resident_promotion():
+    # (V, K) under the residency budget: ONE V tile, flag raised
+    bb, bv, resident = ops.effective_fixed_point_blocks(32, 1024, 8)
+    assert resident and bb == 128
+    assert bv == 1024              # promoted to the lane-aligned vocab
+
+
+def test_effective_fixed_point_blocks_streaming_passthrough():
+    bb, bv, resident = ops.effective_fixed_point_blocks(256, 141_952, 128)
+    assert not resident and (bb, bv) == (128, 512)   # defaults untouched
+
+
+def test_vmem_ok_prunes_oversized_tiles():
+    arxiv = tsearch.TuneShape(task="padded", b_or_t=256, v=141_952, k=128,
+                              w=128)
+    assert tsearch.vmem_ok(arxiv, DEFAULT_KERNEL_POLICY)
+    assert tsearch.vmem_ok(arxiv, KernelPolicy(block_b=256, block_v=4096))
+    # C tile + Eφ tile alone exceed the fused 12 MB step budget
+    assert not tsearch.vmem_ok(arxiv,
+                               KernelPolicy(block_b=256, block_v=8192))
+    # explicit scatter V-chunk whose step blows the segment budget
+    assert not tsearch.vmem_ok(
+        arxiv, KernelPolicy(delta_block_v=8192, scatter_block_t=256))
+
+
+def test_sampled_candidates_are_vmem_valid_and_include_default():
+    shape = tsearch.TuneShape(task="padded", b_or_t=256, v=141_952, k=128,
+                              w=128)
+    cands = tsearch._sample_candidates(shape, budget=12, seed=3,
+                                       allow_wire=True, stream_bytes=4)
+    assert cands[0] == DEFAULT_KERNEL_POLICY
+    assert len(set(cands)) == len(cands)
+    assert all(tsearch.vmem_ok(shape, c) for c in cands)
+
+
+# ---------------------------------------------------------------------------
+# the equality gate (one compiled probe, shared across tests)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gate_probe():
+    """One small V-resident probe: (shape, run, default outputs)."""
+    shape = tsearch.TuneShape(task="padded", b_or_t=16, v=512, k=8, w=16)
+    probe = tsearch.probe_shape(shape)
+    cfg, inputs = tsearch._probe_inputs(shape, probe, seed=0)
+    run = tsearch._gate_runner(shape, cfg, inputs)
+    return shape, run, run(DEFAULT_KERNEL_POLICY)
+
+
+def test_policy_none_is_bit_identical_to_default_policy(gate_probe):
+    # the no-store regression at the kernel layer: policy=None and the
+    # explicit default policy take the exact same tile path
+    _, run, default_out = gate_probe
+    ok, mode, err = tsearch.equality_check(run, default_out,
+                                           DEFAULT_KERNEL_POLICY)
+    assert ok and mode == "bitwise" and err == 0.0
+
+
+def test_block_b_variant_is_bit_equal(gate_probe):
+    _, run, default_out = gate_probe
+    ok, mode, _ = tsearch.equality_check(run, default_out,
+                                         KernelPolicy(block_b=64))
+    assert ok and mode == "bitwise"
+
+
+def test_bf16_wire_within_documented_tolerance(gate_probe):
+    _, run, default_out = gate_probe
+    ok, mode, err = tsearch.equality_check(
+        run, default_out, KernelPolicy(wire_dtype="bfloat16"))
+    assert mode == "bf16-wire" and ok
+    assert 0.0 < err                      # it IS a different wire...
+    scale = max(float(jnp.abs(d).max()) for d in default_out)
+    assert err <= tsearch.BF16_WIRE_ATOL * scale
+
+
+def test_search_winner_bit_equal_on_fresh_inputs(gate_probe):
+    """Property: whatever tune_shape returns must reproduce the default
+    trajectory on inputs the gate never saw."""
+    shape, _, _ = gate_probe
+    res = tsearch.tune_shape(shape, budget=4, seed=1, gate_candidates=2,
+                             refine_rounds=1)
+    assert res.tuned_cost <= res.default_cost
+    assert res.equality["checked"]
+    probe = tsearch.probe_shape(shape)
+    cfg, inputs = tsearch._probe_inputs(shape, probe, seed=12345)
+    fresh = tsearch._gate_runner(shape, cfg, inputs)
+    ok, mode, _ = tsearch.equality_check(fresh, fresh(DEFAULT_KERNEL_POLICY),
+                                         res.policy)
+    assert ok, f"search winner {res.policy} diverged on fresh inputs ({mode})"
+
+
+def test_probe_preserves_residency_regime():
+    res_shape = tsearch.TuneShape(task="padded", b_or_t=64, v=2048, k=8,
+                                  w=32)
+    stream_shape = tsearch.TuneShape(task="padded", b_or_t=256, v=141_952,
+                                     k=128, w=128)
+    p_res = tsearch.probe_shape(res_shape)
+    p_str = tsearch.probe_shape(stream_shape)
+    assert ops.effective_fixed_point_blocks(
+        p_res["b"], p_res["v"], p_res["k"])[2]
+    assert not ops.effective_fixed_point_blocks(
+        p_str["b"], p_str["v"], p_str["k"])[2]
+
+
+# ---------------------------------------------------------------------------
+# facade / engine / checkpoint / serving threading
+# ---------------------------------------------------------------------------
+
+def _facade(spec, tmp_path=None, *, store=None, **kw):
+    from repro.lda import LDA
+    cfg = LDAConfig(num_topics=4, vocab_size=spec.vocab_size,
+                    estep_max_iters=8, estep_backend="pallas")
+    return LDA(cfg, algo="ivi", batch_size=16, seed=3, tune_store=store,
+               **kw)
+
+
+def test_facade_no_store_is_bit_identical(tiny_corpus, tmp_path):
+    train, _, spec = tiny_corpus
+    a = _facade(spec).fit(train, epochs=1)
+    # a configured-but-empty store resolves to a miss — same trajectory
+    b = _facade(spec, store=str(tmp_path / "empty.json")).fit(train,
+                                                              epochs=1)
+    assert a.cfg.kernel_policy is None and b.cfg.kernel_policy is None
+    np.testing.assert_array_equal(np.asarray(a.lam), np.asarray(b.lam))
+
+
+def test_facade_store_hit_rides_cfg_and_checkpoint(tiny_corpus, tmp_path):
+    train, _, spec = tiny_corpus
+    store = PolicyStore(tmp_path / "t.json")
+    pol = KernelPolicy(block_b=64, delta_block_b=8)
+    store.put(PolicyKey(backend="pallas", layout="padded", b_or_t=16,
+                        v=spec.vocab_size, k=4, w=train.max_unique,
+                        device_kind=current_device_kind()), pol, **_META)
+    from repro.lda import LDA
+    lda = _facade(spec, store=store).partial_fit(train, steps=2)
+    assert lda.cfg.kernel_policy == pol
+    assert lda.trainer.eng.cfg.kernel_policy == pol
+    ck = str(tmp_path / "ck")
+    lda.save(ck)
+    loaded = LDA.load(ck)
+    # the checkpoint carries the ACTIVE policy as a real KernelPolicy
+    # (hashable: cfg is a jit static arg) — resumed runs replay the tuned
+    # trajectory without needing the store
+    assert loaded.cfg.kernel_policy == pol
+    assert isinstance(loaded.cfg.kernel_policy, KernelPolicy)
+    hash(loaded.cfg)
+    loaded.resume(train)
+    loaded.partial_fit(steps=1)
+    lda.partial_fit(steps=1)
+    np.testing.assert_array_equal(np.asarray(lda.lam),
+                                  np.asarray(loaded.lam))
+
+
+def test_inferencer_resolves_per_width(tiny_corpus, tmp_path):
+    from repro.lda.infer import TopicInferencer
+    _, _, spec = tiny_corpus
+    cfg = LDAConfig(num_topics=4, vocab_size=spec.vocab_size,
+                    estep_max_iters=8, estep_backend="pallas")
+    pol = KernelPolicy(block_b=64)
+    store = PolicyStore(tmp_path / "t.json")
+    store.put(PolicyKey(backend="pallas", layout="padded", b_or_t=8,
+                        v=spec.vocab_size, k=4, w=16,
+                        device_kind=current_device_kind()), pol, **_META)
+    lam = jnp.ones((spec.vocab_size, 4), jnp.float32)
+    tel = _tel()
+    inf = TopicInferencer(cfg, lam, batch_size=8, tune_store=store,
+                          telemetry=tel)
+    assert inf._cfg_for_width(16).kernel_policy == pol      # tuned width
+    assert inf._cfg_for_width(32).kernel_policy is None     # miss → default
+    assert inf._cfg_for_width(16).kernel_policy == pol      # memoized
+    counts = {tuple(sorted(c["labels"].items())): c["value"]
+              for c in tel.metrics.snapshot()["counters"]
+              if c["name"] == "tune.cache"}
+    assert counts[(("result", "hit"),)] == 1
+    assert counts[(("result", "miss"),)] == 1
+
+
+def test_inferencer_buffer_depth_from_policy(tiny_corpus):
+    from repro.lda.infer import TopicInferencer
+    _, _, spec = tiny_corpus
+    lam = jnp.ones((spec.vocab_size, 4), jnp.float32)
+    base = LDAConfig(num_topics=4, vocab_size=spec.vocab_size)
+    assert TopicInferencer(base, lam)._buffer_depth() == 2
+    deep = dataclasses.replace(
+        base, kernel_policy=KernelPolicy(double_buffer_depth=4))
+    assert TopicInferencer(deep, lam)._buffer_depth() == 4
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_tune_show_clear(tmp_path, capsys):
+    from repro.tune.__main__ import main
+    p = str(tmp_path / "t.json")
+    rc = main(["tune", "--store", p, "--task", "padded", "--batch", "8",
+               "--vocab", "256", "--topics", "8", "--width", "8",
+               "--budget", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "objective" in out and "equality" in out
+    store = PolicyStore(p)
+    assert len(store.entries()) == 1
+    rec = next(iter(store.entries().values()))
+    assert rec["objective"]["proxy_regime"] is \
+        (not tsearch.measurement_available())
+    assert main(["show", "--store", p]) == 0
+    assert "tuned entr" in capsys.readouterr().out
+    assert main(["clear", "--store", p]) == 0
+    assert store.entries() == {}
